@@ -1,0 +1,197 @@
+"""Scheduler benchmarks reproducing the paper's tables/figures.
+
+  jct           — Fig. 10: JCT improvement vs Tez across benchmarks
+  makespan      — Table 3: makespan gap vs Tez
+  fairness      — Table 4: 2-queue perf gap + Jain index over windows
+  alternatives  — Fig. 12 / Table 5: constructed-schedule quality vs
+                  BFS/CP/Tetris/Random/CG/StripPart
+  lowerbound    — Fig. 13: DAGPS vs NewLB vs old max(CPLen, TWork)
+  sensitivity   — Fig. 14/15: eta-m sweep, remote-penalty sweep, load sweep
+  domains       — Fig. 16: build-system + request-response workflow DAGs
+  construction  — §7: schedule-construction wall time
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import all_bounds, build_schedule, new_lb
+from repro.core.baselines import (bfs_order, cg_order, cp_order, random_order,
+                                  simulate_execution, strip_levels)
+from repro.sim import make_workload, run_workload
+from repro.sim.workload import build_system_dag, production_dag, workflow_dag
+
+from .common import emit, n_jobs
+
+
+def _imp(base: np.ndarray, new: np.ndarray, q: float) -> float:
+    """Paper's normalized gap at percentile q: 1 - new/base per job."""
+    gaps = 1.0 - new / np.maximum(base, 1e-9)
+    return float(np.percentile(gaps, q) * 100)
+
+
+def bench_jct() -> None:
+    """Fig. 10: per-benchmark JCT improvement of DAGPS over Tez."""
+    for bench in ("tpch", "tpcds", "bigbench", "ehive", "production"):
+        dags = make_workload(bench, n_jobs(12), seed=42)
+        t0 = time.perf_counter()
+        rs = {s: run_workload(dags, s, n_machines=16, interarrival=12.0, seed=42)
+              for s in ("tez", "tez+cp", "tez+tetris", "dagps")}
+        dt = (time.perf_counter() - t0) * 1e6 / (4 * len(dags))
+        tez = np.array([j.jct for j in sorted(rs["tez"].jobs, key=lambda j: j.job_id)])
+        for s in ("tez+cp", "tez+tetris", "dagps"):
+            new = np.array([j.jct for j in sorted(rs[s].jobs, key=lambda j: j.job_id)])
+            emit(f"fig10_jct_{bench}_{s}_p50", dt, round(_imp(tez, new, 50), 1))
+            if s == "dagps":
+                emit(f"fig10_jct_{bench}_{s}_p75", dt, round(_imp(tez, new, 75), 1))
+
+
+def bench_makespan() -> None:
+    """Table 3: makespan; all jobs arrive at t~0."""
+    for bench in ("tpcds", "tpch"):
+        dags = make_workload(bench, n_jobs(16), seed=7)
+        t0 = time.perf_counter()
+        out = {}
+        for s in ("tez", "tez+cp", "tez+tetris", "dagps"):
+            out[s] = run_workload(dags, s, n_machines=12, interarrival=0.5,
+                                  seed=7).makespan
+        dt = (time.perf_counter() - t0) * 1e6 / (4 * len(dags))
+        for s in ("tez+cp", "tez+tetris", "dagps"):
+            gain = 100 * (1 - out[s] / out["tez"])
+            emit(f"table3_makespan_{bench}_{s}", dt, round(gain, 1))
+
+
+def bench_fairness() -> None:
+    """Table 4: two even queues vs one; perf gap and Jain's index."""
+    dags = make_workload("tpcds", n_jobs(14), seed=11)
+    shares = {0: 1.0, 1: 1.0}
+    for s in ("tez", "tez+drf", "tez+tetris", "dagps"):
+        t0 = time.perf_counter()
+        one = run_workload(dags, s, n_machines=12, interarrival=10.0,
+                           n_groups=1, seed=11)
+        two = run_workload(dags, s, n_machines=12, interarrival=10.0,
+                           n_groups=2, seed=11)
+        dt = (time.perf_counter() - t0) * 1e6 / (2 * len(dags))
+        gap = 100 * (np.median(two.jcts()) / np.median(one.jcts()) - 1.0)
+        emit(f"table4_2q_perf_gap_{s}", dt, round(-gap, 1))
+        for w in (10.0, 60.0, 240.0):
+            emit(f"table4_jain_{s}_{int(w)}s", dt,
+                 round(two.jain_index(w, shares), 3))
+
+
+def bench_alternatives() -> None:
+    """Fig. 12 / Table 5: constructed schedules vs best-of-breed baselines."""
+    m = 4
+    per: dict[str, list] = {k: [] for k in
+                            ("dagps", "cp", "tetris", "random", "cg", "strippart")}
+    base = []
+    t_build = []
+    N = n_jobs(24)
+    for i in range(N):
+        dag = production_dag(np.random.default_rng(1000 + i), share=m)
+        bfs = simulate_execution(dag, m, order=bfs_order(dag))
+        base.append(bfs)
+        t0 = time.perf_counter()
+        sched = build_schedule(dag, m)
+        t_build.append(time.perf_counter() - t0)
+        per["dagps"].append(min(
+            simulate_execution(dag, m, policy="dagps", pri_score=sched.pri_score),
+            sched.makespan))
+        per["cp"].append(simulate_execution(dag, m, order=cp_order(dag)))
+        per["tetris"].append(simulate_execution(dag, m, policy="tetris"))
+        per["random"].append(simulate_execution(dag, m, order=random_order(dag, i)))
+        per["cg"].append(simulate_execution(dag, m, order=cg_order(dag)))
+        per["strippart"].append(simulate_execution(
+            dag, m, policy="tetris", barrier_levels=strip_levels(dag)))
+    base_a = np.array(base)
+    dt = float(np.mean(t_build)) * 1e6
+    for k, v in per.items():
+        for q in (25, 50, 75, 90):
+            emit(f"table5_vs_bfs_{k}_p{q}", dt, round(_imp(base_a, np.array(v), q), 1))
+
+
+def bench_lowerbound() -> None:
+    """Fig. 13: closeness to NewLB; NewLB vs the old max(CPLen, TWork)."""
+    m = 4
+    ratios, tighten = [], []
+    N = n_jobs(24)
+    t0 = time.perf_counter()
+    for i in range(N):
+        dag = production_dag(np.random.default_rng(2000 + i), share=m)
+        b = all_bounds(dag, m)
+        sched = build_schedule(dag, m)
+        ms = min(simulate_execution(dag, m, policy="dagps",
+                                    pri_score=sched.pri_score), sched.makespan)
+        ratios.append(ms / b["newlb"])
+        tighten.append(b["newlb"] / max(b["cplen"], b["twork"]))
+    dt = (time.perf_counter() - t0) * 1e6 / N
+    r = np.array(ratios)
+    emit("fig13_dagps_over_newlb_p50", dt, round(float(np.percentile(r, 50)), 3))
+    emit("fig13_dagps_over_newlb_p75", dt, round(float(np.percentile(r, 75)), 3))
+    emit("fig13_dagps_over_newlb_max", dt, round(float(r.max()), 3))
+    emit("fig13_frac_within_1.13", dt, round(float((r <= 1.13).mean()), 3))
+    emit("fig13_newlb_tightening_p50", dt,
+         round(float(np.percentile(tighten, 50)), 3))
+
+
+def bench_sensitivity() -> None:
+    """Fig. 14/15: eta multiplier, remote penalty, load scaling."""
+    dags = make_workload("tpcds", n_jobs(10), seed=21)
+    t0 = time.perf_counter()
+    base = None
+    for m_eta in (0.05, 0.2, 0.5):
+        res = run_workload(dags, "dagps", n_machines=12, interarrival=8.0,
+                           seed=21, eta_m=m_eta)
+        v = float(np.mean(res.jcts()))
+        base = base or v
+        emit(f"fig14_eta_m_{m_eta}", 0.0, round(100 * (1 - v / base), 1))
+    for rp in (0.5, 0.8, 1.0):
+        res = run_workload(dags, "dagps", n_machines=12, interarrival=8.0,
+                           seed=21, remote_penalty=rp)
+        emit(f"fig14_rp_{rp}", 0.0, round(float(np.mean(res.jcts())), 1))
+    # Fig 15: load = fewer machines, same workload
+    for machines in (16, 8, 4):
+        tez = run_workload(dags, "tez", n_machines=machines, interarrival=8.0, seed=21)
+        dg = run_workload(dags, "dagps", n_machines=machines, interarrival=8.0, seed=21)
+        gain = 100 * (1 - np.median(dg.jcts()) / np.median(tez.jcts()))
+        emit(f"fig15_load_m{machines}", 0.0, round(float(gain), 1))
+    _ = t0
+
+
+def bench_domains() -> None:
+    """Fig. 16: DAGs from distributed builds and request-response workflows."""
+    m = 4
+    for name, gen in (("build", build_system_dag), ("workflow", workflow_dag)):
+        imps_t, imps_c = [], []
+        N = n_jobs(12)
+        t0 = time.perf_counter()
+        for i in range(N):
+            dag = gen(np.random.default_rng(3000 + i))
+            sched = build_schedule(dag, m)
+            dg = min(simulate_execution(dag, m, policy="dagps",
+                                        pri_score=sched.pri_score), sched.makespan)
+            tet = simulate_execution(dag, m, policy="tetris")
+            cp = simulate_execution(dag, m, order=cp_order(dag))
+            imps_t.append(1 - dg / tet)
+            imps_c.append(1 - dg / cp)
+        dt = (time.perf_counter() - t0) * 1e6 / N
+        emit(f"fig16_{name}_vs_tetris_p50", dt,
+             round(float(np.median(imps_t)) * 100, 1))
+        emit(f"fig16_{name}_vs_cp_p50", dt,
+             round(float(np.median(imps_c)) * 100, 1))
+
+
+def bench_construction() -> None:
+    """§7: BuildSchedule wall time across DAG sizes."""
+    for scale, label in ((0.5, "small"), (1.0, "medium"), (2.0, "large")):
+        dag = production_dag(np.random.default_rng(99), scale=scale, share=8)
+        t0 = time.perf_counter()
+        build_schedule(dag, 8)
+        dt = time.perf_counter() - t0
+        emit(f"s7_construction_{label}_n{dag.n}", dt * 1e6, round(dt, 3))
+
+
+ALL = [bench_jct, bench_makespan, bench_fairness, bench_alternatives,
+       bench_lowerbound, bench_sensitivity, bench_domains, bench_construction]

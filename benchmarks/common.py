@@ -1,0 +1,36 @@
+"""Shared benchmark plumbing: timing + CSV rows.
+
+Every benchmark emits rows  name,us_per_call,derived  where `us_per_call`
+is the wall time of the primitive being benchmarked (scheduling one DAG,
+one simulated job, ...) and `derived` is the paper-facing metric
+(improvement %, ratio-to-lower-bound, roofline seconds, ...).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from contextlib import contextmanager
+
+ROWS: list[tuple[str, float, str]] = []
+
+# scale factor for job counts: 1.0 = CI-sized (minutes); crank up for
+# paper-sized populations.
+SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
+
+
+def n_jobs(base: int) -> int:
+    return max(int(base * SCALE), 2)
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    ROWS.append((name, us_per_call, str(derived)))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+@contextmanager
+def timed():
+    t0 = time.perf_counter()
+    box = {}
+    yield box
+    box["s"] = time.perf_counter() - t0

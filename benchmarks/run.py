@@ -1,0 +1,42 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Scale the simulated job
+populations with REPRO_BENCH_SCALE (default 1.0 = minutes on one core;
+the paper's 20k-DAG populations correspond to SCALE ~ 800).
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run jct roofline
+"""
+
+from __future__ import annotations
+
+import sys
+
+from . import bench_scheduling, bench_systems
+
+GROUPS = {
+    "jct": [bench_scheduling.bench_jct],
+    "makespan": [bench_scheduling.bench_makespan],
+    "fairness": [bench_scheduling.bench_fairness],
+    "alternatives": [bench_scheduling.bench_alternatives],
+    "lowerbound": [bench_scheduling.bench_lowerbound],
+    "sensitivity": [bench_scheduling.bench_sensitivity],
+    "domains": [bench_scheduling.bench_domains],
+    "construction": [bench_scheduling.bench_construction],
+    "pipeline": [bench_systems.bench_pipeline],
+    "roofline": [bench_systems.bench_roofline],
+    "kernels": [bench_systems.bench_kernels],
+}
+
+
+def main() -> None:
+    args = sys.argv[1:]
+    names = args if args else list(GROUPS)
+    print("name,us_per_call,derived")
+    for name in names:
+        for fn in GROUPS[name]:
+            fn()
+
+
+if __name__ == "__main__":
+    main()

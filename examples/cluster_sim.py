@@ -1,0 +1,30 @@
+"""Cluster-scale scenario: a day of training/serving jobs gang-scheduled
+onto 32 pod slices with DAGPS vs Tez-style FIFO — the L2 adaptation, with
+stage profiles pulled from the dry-run roofline artifacts when available.
+
+  PYTHONPATH=src python examples/cluster_sim.py
+"""
+
+import numpy as np
+
+from repro.launch.cluster import TPUJob, job_from_roofline, schedule_cluster
+
+
+def main():
+    archs = ["granite3_8b", "gemma2_2b", "mixtral_8x7b", "rwkv6_7b",
+             "phi4_mini_3_8b"]
+    jobs = []
+    for i in range(15):
+        arch = archs[i % len(archs)]
+        jobs.append(job_from_roofline(f"job-{i}-{arch}", arch,
+                                      "artifacts/dryrun", steps=50 + 20 * (i % 4),
+                                      group=i % 2))
+    for policy in ("tez", "dagps"):
+        res = schedule_cluster(jobs, n_slices=32, interarrival=30.0, policy=policy)
+        jcts = res.jcts()
+        print(f"{policy:6s}: median JCT {np.median(jcts):8.1f}s  "
+              f"p75 {np.percentile(jcts, 75):8.1f}s  makespan {res.makespan:8.1f}s")
+
+
+if __name__ == "__main__":
+    main()

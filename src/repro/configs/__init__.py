@@ -1,0 +1,57 @@
+"""Assigned architecture configs (--arch <id>) + reduced smoke variants.
+
+Each module defines `full()` and `smoke()` returning an ArchConfig with the
+exact published hyperparameters (full) or a tiny same-family config (smoke).
+`get(arch_id)` / `get_smoke(arch_id)` look them up; SHAPES defines the
+assigned input-shape cells and `cells()` enumerates the dry-run grid with
+the long_500k sub-quadratic skip rule applied (see DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "deepseek_moe_16b",
+    "mixtral_8x7b",
+    "qwen2_vl_7b",
+    "rwkv6_7b",
+    "gemma2_2b",
+    "codeqwen15_7b",
+    "granite3_8b",
+    "phi4_mini_3_8b",
+    "recurrentgemma_2b",
+    "musicgen_large",
+]
+
+# assigned shape cells: (name, seq_len, global_batch, kind)
+SHAPES = {
+    "train_4k":    dict(seq=4096,    batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768,   batch=32,  kind="prefill"),
+    "decode_32k":  dict(seq=32768,   batch=128, kind="decode"),
+    "long_500k":   dict(seq=524288,  batch=1,   kind="decode"),
+}
+
+
+def _mod(arch_id: str):
+    return importlib.import_module(f".{arch_id}", __package__)
+
+
+def get(arch_id: str):
+    return _mod(arch_id.replace("-", "_")).full()
+
+
+def get_smoke(arch_id: str):
+    return _mod(arch_id.replace("-", "_")).smoke()
+
+
+def cells(include_multipod: bool = False) -> list[tuple[str, str]]:
+    """All (arch, shape) dry-run cells, honoring the long_500k skip rule."""
+    out = []
+    for a in ARCH_IDS:
+        cfg = get(a)
+        for s in SHAPES:
+            if s == "long_500k" and not cfg.subquadratic:
+                continue  # pure full-attention arch: noted in DESIGN.md
+            out.append((a, s))
+    return out

@@ -1,0 +1,13 @@
+"""The paper's primary contribution: DAGPS scheduling (offline §4 + online §5 + bounds §6)."""
+from .dag import DAG, from_stage_graph
+from .space import Space
+from .builder import Schedule, build_schedule, partition_totally_ordered
+from .bounds import all_bounds, cp_length, mod_cp, new_lb, t_work
+from .baselines import (
+    bfs_order, cp_order, cg_order, random_order, run_baseline,
+    simulate_execution, strip_levels,
+)
+from .online import (
+    DeficitCounters, JobView, Matcher, MatcherConfig, PendingTask,
+    drf_fairness, slot_fairness,
+)

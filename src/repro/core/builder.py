@@ -1,0 +1,425 @@
+"""Offline schedule construction for one DAG (paper §4, Figs. 5-7).
+
+BuildSchedule:
+  1. CandidateTroublesomeTasks (§4.1): score tasks by LongScore (duration /
+     max duration) and stages by FragScore (TWork / greedy execution time);
+     sweep discriminative (l, f) thresholds; take the closure of each chosen
+     set; split the DAG into subsets T (troublesome), P (parents), C
+     (children), O (other).
+  2. Place T first onto the virtual space, forward or backward, keep the
+     more compact (§4.2).
+  3. TrySubsetOrders (§4.3): the four dead-end-free orders
+     T-OPC, T-OCP, T-COP, T-POC with the direction restrictions proved in
+     Lemma 4 (P only backward, C only forward, O either).
+  4. Keep the most compact schedule across all candidates; OrderTasks
+     returns tasks sorted by start time, which the online component (§5)
+     consumes as priScore.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable
+
+import numpy as np
+
+from .dag import DAG
+from .space import Space
+
+
+@dataclasses.dataclass
+class Schedule:
+    """A constructed schedule: placement of every task in the virtual space."""
+
+    dag: DAG
+    order: np.ndarray        # task ids sorted by start time
+    start: np.ndarray        # (n,) start seconds (shifted so min == 0)
+    machine: np.ndarray      # (n,) machine index in the virtual space
+    makespan: float
+    tick: float
+    trouble_mask: np.ndarray | None = None
+    label: str = "dagps"
+
+    @property
+    def pri_score(self) -> np.ndarray:
+        """priScore in [0, 1]: 1 for the first task, ->0 for the last (§5)."""
+        n = self.dag.n
+        rank = np.empty(n, dtype=np.float64)
+        rank[self.order] = np.arange(n)
+        return 1.0 - rank / max(n, 1)
+
+    def validate(self) -> None:
+        """Dependencies respected and no over-commitment (test hook)."""
+        d = self.dag
+        end = self.start + d.duration
+        for i in range(d.n):
+            for p in d.parents[i]:
+                if self.start[i] < end[p] - 1e-6 - self.tick:
+                    raise AssertionError(f"dependency violated: {p} -> {i}")
+
+
+# ----------------------------------------------------------------------
+# Subset placement (Fig. 7)
+# ----------------------------------------------------------------------
+
+class _Placer:
+    def __init__(self, dag: DAG, space: Space, dur_ticks: np.ndarray):
+        self.dag = dag
+        self.space = space
+        self.k = dur_ticks
+        # structural tie-break: among equal durations, place tasks that
+        # enable the most downstream work first (resolves Fig. 17's "red"
+        # tasks, which are identical to their siblings except structurally).
+        self.n_desc = np.array([len(dag.children[i]) for i in range(dag.n)])
+        self.placed_start = np.zeros(dag.n, dtype=np.int64)
+        self.placed_end = np.zeros(dag.n, dtype=np.int64)
+        self.machine = np.full(dag.n, -1, dtype=np.int64)
+        self.is_placed = np.zeros(dag.n, dtype=bool)
+
+    def clone(self, space: Space) -> "_Placer":
+        p = _Placer.__new__(_Placer)
+        p.dag, p.k = self.dag, self.k
+        p.n_desc = self.n_desc
+        p.space = space
+        p.placed_start = self.placed_start.copy()
+        p.placed_end = self.placed_end.copy()
+        p.machine = self.machine.copy()
+        p.is_placed = self.is_placed.copy()
+        return p
+
+    def _commit(self, t: int, m: int, t0: int) -> None:
+        self.space.commit(t, m, t0, self.k[t], self.dag.demand[t])
+        self.placed_start[t] = t0
+        self.placed_end[t] = t0 + self.k[t]
+        self.machine[t] = m
+        self.is_placed[t] = True
+
+    def place_forward(self, ids: np.ndarray) -> bool:
+        """PlaceTasksF: dependency-order within subset, longest task first."""
+        dag, sp = self.dag, self.space
+        in_subset = np.zeros(dag.n, dtype=bool)
+        in_subset[ids] = True
+        # unplaced parents *within the subset* gate readiness; parents outside
+        # the subset constrain the start only if already placed (see §4.3
+        # discussion of inter-subset dependencies).
+        pending_parents = np.array(
+            [int(in_subset[dag.parents[i]].sum()) for i in range(dag.n)]
+        )
+        key_fn = lambda i: (-dag.duration[i], -self.n_desc[i], i)
+        ready = [i for i in ids if pending_parents[i] == 0]
+        ready.sort(key=key_fn)
+        remaining = len(ids)
+        hint: dict[tuple[int, float, bytes], tuple[int, int]] = {}
+        while remaining:
+            if not ready:
+                return False  # cycle — cannot happen on a valid DAG
+            t = ready.pop(0)
+            par = dag.parents[t]
+            pl = par[self.is_placed[par]] if len(par) else par
+            if len(pl):
+                r = int(self.placed_end[pl].max())
+            else:
+                r = sp._min_start if sp._min_start is not None else 0
+            key = (int(dag.stage_of[t]), float(r), dag.demand[t].tobytes())
+            m, t0 = sp.earliest_fit(dag.demand[t], self.k[t], r, hint.get(key))
+            self._commit(t, m, t0)
+            hint[key] = (m, t0)
+            remaining -= 1
+            newly = []
+            for c in dag.children[t]:
+                if in_subset[c]:
+                    pending_parents[c] -= 1
+                    if pending_parents[c] == 0:
+                        newly.append(int(c))
+            if newly:
+                ready.extend(newly)
+                ready.sort(key=key_fn)
+        return True
+
+    def place_backward(self, ids: np.ndarray) -> bool:
+        """PlaceTasksB: mirror image — children first, latest feasible slot."""
+        dag, sp = self.dag, self.space
+        in_subset = np.zeros(dag.n, dtype=bool)
+        in_subset[ids] = True
+        pending_children = np.array(
+            [int(in_subset[dag.children[i]].sum()) for i in range(dag.n)]
+        )
+        key_fn = lambda i: (-dag.duration[i], -len(dag.parents[i]), i)
+        ready = [i for i in ids if pending_children[i] == 0]
+        ready.sort(key=key_fn)
+        remaining = len(ids)
+        hint: dict[tuple[int, float, bytes], tuple[int, int]] = {}
+        while remaining:
+            if not ready:
+                return False
+            t = ready.pop(0)
+            ch = dag.children[t]
+            pl = ch[self.is_placed[ch]] if len(ch) else ch
+            if len(pl):
+                deadline = int(self.placed_start[pl].min())
+            elif sp._max_end is not None:
+                # unanchored task: pack against the occupied region instead of
+                # drifting to the far end of the grid.
+                deadline = int(sp._max_end)
+            else:
+                deadline = sp.T - sp.off  # logical end of the empty grid
+            key = (int(dag.stage_of[t]), float(deadline), dag.demand[t].tobytes())
+            m, t0 = sp.latest_fit(dag.demand[t], self.k[t], deadline, hint.get(key))
+            self._commit(t, m, t0)
+            hint[key] = (m, t0)
+            remaining -= 1
+            newly = []
+            for p in dag.parents[t]:
+                if in_subset[p]:
+                    pending_children[p] -= 1
+                    if pending_children[p] == 0:
+                        newly.append(int(p))
+            if newly:
+                ready.extend(newly)
+                ready.sort(key=key_fn)
+        return True
+
+    def place_best(self, ids: np.ndarray) -> "_Placer":
+        """PlaceTasks: min(forward, backward) by resulting span (Fig. 7 l.13)."""
+        if len(ids) == 0:
+            return self
+        fwd = self.clone(self.space.clone())
+        okf = fwd.place_forward(ids)
+        bwd = self.clone(self.space.clone())
+        okb = bwd.place_backward(ids)
+        if okf and (not okb or fwd.space.makespan_ticks <= bwd.space.makespan_ticks):
+            return fwd
+        return bwd
+
+
+# ----------------------------------------------------------------------
+# Troublesome-task search (Fig. 6)
+# ----------------------------------------------------------------------
+
+def frag_scores(dag: DAG, m: int) -> np.ndarray:
+    """FragScore per stage = TWork(s) / ExecutionTime(s) under greedy packing.
+
+    Tasks of one stage are identical-ish and independent, so greedy packing
+    runs them in waves: per machine, c = how many copies fit side by side.
+    """
+    out = np.ones(dag.n_stages, dtype=np.float64)
+    for s, ids in enumerate(dag.stages):
+        if len(ids) == 0:
+            continue
+        dur = float(dag.duration[ids].mean())
+        dem = dag.demand[ids].mean(axis=0)
+        peak = float(dem.max())
+        if peak <= 0 or dur <= 0:
+            continue
+        per_machine = max(int(1.0 / max(peak, 1e-9) + 1e-9), 1)
+        waves = math.ceil(len(ids) / (m * per_machine))
+        exec_time = waves * dur
+        twork = len(ids) * dur * peak / m
+        out[s] = min(twork / exec_time, 1.0)
+    return out
+
+
+def candidate_troublesome(
+    dag: DAG,
+    m: int,
+    n_long: int = 8,
+    n_frag: int = 6,
+    max_candidates: int = 24,
+) -> list[np.ndarray]:
+    """Enumerate closed candidate sets T (deduplicated, |candidates| capped)."""
+    long_score = dag.duration / max(float(dag.duration.max()), 1e-12)
+    frag = frag_scores(dag, m)[dag.stage_of]
+
+    def _levels(vals: np.ndarray, k: int) -> np.ndarray:
+        u = np.unique(vals)
+        if len(u) <= k:
+            return u
+        qs = np.quantile(u, np.linspace(0, 1, k))
+        return np.unique(qs)
+
+    ls = _levels(long_score, n_long)
+    fs = _levels(frag, n_frag)
+    seen: set[bytes] = set()
+    cands: list[np.ndarray] = []
+    # T = empty => plain greedy packing of the whole DAG; always considered
+    # so DAGPS can never lose to its own packer.
+    empty = np.zeros(dag.n, dtype=bool)
+    seen.add(empty.tobytes())
+    cands.append(empty)
+    pairs = [(l, f) for l in ls[::-1] for f in fs]
+    # also pure-long and pure-frag sweeps
+    pairs += [(l, -1.0) for l in ls[::-1]] + [(2.0, f) for f in fs]
+    for l, f in pairs:
+        t_mask = (long_score >= l) | (frag <= f)
+        if not t_mask.any():
+            continue
+        t_mask = dag.closure_mask(t_mask)
+        key = t_mask.tobytes()
+        if key in seen:
+            continue
+        seen.add(key)
+        cands.append(t_mask)
+    if len(cands) > max_candidates:
+        # keep a spread of candidate sizes (plus the empty set)
+        sizes = np.array([c.sum() for c in cands])
+        order = np.argsort(sizes, kind="stable")
+        picks = order[np.unique(np.linspace(0, len(order) - 1, max_candidates).astype(int))]
+        cands = [cands[i] for i in sorted(picks)]
+    return cands
+
+
+# ----------------------------------------------------------------------
+# BuildSchedule (Fig. 5)
+# ----------------------------------------------------------------------
+
+def build_schedule(
+    dag: DAG,
+    m: int,
+    ticks: int = 256,
+    n_long: int = 8,
+    n_frag: int = 6,
+    max_candidates: int = 24,
+    use_partitions: bool = True,
+) -> Schedule:
+    """Construct DAGPS's preferred schedule for one DAG on m machines."""
+    if dag.n == 0:
+        return Schedule(dag, np.empty(0, np.int64), np.empty(0), np.empty(0, np.int64), 0.0, 1.0)
+    if use_partitions:
+        parts = partition_totally_ordered(dag)
+        if len(parts) > 1:
+            return _concat_partition_schedules(dag, parts, m, ticks, n_long, n_frag, max_candidates)
+    return _build_one(dag, m, ticks, n_long, n_frag, max_candidates)
+
+
+def _build_one(dag, m, ticks, n_long, n_frag, max_candidates) -> Schedule:
+    from .bounds import cp_length, t_work  # local import, no cycle at module load
+
+    horizon = max(cp_length(dag), t_work(dag, m))
+    tick = max(horizon / ticks, 1e-9)
+    dur_ticks = np.maximum(np.ceil(dag.duration / tick - 1e-9).astype(np.int64), 1)
+    grid = int(dur_ticks.sum() / max(m, 1) + dur_ticks.max()) + 4
+    grid = max(grid, int(1.25 * horizon / tick) + 4)
+
+    best: tuple[int, _Placer] | None = None
+    best_mask: np.ndarray | None = None
+    for t_mask in candidate_troublesome(dag, m, n_long, n_frag, max_candidates):
+        t_mask, o_mask, p_mask, c_mask = dag.split_subsets(t_mask)
+        t_ids, o_ids = np.nonzero(t_mask)[0], np.nonzero(o_mask)[0]
+        p_ids, c_ids = np.nonzero(p_mask)[0], np.nonzero(c_mask)[0]
+
+        base = _Placer(dag, Space(m, dag.d, grid, tick), dur_ticks)
+        base = base.place_best(t_ids)  # trouble goes first (Fig. 5 l.7)
+
+        for order_fn in (_order_opc, _order_ocp, _order_cop, _order_poc):
+            pl = base.clone(base.space.clone())
+            if not order_fn(pl, o_ids, p_ids, c_ids):
+                continue
+            span = pl.space.makespan_ticks
+            if best is None or span < best[0]:
+                best = (span, pl)
+                best_mask = t_mask
+    assert best is not None
+    return _to_schedule(dag, best[1], best_mask, label="dagps")
+
+
+def _order_opc(pl: _Placer, o, p, c) -> bool:   # T OPC (Fig. 7 l.20)
+    pl2 = pl.place_best(o)
+    pl.__dict__.update(pl2.__dict__)
+    return pl.place_backward(p) and pl.place_forward(c)
+
+
+def _order_ocp(pl: _Placer, o, p, c) -> bool:   # T OCP (l.21)
+    pl2 = pl.place_best(o)
+    pl.__dict__.update(pl2.__dict__)
+    return pl.place_forward(c) and pl.place_backward(p)
+
+
+def _order_cop(pl: _Placer, o, p, c) -> bool:   # T COP (l.22)
+    return pl.place_forward(c) and pl.place_backward(o) and pl.place_backward(p)
+
+
+def _order_poc(pl: _Placer, o, p, c) -> bool:   # T POC (l.23)
+    return pl.place_backward(p) and pl.place_forward(o) and pl.place_forward(c)
+
+
+def _to_schedule(dag: DAG, pl: _Placer, t_mask, label: str) -> Schedule:
+    start_ticks = pl.placed_start.astype(np.float64)
+    start_ticks -= start_ticks.min()
+    start = start_ticks * pl.space.tick
+    order = np.lexsort((np.arange(dag.n), start))
+    makespan = float((start + dag.duration).max() - start.min())
+    return Schedule(
+        dag=dag, order=order, start=start, machine=pl.machine,
+        makespan=makespan, tick=pl.space.tick, trouble_mask=t_mask, label=label,
+    )
+
+
+# ----------------------------------------------------------------------
+# §4.4 enhancement: split at barriers into totally ordered parts
+# ----------------------------------------------------------------------
+
+def partition_totally_ordered(dag: DAG) -> list[np.ndarray]:
+    """Split V into V1..Vk where every task of Vi precedes all of Vi+1.
+
+    A cut after topological prefix [0..i] is valid iff [0..i] ⊆ anc(j) for
+    every j > i, i.e. the suffix-AND of ancestor bitsets from i+1 on contains
+    the full prefix.  Computed vectorized in O(n * n/8) bytes.
+    """
+    n = dag.n
+    if n <= 1:
+        return [np.arange(n)]
+    anc = np.unpackbits(dag.anc_bits.view(np.uint8), axis=1, bitorder="little")[:, :n]
+    # suffix_and[i] = AND of anc rows i+1..n-1
+    suffix = np.minimum.accumulate(anc[::-1], axis=0)[::-1]
+    cuts = []
+    for i in range(n - 1):
+        if suffix[i + 1, : i + 1].all():
+            cuts.append(i)
+    parts = []
+    prev = 0
+    for c in cuts:
+        parts.append(np.arange(prev, c + 1))
+        prev = c + 1
+    parts.append(np.arange(prev, n))
+    return parts
+
+
+def _concat_partition_schedules(dag, parts, m, ticks, n_long, n_frag, max_candidates) -> Schedule:
+    start = np.zeros(dag.n, dtype=np.float64)
+    machine = np.zeros(dag.n, dtype=np.int64)
+    offset = 0.0
+    tick = None
+    tmask = np.zeros(dag.n, dtype=bool)
+    for ids in parts:
+        sub = _subdag(dag, ids)
+        sched = _build_one(sub, m, ticks, n_long, n_frag, max_candidates)
+        start[ids] = sched.start + offset
+        machine[ids] = sched.machine
+        if sched.trouble_mask is not None:
+            tmask[ids] = sched.trouble_mask
+        offset += sched.makespan
+        tick = sched.tick if tick is None else max(tick, sched.tick)
+    order = np.lexsort((np.arange(dag.n), start))
+    makespan = float((start + dag.duration).max() - start.min())
+    return Schedule(dag, order, start, machine, makespan, tick or 1.0,
+                    trouble_mask=tmask, label="dagps")
+
+
+def _subdag(dag: DAG, ids: np.ndarray) -> DAG:
+    remap = {int(t): k for k, t in enumerate(ids)}
+    idset = set(remap)
+    parents = [
+        np.asarray(sorted(remap[int(p)] for p in dag.parents[int(t)] if int(p) in idset),
+                   dtype=np.int64)
+        for t in ids
+    ]
+    stages = dag.stage_of[ids]
+    _, stage_renum = np.unique(stages, return_inverse=True)
+    return DAG(
+        duration=dag.duration[ids].copy(),
+        demand=dag.demand[ids].copy(),
+        stage_of=stage_renum,
+        parents=parents,
+        name=f"{dag.name}[part]",
+    )

@@ -1,0 +1,259 @@
+"""DAG-of-tasks data structures (paper §2.1, §4 definitions).
+
+A job is a DAG G = {V, E}.  Each node is a task with a duration and a
+d-dimensional resource demand (normalized so that one machine has capacity
+1.0 in every dimension).  Tasks are grouped into *stages* (e.g. a map or a
+reduce): tasks in a stage have similar durations / demands and identical
+dependencies — the structural fact DAGPS leans on (§4.4, §6).
+
+Bitset-based ancestor/descendant closures give O(n^2/64) reachability, which
+the troublesome-task closure (§4.1), the subset split and NewLB (§6) all use.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+NRES = 4  # cores, memory, network, disk (paper §2.1)
+
+
+def _pack_reach(n: int, adj: Sequence[np.ndarray]) -> np.ndarray:
+    """Transitive closure as packed uint64 bitsets.
+
+    adj[i] lists *direct* predecessors of i, and i must be topologically
+    ordered so that all predecessors of i have index < i.
+    Returns reach[n, ceil(n/64)] where bit j of row i => j is a strict
+    ancestor of i under adj.
+    """
+    words = (n + 63) // 64
+    reach = np.zeros((n, words), dtype=np.uint64)
+    for i in range(n):
+        row = reach[i]
+        for p in adj[i]:
+            row |= reach[p]
+            row[p >> 6] |= np.uint64(1) << np.uint64(p & 63)
+    return reach
+
+
+def _bit_test(bits: np.ndarray, j: int) -> bool:
+    return bool((bits[j >> 6] >> np.uint64(j & 63)) & np.uint64(1))
+
+
+def _mask_to_ids(mask: np.ndarray) -> np.ndarray:
+    return np.nonzero(mask)[0]
+
+
+@dataclasses.dataclass
+class DAG:
+    """A job DAG over tasks, with stage grouping.
+
+    All arrays are indexed by task id 0..n-1 in topological order.
+    """
+
+    duration: np.ndarray              # (n,) float seconds
+    demand: np.ndarray                # (n, d) float in [0, 1] per machine
+    stage_of: np.ndarray              # (n,) int
+    parents: list[np.ndarray]         # direct predecessors per task
+    name: str = "dag"
+
+    def __post_init__(self) -> None:
+        self.duration = np.asarray(self.duration, dtype=np.float64)
+        self.demand = np.atleast_2d(np.asarray(self.demand, dtype=np.float64))
+        self.stage_of = np.asarray(self.stage_of, dtype=np.int64)
+        n = self.n
+        if not (len(self.demand) == len(self.stage_of) == len(self.parents) == n):
+            raise ValueError("inconsistent DAG arrays")
+        self.parents = [np.asarray(p, dtype=np.int64) for p in self.parents]
+        for i, ps in enumerate(self.parents):
+            if len(ps) and ps.max() >= i:
+                raise ValueError("tasks must be topologically ordered")
+        self.children: list[np.ndarray] = [np.empty(0, np.int64) for _ in range(n)]
+        kids: list[list[int]] = [[] for _ in range(n)]
+        for i, ps in enumerate(self.parents):
+            for p in ps:
+                kids[int(p)].append(i)
+        self.children = [np.asarray(k, dtype=np.int64) for k in kids]
+        self.n_stages = int(self.stage_of.max()) + 1 if n else 0
+        self.stages: list[np.ndarray] = [
+            np.nonzero(self.stage_of == s)[0] for s in range(self.n_stages)
+        ]
+        self._anc_bits: np.ndarray | None = None
+        self._desc_bits: np.ndarray | None = None
+
+    # ------------------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return len(self.duration)
+
+    @property
+    def d(self) -> int:
+        return self.demand.shape[1]
+
+    @property
+    def anc_bits(self) -> np.ndarray:
+        if self._anc_bits is None:
+            self._anc_bits = _pack_reach(self.n, self.parents)
+        return self._anc_bits
+
+    @property
+    def desc_bits(self) -> np.ndarray:
+        if self._desc_bits is None:
+            # D[i, j] = "j is a descendant of i" = A[j, i]: transpose the
+            # unpacked ancestor matrix and repack.
+            n = self.n
+            words = (n + 63) // 64
+            anc = np.unpackbits(
+                self.anc_bits.view(np.uint8), axis=1, bitorder="little"
+            )[:, :n]
+            packed = np.packbits(np.ascontiguousarray(anc.T), axis=1, bitorder="little")
+            full = np.zeros((n, words * 8), dtype=np.uint8)
+            full[:, : packed.shape[1]] = packed
+            self._desc_bits = full.view(np.uint64)
+        return self._desc_bits
+
+    # -- set helpers (masks are (n,) bool) ------------------------------
+    def ancestors_mask(self, ids: Iterable[int]) -> np.ndarray:
+        mask = np.zeros(self.n, dtype=bool)
+        bits = np.zeros_like(self.anc_bits[0])
+        for i in ids:
+            bits |= self.anc_bits[i]
+        _bits_into_mask(bits, mask)
+        return mask
+
+    def descendants_mask(self, ids: Iterable[int]) -> np.ndarray:
+        mask = np.zeros(self.n, dtype=bool)
+        bits = np.zeros_like(self.desc_bits[0])
+        for i in ids:
+            bits |= self.desc_bits[i]
+        _bits_into_mask(bits, mask)
+        return mask
+
+    def closure_mask(self, mask: np.ndarray) -> np.ndarray:
+        """Closure(T) §4.1: T plus every task on a path between two T-tasks."""
+        ids = _mask_to_ids(mask)
+        if len(ids) == 0:
+            return mask.copy()
+        anc = self.ancestors_mask(ids)
+        desc = self.descendants_mask(ids)
+        return mask | (anc & desc)
+
+    def split_subsets(self, t_mask: np.ndarray):
+        """Given a *closed* T, return masks (T, O, P, C) per §4.1."""
+        ids = _mask_to_ids(t_mask)
+        anc = self.ancestors_mask(ids)
+        desc = self.descendants_mask(ids)
+        p_mask = anc & ~t_mask
+        c_mask = desc & ~t_mask
+        o_mask = ~(t_mask | p_mask | c_mask)
+        return t_mask, o_mask, p_mask, c_mask
+
+    # -- stage-level structure -------------------------------------------
+    def stage_parents(self) -> list[set[int]]:
+        sp: list[set[int]] = [set() for _ in range(self.n_stages)]
+        for i in range(self.n):
+            si = int(self.stage_of[i])
+            for p in self.parents[i]:
+                ps = int(self.stage_of[p])
+                if ps != si:
+                    sp[si].add(ps)
+        return sp
+
+    def work(self) -> float:
+        """Total work: sum over tasks of duration * demand, maxed over resources."""
+        return float((self.duration[:, None] * self.demand).sum(axis=0).max())
+
+    def validate_order(self, order: Sequence[int]) -> bool:
+        pos = {int(t): k for k, t in enumerate(order)}
+        return all(
+            pos[int(p)] < pos[i]
+            for i in range(self.n)
+            for p in self.parents[i]
+        )
+
+
+def _bits_to_ids(bits: np.ndarray) -> np.ndarray:
+    ids = []
+    for w, word in enumerate(bits):
+        word = int(word)
+        while word:
+            b = word & -word
+            ids.append((w << 6) + b.bit_length() - 1)
+            word ^= b
+    return np.asarray(ids, dtype=np.int64)
+
+
+def _bits_into_mask(bits: np.ndarray, mask: np.ndarray) -> None:
+    n = len(mask)
+    unpacked = np.unpackbits(bits.view(np.uint8), bitorder="little")
+    mask |= unpacked[:n].astype(bool)
+
+
+def from_stage_graph(
+    stage_tasks: Sequence[int],
+    stage_durations: Sequence[float],
+    stage_demands: Sequence[Sequence[float]],
+    stage_deps: Sequence[Sequence[int]],
+    name: str = "dag",
+    rng: np.random.Generator | None = None,
+    duration_jitter: float = 0.0,
+    demand_jitter: float = 0.0,
+) -> DAG:
+    """Expand a stage-level graph into a task-level DAG.
+
+    Every task of stage s depends on *all* tasks of each parent stage
+    (all-to-all shuffle semantics, the common case in data-parallel DAGs).
+    """
+    n_stages = len(stage_tasks)
+    order = _topo_stage_order(stage_deps, n_stages)
+    task_ids: list[np.ndarray] = [np.empty(0, np.int64)] * n_stages
+    durations: list[float] = []
+    demands: list[np.ndarray] = []
+    stage_of: list[int] = []
+    parents: list[np.ndarray] = []
+    rng = rng or np.random.default_rng(0)
+    next_id = 0
+    for s in order:
+        q = int(stage_tasks[s])
+        ids = np.arange(next_id, next_id + q, dtype=np.int64)
+        task_ids[s] = ids
+        next_id += q
+        par = np.concatenate([task_ids[p] for p in stage_deps[s]]) if stage_deps[s] else np.empty(0, np.int64)
+        base_dur = float(stage_durations[s])
+        base_dem = np.asarray(stage_demands[s], dtype=np.float64)
+        for _ in range(q):
+            dur = base_dur * (1.0 + duration_jitter * float(rng.standard_normal())) if duration_jitter else base_dur
+            dem = base_dem * (1.0 + demand_jitter * rng.standard_normal(base_dem.shape)) if demand_jitter else base_dem
+            durations.append(max(dur, 1e-3))
+            demands.append(np.clip(dem, 1e-4, 1.0))
+            stage_of.append(s)
+            parents.append(np.sort(par))
+    return DAG(
+        duration=np.asarray(durations),
+        demand=np.asarray(demands),
+        stage_of=np.asarray(stage_of),
+        parents=parents,
+        name=name,
+    )
+
+
+def _topo_stage_order(stage_deps: Sequence[Sequence[int]], n: int) -> list[int]:
+    state = [0] * n
+    out: list[int] = []
+
+    def visit(s: int) -> None:
+        if state[s] == 2:
+            return
+        if state[s] == 1:
+            raise ValueError("cycle in stage graph")
+        state[s] = 1
+        for p in stage_deps[s]:
+            visit(int(p))
+        state[s] = 2
+        out.append(s)
+
+    for s in range(n):
+        visit(s)
+    return out

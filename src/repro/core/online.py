@@ -1,0 +1,209 @@
+"""Online multi-DAG scheduler (paper §5, Fig. 8).
+
+Reconciles discordant objectives when many jobs share the cluster:
+  * each job's *preferred schedule* (priScore from the offline builder §4),
+  * multi-resource packing (pScore = dot(demand, available), with a remote
+    penalty for locality-sensitive tasks),
+  * judicious overbooking of fungible resources (oScore),
+  * SRPT to lower average JCT (eta * srpt_j),
+  * bounded unfairness via deficit counters (kappa * C), pluggable fairness
+    f() — slot fairness or DRF.
+
+`Matcher.find_tasks_for_machine` is FindAppropriateTasksForMachine with
+bundling: it returns a *set* of tasks to start on the machine in one
+heartbeat (§7.2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable, Sequence
+
+import numpy as np
+
+# resource dims (cores, memory, network, disk); network+disk are fungible —
+# they can be overbooked at the price of slowdown, cores/memory cannot.
+FUNGIBLE = (2, 3)
+RIGID = (0, 1)
+
+
+@dataclasses.dataclass
+class PendingTask:
+    job_id: int
+    task_id: int
+    demand: np.ndarray
+    duration: float
+    pri_score: float = 1.0
+    locality: int = -1          # preferred machine id, -1 = none
+
+
+@dataclasses.dataclass
+class JobView:
+    """What the matcher needs to know about a job (AM -> RM interface §7)."""
+    job_id: int
+    group: int                 # jobgroup / queue for fairness
+    srpt: float                # remaining work: sum duration * |demands|
+
+
+def slot_fairness(demand: np.ndarray) -> float:
+    """f() = 1: slot fairness."""
+    return 1.0
+
+
+def drf_fairness(demand: np.ndarray) -> float:
+    """f() = dominant share of the task's demand: DRF."""
+    return float(np.max(demand))
+
+
+@dataclasses.dataclass
+class MatcherConfig:
+    eta_m: float = 0.2             # paper §8.5: m in [0.1, 0.3], rec 0.2
+    remote_penalty: float = 0.8    # rp (§8.5)
+    kappa: float = 0.1             # unfairness bound as a fraction of C
+    max_overbook: float = 1.25     # cap on fungible-resource overbooking
+    fairness: Callable[[np.ndarray], float] = slot_fairness
+    use_priority: bool = True      # use the preferred-schedule priScore
+    use_packing: bool = True       # use pScore packing (else FIFO-ish)
+    use_srpt: bool = True
+    use_overbooking: bool = True
+    bundle_limit: int = 64         # max tasks matched per heartbeat
+    # dims the scheduler *checks* when fitting.  Tez/CP-style schedulers only
+    # know cores+memory (0, 1); ignoring network/disk over-allocates them,
+    # which the simulator charges back as a slowdown (Fig. 11 discussion).
+    fit_dims: tuple[int, ...] = (0, 1, 2, 3)
+
+
+class DeficitCounters:
+    """Bounded unfairness via deficit counters (§5, [64])."""
+
+    def __init__(self, shares: dict[int, float], capacity: float, kappa: float):
+        total = sum(shares.values()) or 1.0
+        self.share = {g: s / total for g, s in shares.items()}
+        self.deficit = {g: 0.0 for g in shares}
+        self.capacity = capacity
+        self.kappa = kappa
+
+    def most_deprived(self) -> tuple[int | None, float]:
+        if not self.deficit:
+            return None, 0.0
+        g = max(self.deficit, key=lambda g: self.deficit[g])
+        return g, self.deficit[g]
+
+    def must_serve(self) -> int | None:
+        g, d = self.most_deprived()
+        if g is not None and d >= self.kappa * self.capacity:
+            return g
+        return None
+
+    def allocated(self, group: int, weight: float) -> None:
+        for g in self.deficit:
+            self.deficit[g] += self.share[g] * weight
+        self.deficit[group] -= weight
+
+    def set_groups(self, shares: dict[int, float]) -> None:
+        total = sum(shares.values()) or 1.0
+        self.share = {g: s / total for g, s in shares.items()}
+        for g in shares:
+            self.deficit.setdefault(g, 0.0)
+        for g in list(self.deficit):
+            if g not in shares:
+                del self.deficit[g]
+
+    def jain_index(self, usage: dict[int, float]) -> float:
+        """Jain's fairness index over normalized usages (Table 4)."""
+        xs = np.array([usage.get(g, 0.0) / max(self.share[g], 1e-12) for g in self.share])
+        if xs.sum() <= 0:
+            return 1.0
+        return float(xs.sum() ** 2 / (len(xs) * (xs ** 2).sum()))
+
+
+class Matcher:
+    """FindAppropriateTasksForMachine (Fig. 8) with bundling."""
+
+    def __init__(self, cfg: MatcherConfig, capacity: float, shares: dict[int, float]):
+        self.cfg = cfg
+        self.deficits = DeficitCounters(shares, capacity, cfg.kappa)
+        self._ema_score = 1.0
+        self._ema_srpt = 1.0
+
+    @property
+    def eta(self) -> float:
+        if not self.cfg.use_srpt:
+            return 0.0
+        return self.cfg.eta_m * self._ema_score / max(self._ema_srpt, 1e-12)
+
+    def _observe(self, score: float, srpt: float) -> None:
+        a = 0.05
+        self._ema_score = (1 - a) * self._ema_score + a * score
+        self._ema_srpt = (1 - a) * self._ema_srpt + a * max(srpt, 1e-12)
+
+    def find_tasks_for_machine(
+        self,
+        machine_id: int,
+        avail: np.ndarray,
+        tasks: Sequence[PendingTask],
+        jobs: dict[int, JobView],
+    ) -> list[tuple[PendingTask, bool]]:
+        """Returns [(task, overbooked)] to start now on this machine.
+
+        Vectorized over candidates: each bundling iteration is a handful of
+        numpy ops on (n_tasks, d) arrays.
+        """
+        cfg = self.cfg
+        if not tasks:
+            return []
+        avail = avail.astype(np.float64).copy()
+        dem = np.stack([t.demand for t in tasks])           # (n, d)
+        pri = (np.array([t.pri_score for t in tasks])
+               if cfg.use_priority else np.ones(len(tasks)))
+        srpt = np.array([jobs[t.job_id].srpt for t in tasks])
+        grp = np.array([jobs[t.job_id].group for t in tasks])
+        rp = np.array([
+            cfg.remote_penalty if (t.locality >= 0 and t.locality != machine_id) else 1.0
+            for t in tasks
+        ])
+        fd = np.asarray(cfg.fit_dims)
+        rigid = np.asarray([r for r in RIGID if r in cfg.fit_dims], dtype=int)
+        fung = np.asarray([f for f in FUNGIBLE if f in cfg.fit_dims], dtype=int)
+        taken = np.zeros(len(tasks), dtype=bool)
+        picked: list[tuple[PendingTask, bool]] = []
+        while len(picked) < cfg.bundle_limit:
+            fits = (dem[:, fd] <= avail[fd] + 1e-9).all(axis=1)
+            if cfg.use_overbooking:
+                over = (~fits
+                        & ((dem[:, rigid] <= avail[rigid] + 1e-9).all(axis=1)
+                           if len(rigid) else True)
+                        & ((dem[:, fung] <= avail[fung] + (cfg.max_overbook - 1.0) + 1e-9)
+                           .all(axis=1) if len(fung) else True))
+            else:
+                over = np.zeros(len(tasks), dtype=bool)
+            eligible = (fits | over) & ~taken
+            must_group = self.deficits.must_serve()
+            if must_group is not None and (eligible & (grp == must_group)).any():
+                eligible &= grp == must_group
+            if not eligible.any():
+                break
+            if cfg.use_packing:
+                dot = dem @ np.clip(avail, 0.0, None) * rp
+            else:
+                dot = rp.copy()
+            if len(fung):
+                overshoot = np.clip((dem[:, fung] - avail[fung]).max(axis=1), 0.0, None)
+            else:
+                overshoot = np.zeros(len(tasks))
+            base = np.where(fits, dot, dot * np.maximum(1.0 - overshoot, 0.05))
+            perf = pri * base - self.eta * srpt
+            # lexicographic: any fitting task beats any overbooked one
+            pool = eligible & fits if (eligible & fits).any() else eligible
+            score = np.where(pool, perf, -np.inf)
+            i = int(np.argmax(score))
+            if not np.isfinite(score[i]):
+                break
+            t = tasks[i]
+            taken[i] = True
+            picked.append((t, bool(over[i])))
+            self._observe(float(pri[i] * base[i]), float(srpt[i]))
+            avail -= t.demand
+            np.clip(avail, 0.0, None, out=avail)
+            self.deficits.allocated(jobs[t.job_id].group, cfg.fairness(t.demand))
+        return picked

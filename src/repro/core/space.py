@@ -1,0 +1,177 @@
+"""Virtual resource-time space (paper §3, §4.2).
+
+The space has d+1 dimensions: d resources x time.  We discretize time into
+ticks and model `m` machines each with capacity 1.0 per resource, so a task
+placement is (machine, start_tick) with its demand subtracted over
+[start, start + dur_ticks).
+
+Coordinates handed to callers are *logical* ticks and may be negative
+(backward placement packs tasks before the anchor).  Physically the grid is
+a finite array with an origin offset; it grows on demand at either end —
+which is what makes placement dead-end-free (§4.3 then only has to argue
+about dependency consistency, never about running out of room).
+
+Placement primitives:
+  * earliest_fit(v, k, ready)  — forward placement (§4.2)
+  * latest_fit(v, k, deadline) — backward placement (§4.2)
+
+Both use a cumulative-sum trick to find runs of >=k feasible ticks in
+O(m*T) numpy work.  The `hint` of a previous placement of an identical task
+is a sound floor/ceiling for the search (the space only fills up within a
+pass), which makes placing a whole stage ~O(T) amortized.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Placement:
+    task: int
+    machine: int
+    start: int   # logical tick
+    end: int     # logical tick (exclusive)
+
+
+class Space:
+    def __init__(self, m: int, d: int, horizon: int, tick: float = 1.0):
+        self.m = int(m)
+        self.d = int(d)
+        self.tick = float(tick)
+        self.T = int(max(horizon, 8))        # physical grid length
+        self.off = 0                          # physical = logical + off
+        self.avail = np.ones((self.m, self.T, self.d), dtype=np.float32)
+        self.placements: list[Placement] = []
+        self._min_start: int | None = None   # logical
+        self._max_end: int | None = None     # logical
+
+    # ------------------------------------------------------------------
+    def clone(self) -> "Space":
+        s = Space.__new__(Space)
+        s.m, s.d, s.tick, s.T, s.off = self.m, self.d, self.tick, self.T, self.off
+        s.avail = self.avail.copy()
+        s.placements = list(self.placements)
+        s._min_start = self._min_start
+        s._max_end = self._max_end
+        return s
+
+    def _grow_back(self) -> None:
+        extra = np.ones((self.m, self.T, self.d), dtype=np.float32)
+        self.avail = np.concatenate([self.avail, extra], axis=1)
+        self.T = self.avail.shape[1]
+
+    def _grow_front(self) -> None:
+        grow = self.T
+        extra = np.ones((self.m, grow, self.d), dtype=np.float32)
+        self.avail = np.concatenate([extra, self.avail], axis=1)
+        self.off += grow
+        self.T = self.avail.shape[1]
+
+    # ------------------------------------------------------------------
+    def _fit_starts(self, v: np.ndarray, k: int, lo: int, hi: int):
+        """All (machine, logical t) fitting v over [t, t+k), lo <= t <= hi-k.
+
+        lo/hi are logical; caller guarantees they map inside the grid.
+        """
+        plo, phi = lo + self.off, hi + self.off
+        ok = (self.avail[:, plo:phi, :] >= v).all(axis=2)  # (m, phi-plo)
+        if k > 1:
+            c = np.cumsum(ok, axis=1, dtype=np.int32)
+            runs = c[:, k - 1 :].copy()
+            runs[:, 1:] -= c[:, : runs.shape[1] - 1]
+            good = runs == k
+        else:
+            good = ok
+        ms, ts = np.nonzero(good)
+        return ms, ts + lo
+
+    def _check_at(self, v: np.ndarray, k: int, t: int) -> int:
+        """Any machine fitting v at logical t, else -1."""
+        pt = t + self.off
+        if pt < 0 or pt + k > self.T:
+            return -1
+        ok = (self.avail[:, pt : pt + k, :] >= v).all(axis=(1, 2))
+        return int(np.argmax(ok)) if ok.any() else -1
+
+    def earliest_fit(self, v: np.ndarray, k: int, ready: int,
+                     hint: tuple[int, int] | None = None) -> tuple[int, int]:
+        """Earliest (machine, logical start >= ready) fitting v for k ticks."""
+        k = max(int(k), 1)
+        lo = int(ready)
+        if hint is not None and hint[1] >= ready:
+            lo = max(lo, hint[1])
+            m = self._check_at(v, k, hint[1])
+            if m >= 0:
+                return m, hint[1]
+        while True:
+            if lo + self.off < 0:
+                self._grow_front()
+                continue
+            if lo + self.off + k > self.T:
+                self._grow_back()
+                continue
+            hi = self.T - self.off  # logical end of grid
+            ms, ts = self._fit_starts(v, k, lo, hi)
+            if len(ts):
+                j = int(np.argmin(ts))
+                return int(ms[j]), int(ts[j])
+            self._grow_back()
+
+    def latest_fit(self, v: np.ndarray, k: int, deadline: int,
+                   hint: tuple[int, int] | None = None) -> tuple[int, int]:
+        """Latest (machine, logical start) with start + k <= deadline fitting v."""
+        k = max(int(k), 1)
+        hi = int(deadline)
+        if hint is not None and hint[1] + k <= deadline:
+            hi = min(hi, hint[1] + k)
+            m = self._check_at(v, k, hint[1])
+            if m >= 0:
+                return m, hint[1]
+        while True:
+            if hi + self.off > self.T:
+                self._grow_back()
+                continue
+            lo = -self.off  # logical start of grid
+            if hi - k < lo:
+                self._grow_front()
+                continue
+            ms, ts = self._fit_starts(v, k, lo, hi)
+            if len(ts):
+                j = int(np.argmax(ts))
+                return int(ms[j]), int(ts[j])
+            self._grow_front()
+
+    # ------------------------------------------------------------------
+    def commit(self, task: int, machine: int, start: int, k: int, v: np.ndarray) -> Placement:
+        k = max(int(k), 1)
+        ps = start + self.off
+        assert 0 <= ps and ps + k <= self.T, "commit outside grid"
+        self.avail[machine, ps : ps + k, :] -= v
+        if (self.avail[machine, ps : ps + k, :] < -1e-5).any():
+            raise RuntimeError("over-committed space")
+        p = Placement(task, machine, start, start + k)
+        self.placements.append(p)
+        self._min_start = start if self._min_start is None else min(self._min_start, start)
+        self._max_end = start + k if self._max_end is None else max(self._max_end, start + k)
+        return p
+
+    # ------------------------------------------------------------------
+    @property
+    def makespan_ticks(self) -> int:
+        if self._min_start is None:
+            return 0
+        return self._max_end - self._min_start
+
+    @property
+    def makespan(self) -> float:
+        return self.makespan_ticks * self.tick
+
+    def utilization(self) -> float:
+        """Fraction of resource-time used inside the occupied span."""
+        if self._min_start is None:
+            return 0.0
+        window = self.avail[:, self._min_start + self.off : self._max_end + self.off, :]
+        return float(1.0 - window.mean())

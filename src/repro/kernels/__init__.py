@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the compute hot-spots, each with:
+  kernel.py — pl.pallas_call + BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd wrapper with interpret fallback + shape plumbing
+  ref.py    — pure-jnp oracle used by tests and by the XLA model path
+"""

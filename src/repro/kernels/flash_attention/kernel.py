@@ -1,0 +1,122 @@
+"""Flash attention Pallas kernel (TPU target, validated in interpret mode).
+
+Tiling: grid = (batch, q_heads, Sq/BQ, Sk/BK) with the KV axis innermost —
+on TPU the innermost grid axis is sequential, so the online-softmax
+accumulators (m, l, acc) live in VMEM scratch across KV steps and the HBM
+traffic is exactly one read of Q/K/V tiles + one write of O per tile
+(flash-attention's memory bound).  The MXU sees (BQ x hd) @ (hd x BK) and
+(BQ x BK) @ (BK x hd) matmuls; BQ/BK default to 128 to match the 128x128
+systolic array, hd is the model's head_dim.
+
+GQA is handled in the K/V index_map (q-head h reads kv-head h // rep) —
+no repeated KV materialization.  Causal masking, sliding windows and
+logit soft-caps are fused into the tile loop; fully-masked tiles skip the
+matmuls via pl.when.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale: float, causal: bool, window: int | None,
+                 cap: float | None, bq: int, bk: int, n_kv_blocks: int):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _compute():
+        qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)          # (bk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if cap is not None:
+            s = cap * jnp.tanh(s / cap)
+        if causal:
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        if window is not None:
+            s = jnp.where((qpos - kpos) < window, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    # tiles that are fully masked (above the diagonal / outside the window)
+    # are skipped entirely
+    conds = []
+    if causal:
+        conds.append(iq * bq + bq - 1 >= ik * bk)
+    if window is not None:
+        conds.append((iq * bq) - (ik * bk + bk - 1) < window)
+    if conds:
+        live = functools.reduce(jnp.logical_and, conds)
+        pl.when(live)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    cap: float | None = None, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) -> (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    rep = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    n_q, n_k = Sq // bq, Sk // bk
+    # (B, S, H, hd) -> (B, H, S, hd) tile-friendly layout
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window, cap=cap,
+        bq=bq, bk=bk, n_kv_blocks=n_k)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, iq, ik, rep=rep: (b, h // rep, ik, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, iq, ik, rep=rep: (b, h // rep, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,28 @@
+"""Jit'd entry point: picks the Pallas kernel on TPU, interpret elsewhere."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from . import kernel, ref
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "cap", "scale",
+                                   "block_q", "block_k", "use_kernel"))
+def flash_attention(q, k, v, *, causal=True, window=None, cap=None, scale=None,
+                    block_q=128, block_k=128, use_kernel=True):
+    if not use_kernel:
+        return ref.attention(q, k, v, causal=causal, window=window, cap=cap,
+                             scale=scale)
+    return kernel.flash_attention(
+        q, k, v, causal=causal, window=window, cap=cap, scale=scale,
+        block_q=block_q, block_k=block_k, interpret=not _on_tpu())

@@ -1,0 +1,24 @@
+"""Jit'd entry: Pallas kernel on TPU, interpret elsewhere, ref fallback."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from . import kernel, ref
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+@partial(jax.jit, static_argnames=("chunk", "d_block", "use_kernel"))
+def rglru_scan(x, a, h0, *, chunk=256, d_block=128, use_kernel=True):
+    if not use_kernel:
+        return ref.rglru_scan(x, a, h0)
+    return kernel.rglru_scan(x, a, h0, chunk=chunk, d_block=d_block,
+                             interpret=not _on_tpu())

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the RG-LRU recurrence: sequential lax.scan."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def rglru_scan(x: jax.Array, a: jax.Array, h0: jax.Array):
+    """x, a: (B, S, D); h0: (B, D) -> (h (B,S,D), hT (B,D)).  fp32 math."""
+    xf, af = x.astype(jnp.float32), a.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, at = inp
+        h = at * h + xt
+        return h, h
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(af, 1, 0))
+    hT, hs = lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(hs, 0, 1).astype(x.dtype), hT

@@ -1,0 +1,91 @@
+"""RWKV6 WKV Pallas kernel (TPU target, validated in interpret mode).
+
+The WKV recurrence is elementwise-heavy (VPU work on TPU), and its cost on
+a naive lax.scan is dominated by HBM round-trips of the (B, H, N, N) state
+every timestep.  The kernel keeps the state in VMEM across a whole chunk:
+
+  grid = (B, H, S / CHUNK)   (chunk axis innermost -> sequential on TPU)
+  r/k/v/w tiles: (1, CHUNK, 1, N) VMEM blocks
+  state: (N, N) fp32 VMEM scratch persisting across chunk steps
+
+HBM traffic drops from O(S * N^2) to O(S * N + (S / CHUNK) * 0) — the state
+never leaves VMEM during the sequence (it is written back once at the end
+via the state output ref).  N is the RWKV head size (64): the (N, N)
+outer-product update uses VPU lanes; fp32 accumulation throughout.
+
+This is the TPU adaptation of the CUDA wkv kernels (which use shared
+memory per head the same way).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref,
+                state, *, chunk: int, n_chunks: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    u = u_ref[0].astype(jnp.float32)              # (N,)
+
+    def step(t, _):
+        r_t = r_ref[0, t, 0].astype(jnp.float32)  # (N,)
+        k_t = k_ref[0, t, 0].astype(jnp.float32)
+        v_t = v_ref[0, t, 0].astype(jnp.float32)
+        w_t = w_ref[0, t, 0].astype(jnp.float32)
+        kv = k_t[:, None] * v_t[None, :]          # (N, N)
+        y = (r_t[:, None] * (state[...] + u[:, None] * kv)).sum(axis=0)
+        y_ref[0, t, 0] = y.astype(y_ref.dtype)
+        state[...] = w_t[:, None] * state[...] + kv
+        return ()
+
+    lax.fori_loop(0, chunk, step, ())
+
+    @pl.when(ic == n_chunks - 1)
+    def _final():
+        sT_ref[0, 0] = state[...].astype(sT_ref.dtype)
+
+
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+         u: jax.Array, state: jax.Array, *, chunk: int = 128,
+         interpret: bool = True):
+    """r,k,v,w: (B,S,H,N); u: (H,N); state: (B,H,N,N) fp32.
+
+    Returns (y (B,S,H,N), final state (B,H,N,N)).
+    """
+    B, S, H, N = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+    kern = functools.partial(_wkv_kernel, chunk=chunk, n_chunks=n_chunks)
+    io_spec = pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, c, h, 0))
+    y, sT = pl.pallas_call(
+        kern,
+        grid=(B, H, n_chunks),
+        in_specs=[
+            io_spec, io_spec, io_spec, io_spec,
+            pl.BlockSpec((1, N), lambda b, h, c: (h, 0)),          # u
+            pl.BlockSpec((1, 1, N, N), lambda b, h, c: (b, h, 0, 0)),  # s0
+        ],
+        out_specs=[
+            io_spec,
+            pl.BlockSpec((1, 1, N, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, N), r.dtype),
+            jax.ShapeDtypeStruct((B, H, N, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, state)
+    return y, sT

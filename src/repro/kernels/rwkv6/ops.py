@@ -1,0 +1,24 @@
+"""Jit'd entry: Pallas WKV kernel on TPU, interpret elsewhere, ref fallback."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from . import kernel, ref
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+@partial(jax.jit, static_argnames=("chunk", "use_kernel"))
+def wkv6(r, k, v, w, u, state, *, chunk=128, use_kernel=True):
+    if not use_kernel:
+        return ref.wkv6(r, k, v, w, u, state)
+    return kernel.wkv6(r, k, v, w, u, state, chunk=chunk,
+                       interpret=not _on_tpu())

@@ -1,0 +1,95 @@
+"""Multi-job TPU-cluster gang scheduler (DESIGN.md L2 adaptation).
+
+The paper's online matcher schedules *jobs' stage executions* onto pod
+slices: a job = a DAG of stages (data prep -> train epochs -> eval ->
+export, or prefill/decode phases of a serving rollout), each stage = a
+gang-scheduled step program with a d-resource demand vector derived from
+its dry-run roofline (chips-fraction, HBM, HBM-bw-seconds, ICI-bw-seconds
+-> normalized per slice).
+
+This reuses the cluster simulator with machines = pod slices, which is how
+we validate scheduling policy at 1000+ node scale without hardware: the
+simulator *is* the control plane; on a real deployment the `start_task`
+callback launches `repro.launch.train` on the slice instead of advancing
+virtual time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from ..core.dag import DAG, from_stage_graph
+from ..sim.cluster import ClusterSim, SimConfig, scheme
+
+
+@dataclasses.dataclass
+class TPUJob:
+    """A training/serving job expressed as a stage DAG over slices."""
+
+    name: str
+    arch: str
+    stages: list[dict]        # {name, slices, seconds, hbm, hbm_bw, ici_bw, deps}
+    group: int = 0
+
+    def to_dag(self) -> DAG:
+        q, durs, dems, deps = [], [], [], []
+        for st in self.stages:
+            q.append(int(st.get("slices", 1)))
+            durs.append(float(st["seconds"]))
+            dems.append(np.clip(np.array([
+                st.get("chips", 0.5),
+                st.get("hbm", 0.5),
+                st.get("hbm_bw", 0.3),
+                st.get("ici_bw", 0.3),
+            ]), 0.01, 0.9))
+            deps.append(list(st.get("deps", [])))
+        return from_stage_graph(q, durs, dems, deps, name=self.name)
+
+
+def job_from_roofline(name: str, arch: str, dryrun_dir: str,
+                      steps: int = 100, group: int = 0) -> TPUJob:
+    """Build a train job whose stage profile comes from the dry-run
+    artifacts (§7.1 adapted: compiled-cost profiles instead of container
+    histories)."""
+    path = os.path.join(dryrun_dir, f"{arch}_train_4k_single.json")
+    secs, hbm_frac, bw, ici = 60.0, 0.5, 0.5, 0.3
+    if os.path.exists(path):
+        rec = json.load(open(path))
+        if "roofline" in rec:
+            rl = rec["roofline"]
+            step_s = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+            secs = step_s * steps
+            hbm_frac = min(rec["memory"]["peak_live_bytes"] / (16 * 2**30), 0.9)
+            total = step_s or 1.0
+            bw = min(rl["memory_s"] / total, 0.9)
+            ici = min(rl["collective_s"] / total, 0.9)
+    stages = [
+        dict(name="warmup", slices=1, seconds=30.0, chips=0.2, hbm=0.2,
+             hbm_bw=0.1, ici_bw=0.05, deps=[]),
+        dict(name="train", slices=1, seconds=secs, chips=0.9, hbm=hbm_frac,
+             hbm_bw=bw, ici_bw=ici, deps=[0]),
+        dict(name="eval", slices=1, seconds=secs * 0.1, chips=0.5,
+             hbm=hbm_frac * 0.7, hbm_bw=bw * 0.5, ici_bw=ici * 0.3, deps=[1]),
+        dict(name="export", slices=1, seconds=20.0, chips=0.1, hbm=0.3,
+             hbm_bw=0.6, ici_bw=0.05, deps=[2]),
+    ]
+    return TPUJob(name=name, arch=arch, stages=stages, group=group)
+
+
+def schedule_cluster(jobs: list[TPUJob], n_slices: int = 32,
+                     interarrival: float = 60.0, seed: int = 0,
+                     policy: str = "dagps"):
+    """Gang-schedule the jobs' stage DAGs onto pod slices with DAGPS."""
+    rng = np.random.default_rng(seed)
+    arrivals = []
+    t = 0.0
+    for j in jobs:
+        arrivals.append((t, j.to_dag(), j.group))
+        t += float(rng.exponential(interarrival))
+    cfg = SimConfig(n_machines=n_slices, seed=seed,
+                    build_machines=max(n_slices // 8, 2))
+    return ClusterSim(cfg, scheme(policy)).run(arrivals)

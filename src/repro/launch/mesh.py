@@ -1,0 +1,48 @@
+"""Production mesh construction.
+
+Single pod: 16x16 = 256 chips, axes (data, model).
+Multi-pod:  2x16x16 = 512 chips, axes (pod, data, model) — the pod axis is
+pure data parallelism across pods (gradient all-reduce crosses the slower
+inter-pod links; everything bandwidth-hungry stays inside a pod).
+
+Defined as functions so importing this module never touches jax device
+state (dryrun.py must set XLA_FLAGS before any jax initialization).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False, expert_axis: int = 0):
+    """expert_axis > 0 factorizes the in-pod model dimension as
+    (expert_axis x 16//expert_axis) — the few-expert MoE variant from
+    EXPERIMENTS.md §Perf iteration 6.  Chip count is unchanged."""
+    if expert_axis:
+        tp = 16 // expert_axis
+        shape = (2, 16, expert_axis, tp) if multi_pod else (16, expert_axis, tp)
+        axes = (("pod", "data", "expert", "model") if multi_pod
+                else ("data", "expert", "model"))
+        return jax.make_mesh(shape, axes)
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 1, n_model: int = 1):
+    """Tiny mesh for CPU tests (requires >= n_data*n_model local devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Axes that shard the batch: ('pod','data') on multi-pod meshes."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh, name) -> int:
+    if isinstance(name, (tuple, list)):
+        s = 1
+        for n in name:
+            s *= axis_size(mesh, n)
+        return s
+    return mesh.shape[name] if name in mesh.axis_names else 1

@@ -1,0 +1,202 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (see EXPERIMENTS.md
+§Roofline):
+
+  compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+  memory     = HLO_bytes_per_device / HBM_BW
+  collective = collective_bytes_per_device / ICI_BW
+
+cost_analysis() provides per-device FLOPs / bytes-accessed of the SPMD
+module.  Collective bytes are NOT in cost_analysis: we parse the compiled
+HLO text, sum the operand/result sizes of every collective op, and weight
+by the ring cost for its replica-group size:
+
+  all-gather      (n-1)/n * result
+  reduce-scatter  (n-1)   * result   (result is the scattered shard)
+  all-reduce      2(n-1)/n * result
+  all-to-all      (n-1)/n * result
+  collective-permute       result
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of 'bf16[4,128]' or a '(bf16[..], f32[..])' tuple."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:  # iota form [groups, group_size]<=[N]
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    m = re.search(r"replica_groups=\[(\d+)(?:,(\d+))+\]", line)
+    if m:
+        return int(line[m.start():m.end()].split(",")[1].rstrip("]"))
+    return n_devices
+
+
+def _permute_pairs(line: str) -> int:
+    m = re.search(r"source_target_pairs=\{(.*?)\}\}", line)
+    return 1  # permute cost is size regardless of pairs
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    total_bytes: float
+    count_by_kind: dict
+    top: list = dataclasses.field(default_factory=list)   # largest single ops
+
+    def to_json(self):
+        return {"bytes_by_kind": self.bytes_by_kind,
+                "count_by_kind": self.count_by_kind,
+                "total_bytes": self.total_bytes,
+                "top": self.top}
+
+
+_LINE_RE = re.compile(
+    r"= (.+?) (all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    bytes_by_kind: dict[str, float] = defaultdict(float)
+    count_by_kind: dict[str, int] = defaultdict(int)
+    tops: list = []
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = _LINE_RE.search(ls)
+        if not m:
+            continue
+        kind, suffix = m.group(2), m.group(3)
+        if suffix == "-done":
+            continue  # counted at -start (same transfer)
+        shapes = [_shape_bytes(s + "[" + d + "]")
+                  for s, d in _SHAPE_RE.findall(m.group(1))]
+        if not shapes:
+            continue
+        if suffix == "-start" and len(shapes) > 1:
+            # async form returns (operand, result): pick the true result
+            size = max(shapes) if kind == "all-gather" else (
+                min(shapes) if kind == "reduce-scatter" else shapes[-1])
+        else:
+            size = sum(shapes)
+        n = max(_group_size(ls, n_devices), 1)
+        if kind == "all-gather":
+            cost = size * (n - 1) / n
+        elif kind == "reduce-scatter":
+            cost = size * (n - 1)
+        elif kind == "all-reduce":
+            cost = 2 * size * (n - 1) / n
+        elif kind == "all-to-all":
+            cost = size * (n - 1) / n
+        else:  # collective-permute
+            cost = size
+        bytes_by_kind[kind] += cost
+        count_by_kind[kind] += 1
+        mm = re.search(r'op_name="([^"]{0,120})', ls)
+        tops.append((cost, kind, m.group(1)[:80], mm.group(1) if mm else ""))
+    tops.sort(reverse=True)
+    return CollectiveStats(dict(bytes_by_kind), float(sum(bytes_by_kind.values())),
+                           dict(count_by_kind),
+                           [dict(bytes=round(c), kind=k, shape=s, op=o)
+                            for c, k, s, o in tops[:12]])
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                  # per-device
+    bytes_accessed: float         # per-device
+    collective_bytes: float       # per-device (ring-weighted)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float            # 6*N*D (or 2*N*B for decode)
+    useful_ratio: float           # model_flops / (flops * n_devices)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful model flops-time / bound time (how close to roofline)."""
+        if self.bound_s <= 0:
+            return 0.0
+        ideal = self.model_flops / (PEAK_FLOPS * max(self.n_devices, 1))
+        return ideal / self.bound_s
+
+    n_devices: int = 1
+
+    def to_json(self):
+        return {
+            "flops_per_device": self.flops,
+            "bytes_per_device": self.bytes_accessed,
+            "collective_bytes_per_device": self.collective_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "n_devices": self.n_devices,
+        }
+
+
+def roofline_terms(cost: dict, collectives: CollectiveStats, n_devices: int,
+                   model_flops: float) -> Roofline:
+    flops = float(cost.get("flops", 0.0) or 0.0)
+    byts = float(cost.get("bytes accessed", 0.0) or 0.0)
+    cb = collectives.total_bytes
+    total_flops = flops * n_devices
+    return Roofline(
+        flops=flops, bytes_accessed=byts, collective_bytes=cb,
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=byts / HBM_BW,
+        collective_s=cb / ICI_BW,
+        model_flops=model_flops,
+        useful_ratio=(model_flops / total_flops) if total_flops else 0.0,
+        n_devices=n_devices,
+    )

@@ -1,0 +1,248 @@
+"""Sharding rules: param/optimizer/state/batch PartitionSpecs per mesh.
+
+Strategy (baseline; the §Perf loop iterates on this):
+  * batch over (pod, data); "pod" is pure DP across pods.
+  * tensor parallelism over "model": attention heads, MLP hidden, experts
+    (expert-parallel when n_experts divides the axis, expert-TP on d_ff
+    otherwise), vocab for embedding/logits.
+  * FSDP over "data": the non-"model" dim of every big matrix is sharded
+    over the data axis; optimizer state mirrors params leaf-for-leaf, so
+    ZeRO-style optimizer sharding falls out for free.
+  * every rule is guarded by divisibility: an axis that does not divide a
+    dim is dropped (e.g. kv_heads=4 < model=16 -> KV replicated; the KV
+    *cache* falls back to sequence sharding instead).
+
+`spec_for_path` is pure (path, shape) -> PartitionSpec, so the same rules
+apply to params, grads, adam m/v/master, and anything tree-shaped.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .mesh import axis_size, data_axes
+
+FSDP = "data"
+TP = "model"
+
+
+def tp_axes(mesh):
+    """The tensor-parallel axes: ('expert','model') on expert-factorized
+    meshes (a beyond-baseline variant for few-expert MoE), else 'model'."""
+    return ("expert", TP) if "expert" in mesh.axis_names else TP
+
+
+def _resolve(rule: tuple, mesh) -> tuple:
+    """Replace the TP sentinel with the mesh's actual TP axes."""
+    tpa = tp_axes(mesh)
+    if tpa == TP:
+        return rule
+    out = []
+    for r in rule:
+        if r == TP:
+            out.append(tpa)
+        elif isinstance(r, tuple):
+            out.append(tuple(tpa if a == TP else a for a in r))
+        else:
+            out.append(r)
+    return tuple(out)
+
+
+def _guard(spec: tuple, shape: tuple[int, ...], mesh) -> P:
+    """Drop axes that don't divide; never reuse a mesh axis twice."""
+    used: set[str] = set()
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        axes = tuple(a for a in axes if a in mesh.axis_names and a not in used)
+        size = axis_size(mesh, axes)
+        if size <= 1 or dim % size != 0:
+            # try a shrinking prefix (e.g. ('data','model') -> ('data',))
+            while axes and (axis_size(mesh, axes) <= 1 or dim % axis_size(mesh, axes) != 0):
+                axes = axes[:-1]
+        if not axes:
+            out.append(None)
+            continue
+        used.update(axes)
+        out.append(axes if len(axes) > 1 else axes[0])
+    return P(*out)
+
+
+# rules keyed by the *last named component* of the tree path;
+# each is a spec tuple for the leaf's trailing dims (leading stack dims in
+# scanned bodies are padded with None automatically).
+_PARAM_RULES: dict[str, tuple] = {
+    "embed":      (TP, FSDP),             # (V, d); musicgen (K, V, d) padded
+    "lm_head":    (FSDP, TP),             # (d, V); musicgen (K, d, V)
+    "patch_proj": (FSDP, TP),
+    "wq":         (FSDP, TP, None),       # (d, H, hd)
+    "wk":         (FSDP, TP, None),       # (d, KV, hd) — guard drops TP if KV<axis
+    "wv":         (FSDP, TP, None),
+    "wo":         (TP, None, FSDP),       # (H, hd, d)
+    "bq":         (TP, None),
+    "bk":         (TP, None),
+    "bv":         (TP, None),
+    "wg":         (FSDP, TP),             # mlp (d, f); moe (E, d, f) handled below
+    "wu":         (FSDP, TP),
+    "wd":         (TP, FSDP),             # mlp (f, d)
+    "w1":         (FSDP, TP),
+    "w2":         (TP, FSDP),
+    "b1":         (TP,),
+    "b2":         (None,),
+    "router":     (FSDP, None),           # (d, E)
+    # rwkv
+    "wr":         (FSDP, TP),
+    "cm_k":       (FSDP, TP),
+    "cm_v":       (TP, FSDP),
+    "cm_r":       (FSDP, TP),
+    "tm_a":       (FSDP, None),
+    "tm_b":       (None, None, FSDP),
+    "wd_a":       (FSDP, None),
+    "wd_b":       (None, FSDP),
+    # rglru
+    "w_in_x":     (FSDP, TP),
+    "w_in_g":     (FSDP, TP),
+    "w_out":      (TP, FSDP),
+    "conv_w":     (None, TP),
+    "conv_b":     (TP,),
+    "wa":         (TP, None),
+    "wx":         (TP, None),
+    "ba":         (None,),
+    "bx":         (None,),
+    "lam":        (TP,),
+}
+
+_MOE_3D = {"wg": (TP, FSDP, None), "wu": (TP, FSDP, None), "wd": (TP, None, FSDP)}
+_MOE_3D_FEW = {"wg": (None, FSDP, TP), "wu": (None, FSDP, TP), "wd": (None, TP, FSDP)}
+
+
+def spec_for_path(path: tuple, shape: tuple[int, ...], mesh,
+                  fsdp: bool = True) -> P:
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    leaf = names[-1]
+    rule = _PARAM_RULES.get(leaf)
+    moe_leaf = leaf in ("wg", "wu", "wd") and len(shape) >= 3 and "moe" in names
+    if moe_leaf:
+        E = shape[-3]
+        if "expert" in mesh.axis_names:
+            # expert-factorized mesh: experts on their own axis, f on model
+            rule = {"wg": ("expert", FSDP, TP), "wu": ("expert", FSDP, TP),
+                    "wd": ("expert", TP, FSDP)}[leaf]
+        else:
+            rule = _MOE_3D[leaf] if E % axis_size(mesh, TP) == 0 else _MOE_3D_FEW[leaf]
+    if rule is not None and not moe_leaf:
+        rule = _resolve(rule, mesh)
+    if rule is None:
+        return P()  # norms, scalars, step counters: replicated
+    if not fsdp:
+        # inference: TP-only, replicate over data axes (weights stay resident,
+        # no per-layer gathers on the latency path)
+        rule = tuple(None if r == FSDP else r for r in rule)
+    pad = len(shape) - len(rule)
+    spec = (None,) * pad + tuple(rule)
+    return _guard(spec, shape, mesh)
+
+
+def tree_shardings(tree: Any, mesh, fsdp: bool = True) -> Any:
+    """NamedSharding pytree matching `tree` (params / opt state / grads)."""
+
+    def f(path, leaf):
+        return NamedSharding(mesh, spec_for_path(path, leaf.shape, mesh, fsdp))
+
+    return jax.tree_util.tree_map_with_path(f, tree)
+
+
+# ----------------------------------------------------------------------
+# batch / decode-state shardings
+# ----------------------------------------------------------------------
+
+def batch_shardings(specs: dict, mesh) -> dict:
+    dp = data_axes(mesh)
+    out = {}
+    for k, v in specs.items():
+        spec = (dp,) + (None,) * (len(v.shape) - 1)
+        out[k] = NamedSharding(mesh, _guard(spec, v.shape, mesh))
+    return out
+
+
+def decode_state_spec(path: tuple, shape: tuple[int, ...], mesh, batch: int) -> P:
+    """KV caches (.., B, S, KV, hd) and recurrent states.
+
+    Heads are TP-sharded when they divide the axis; otherwise the cache is
+    sharded along the *sequence* (flash-decoding style).  Batch over dp
+    when divisible.
+    """
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    dp = data_axes(mesh)
+    leaf = names[-1]
+    if leaf in ("k", "v") and len(shape) >= 4:
+        B, S, KV, hd = shape[-4:]
+        kv_tp = KV % axis_size(mesh, TP) == 0
+        spec4 = (dp, None if kv_tp else TP, TP if kv_tp else None, None)
+        spec = (None,) * (len(shape) - 4) + spec4
+        return _guard(spec, shape, mesh)
+    if leaf == "s" and len(shape) >= 4:        # rwkv state (.., B, H, N, N)
+        spec = (None,) * (len(shape) - 4) + (dp, TP, None, None)
+        return _guard(spec, shape, mesh)
+    if leaf == "h" and len(shape) >= 2:        # rglru (.., B, dr)
+        spec = (None,) * (len(shape) - 2) + (dp, TP)
+        return _guard(spec, shape, mesh)
+    if leaf == "conv" and len(shape) >= 3:     # (.., B, W-1, dr)
+        spec = (None,) * (len(shape) - 3) + (dp, None, TP)
+        return _guard(spec, shape, mesh)
+    if leaf in ("x_tm", "rwkv_cm") and len(shape) >= 2:  # (.., B, d)
+        spec = (None,) * (len(shape) - 2) + (dp, TP)
+        return _guard(spec, shape, mesh)
+    # fallback: shard nothing
+    return P()
+
+
+def state_shardings(state_tree: Any, mesh, batch: int) -> Any:
+    def f(path, leaf):
+        return NamedSharding(mesh, decode_state_spec(path, leaf.shape, mesh, batch))
+
+    return jax.tree_util.tree_map_with_path(f, state_tree)
+
+
+def activation_rules(mesh, batch: int, n_kv: int | None = None,
+                     seq_shard: bool = True, embed_shard: bool = False) -> dict:
+    """Logical-name -> mesh-axis mapping for models.sharding.logical().
+
+    seq_shard=True gives Megatron-style sequence parallelism between
+    blocks: the residual stream (and hence the remat carries — the biggest
+    training-memory term) is sharded over the model axis; XLA inserts the
+    all-gather before attention and reduce-scatter after, which shows up
+    in the collective roofline term honestly.
+    """
+    dp = data_axes(mesh)
+    tpa = tp_axes(mesh)
+    kv_tp = n_kv is not None and n_kv % axis_size(mesh, tpa) == 0
+    rules = {
+        "batch": dp if batch % axis_size(mesh, dp) == 0 else None,
+        # recurrent archs shard the residual stream on the feature dim
+        # (channels are independent); attention archs shard the sequence
+        # (Megatron-SP).  Never both — logical() dedups per tensor.
+        "seq": tpa if (seq_shard and not embed_shard) else None,
+        "embed": tpa if embed_shard else None,
+        "vocab": tpa,
+        "heads": tpa,
+        "kv_seq": None if kv_tp else tpa,
+        "expert": "expert" if "expert" in mesh.axis_names else TP,
+        "capacity": tpa,
+        "ffn": TP,
+        # MoE dispatch groups cover the whole (data x model) grid; the
+        # buffer between dispatch and the expert einsum keeps only the
+        # data-axis part on its group dim (the TP part moves to experts)
+        "moe_group": ((dp if batch % axis_size(mesh, dp) == 0 else ())
+                      + (tpa if isinstance(tpa, tuple) else (tpa,))),
+        "moe_batch": dp if batch % axis_size(mesh, dp) == 0 else None,
+    }
+    return rules

@@ -1,0 +1,1 @@
+"""Model substrate: layers + assembled decoder architectures."""

@@ -1,0 +1,713 @@
+"""Model building blocks, pure JAX (jnp + lax), scan/shard friendly.
+
+Covers every sub-block the assigned architecture pool needs:
+  * RMSNorm / LayerNorm (gemma-style (1+w) scaling supported)
+  * RoPE, M-RoPE (qwen2-vl), sinusoidal positions (musicgen)
+  * GQA attention with sliding window + logit softcap, chunked
+    (online-softmax / flash-structured) for long sequences — the XLA path;
+    the Pallas kernel in repro.kernels is the TPU-optimized drop-in.
+  * SwiGLU / GeLU MLPs
+  * Mixture-of-Experts with sort-based capacity dispatch (deepseek/mixtral)
+  * RWKV6 (Finch) time-mix with data-dependent decay + channel-mix
+  * RG-LRU recurrent block (RecurrentGemma/Griffin)
+
+Every function is functional: params in, activations out.  Decode variants
+take and return explicit state (KV cache / recurrent state).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .sharding import logical
+
+Params = dict
+DEFAULT_QUERY_CHUNK = 1024
+
+
+# ----------------------------------------------------------------------
+# norms & activations
+# ----------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6, plus_one: bool = False) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * lax.rsqrt(var + eps)
+    scale = (1.0 + w) if plus_one else w
+    return (x * scale).astype(dtype)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return ((x - mu) * lax.rsqrt(var + eps) * w + b).astype(dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return cap * jnp.tanh(x / cap)
+
+
+# ----------------------------------------------------------------------
+# positions
+# ----------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 1e4,
+               mrope_sections: tuple[int, ...] | None = None) -> jax.Array:
+    """x: (B, S, H, hd).  positions: (B, S) or (3, B, S) for M-RoPE."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    if mrope_sections is None:
+        angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    else:
+        # M-RoPE: split the hd/2 frequency slots into (t, h, w) sections,
+        # each driven by its own position stream (qwen2-vl §M-RoPE).
+        assert positions.ndim == 3 and positions.shape[0] == len(mrope_sections)
+        parts = []
+        off = 0
+        for sec, pos in zip(mrope_sections, positions):
+            parts.append(pos[..., None].astype(jnp.float32) * freqs[off : off + sec])
+            off += sec
+        angles = jnp.concatenate(parts, axis=-1)  # (B,S,hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(S: int, d: int, offset: int = 0) -> jax.Array:
+    pos = jnp.arange(offset, offset + S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((S, d), dtype=jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe
+
+
+# ----------------------------------------------------------------------
+# attention (GQA, windowed, softcapped; chunked online-softmax)
+# ----------------------------------------------------------------------
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return k
+    B, S, KV, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (B, S, KV, n_rep, hd)).reshape(B, S, KV * n_rep, hd)
+
+
+def attention(
+    q: jax.Array,               # (B, Sq, H, hd)
+    k: jax.Array,               # (B, Sk, KV, hd)
+    v: jax.Array,               # (B, Sk, KV, hd)
+    *,
+    causal: bool = True,
+    q_offset: int | jax.Array = 0,   # absolute position of q[0]
+    window: int | None = None,
+    cap: float | None = None,
+    scale: float | None = None,
+    query_chunk: int = DEFAULT_QUERY_CHUNK,
+) -> jax.Array:
+    """Chunked attention with online softmax over query blocks.
+
+    Memory is O(Sq_chunk * Sk) instead of O(Sq * Sk): the XLA analogue of
+    flash attention's outer loop (the Pallas kernel tiles the inner loop
+    too).  Equivalent math to naive softmax(QK^T)V.
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    n_rep = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    kf = _repeat_kv(k, n_rep)
+    vf = _repeat_kv(v, n_rep)
+    Sk = kf.shape[1]
+    kpos = jnp.arange(Sk)
+
+    def one_chunk(q_chunk: jax.Array, qpos_chunk: jax.Array) -> jax.Array:
+        # q_chunk: (B, C, H, hd); logits (B, H, C, Sk) in f32
+        logits = jnp.einsum("bchd,bshd->bhcs", q_chunk.astype(jnp.float32),
+                            kf.astype(jnp.float32)) * scale
+        if cap is not None:
+            logits = softcap(logits, cap)
+        mask = jnp.ones((q_chunk.shape[1], Sk), dtype=bool)
+        if causal:
+            mask &= qpos_chunk[:, None] >= kpos[None, :]
+        if window is not None:
+            mask &= qpos_chunk[:, None] - kpos[None, :] < window
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhcs,bshd->bchd", probs, vf.astype(jnp.float32))
+        return out.astype(q.dtype)
+
+    if Sq <= query_chunk:
+        qpos = q_offset + jnp.arange(Sq)
+        return one_chunk(q, qpos)
+    while Sq % query_chunk != 0:
+        query_chunk //= 2  # e.g. 4352 = 4096 + 256 patches -> 256
+    n_chunks = Sq // query_chunk
+    qr = q.reshape(B, n_chunks, query_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    qpos = (q_offset + jnp.arange(Sq)).reshape(n_chunks, query_chunk)
+    out = lax.map(lambda args: one_chunk(*args), (qr, qpos))
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, hd)
+
+
+@dataclasses.dataclass
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 1e4
+    mrope_sections: tuple[int, ...] | None = None
+    window: int | None = None
+    cap: float | None = None
+    qkv_bias: bool = False
+    use_rope: bool = True
+    query_scale: float | None = None
+
+
+def attn_init(rng: jax.Array, cfg: AttnConfig, dtype=jnp.bfloat16) -> Params:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "wq": (jax.random.normal(k1, (d, H, hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(k2, (d, KV, hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(k3, (d, KV, hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(k4, (H, hd, d)) * s / math.sqrt(H * hd / d)).astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dtype)
+        p["bk"] = jnp.zeros((KV, hd), dtype)
+        p["bv"] = jnp.zeros((KV, hd), dtype)
+    return p
+
+
+def attn_forward(
+    p: Params, x: jax.Array, cfg: AttnConfig, positions: jax.Array,
+    query_chunk: int = DEFAULT_QUERY_CHUNK,
+) -> jax.Array:
+    """Full-sequence causal attention (training / prefill)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    o = attention(q, k, v, causal=True, window=cfg.window, cap=cfg.cap,
+                  scale=cfg.query_scale, query_chunk=query_chunk)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def attn_prefill(p: Params, x: jax.Array, cfg: AttnConfig, positions: jax.Array,
+                 query_chunk: int = DEFAULT_QUERY_CHUNK):
+    """Like forward but also returns the KV cache."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    o = attention(q, k, v, causal=True, window=cfg.window, cap=cfg.cap,
+                  scale=cfg.query_scale, query_chunk=query_chunk)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), {"k": k, "v": v}
+
+
+def attn_decode(
+    p: Params, x: jax.Array, cfg: AttnConfig, cache: Params, pos: jax.Array,
+) -> tuple[jax.Array, Params]:
+    """One-token decode: x (B, 1, d), cache {k,v}: (B, S, KV, hd), pos (B,).
+
+    If the cache is smaller than the absolute position (sliding-window
+    layers keep only `window` slots) it is treated as a ring buffer: slots
+    are recycled mod S, and every slot is valid once the ring has wrapped.
+    RoPE is applied at absolute positions before writing, so recycled slots
+    remain correct.
+    """
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.use_rope:
+        pp = pos[:, None]
+        if cfg.mrope_sections is not None:
+            pp = jnp.broadcast_to(pp[None], (len(cfg.mrope_sections), B, 1))
+        q = apply_rope(q, pp, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_rope(k, pp, cfg.rope_theta, cfg.mrope_sections)
+    S = cache["k"].shape[1]
+    ring = cfg.window is not None and S <= cfg.window
+    wpos = pos % S if ring else pos
+    # scatter-update one slot per row: aliasable with the donated cache
+    # buffer (a one-hot blend rewrites the whole cache and forces a second
+    # live copy -- EXPERIMENTS.md §Perf iteration 7)
+    rows = jnp.arange(cache["k"].shape[0])
+    newk = cache["k"].at[rows, wpos].set(k[:, 0].astype(cache["k"].dtype))
+    newv = cache["v"].at[rows, wpos].set(v[:, 0].astype(cache["v"].dtype))
+    kpos = jnp.arange(S)
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    kf = _repeat_kv(newk, H // KV)
+    vf = _repeat_kv(newv, H // KV)
+    kf = logical(kf, "batch", "kv_seq", "heads", None)
+    vf = logical(vf, "batch", "kv_seq", "heads", None)
+    scale = cfg.query_scale if cfg.query_scale is not None else 1.0 / math.sqrt(cfg.head_dim)
+    logits = jnp.einsum("bchd,bshd->bhcs", q.astype(jnp.float32), kf.astype(jnp.float32)) * scale
+    if cfg.cap is not None:
+        logits = softcap(logits, cfg.cap)
+    if ring:
+        # slot valid if already written: index <= pos, or ring has wrapped
+        mask = (kpos[None, :] <= pos[:, None]) | (pos[:, None] >= S)
+    else:
+        mask = kpos[None, :] <= pos[:, None]
+        if cfg.window is not None:
+            mask &= kpos[None, :] > pos[:, None] - cfg.window
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhcs,bshd->bchd", probs, vf.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, {"k": newk, "v": newv}
+
+
+# ----------------------------------------------------------------------
+# MLPs
+# ----------------------------------------------------------------------
+
+def mlp_init(rng: jax.Array, d: int, f: int, kind: str = "swiglu", dtype=jnp.bfloat16) -> Params:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "wg": (jax.random.normal(k1, (d, f)) * s_in).astype(dtype),
+            "wu": (jax.random.normal(k2, (d, f)) * s_in).astype(dtype),
+            "wd": (jax.random.normal(k3, (f, d)) * s_out).astype(dtype),
+        }
+    return {  # plain 2-layer MLP (musicgen)
+        "w1": (jax.random.normal(k1, (d, f)) * s_in).astype(dtype),
+        "b1": jnp.zeros((f,), dtype),
+        "w2": (jax.random.normal(k2, (f, d)) * s_out).astype(dtype),
+        "b2": jnp.zeros((d,), dtype),
+    }
+
+
+def mlp_forward(p: Params, x: jax.Array, kind: str = "swiglu") -> jax.Array:
+    if kind == "swiglu":
+        return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+    if kind == "geglu":
+        return (jax.nn.gelu(x @ p["wg"], approximate=True) * (x @ p["wu"])) @ p["wd"]
+    h = jax.nn.gelu(x @ p["w1"] + p["b1"], approximate=True)
+    return h @ p["w2"] + p["b2"]
+
+
+# ----------------------------------------------------------------------
+# Mixture-of-Experts with sort-based capacity dispatch
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+    router_mode: str = "softmax_topk"   # deepseek: softmax then topk
+                                        # mixtral: "topk_softmax"
+
+
+def moe_init(rng: jax.Array, d: int, cfg: MoEConfig, dtype=jnp.bfloat16) -> Params:
+    E, f = cfg.n_experts, cfg.d_expert
+    k1, k2, k3, k4, k5 = jax.random.split(rng, 5)
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    p = {
+        "router": (jax.random.normal(k1, (d, E)) * s_in).astype(jnp.float32),
+        "wg": (jax.random.normal(k2, (E, d, f)) * s_in).astype(dtype),
+        "wu": (jax.random.normal(k3, (E, d, f)) * s_in).astype(dtype),
+        "wd": (jax.random.normal(k4, (E, f, d)) * s_out).astype(dtype),
+    }
+    if cfg.n_shared:
+        p["shared"] = mlp_init(k5, d, cfg.d_expert * cfg.n_shared, "swiglu", dtype)
+    return p
+
+
+def _axis_prod(mesh, ax) -> int:
+    if ax is None:
+        return 1
+    axes = ax if isinstance(ax, (tuple, list)) else (ax,)
+    g = 1
+    for a in axes:
+        g *= mesh.shape[a] if a in mesh.axis_names else 1
+    return g
+
+
+def _moe_groups(B: int, S: int) -> tuple[int, int]:
+    """(batch-groups, seq-groups) for dispatch.
+
+    Groups cover the *full device grid* (data x model axes) so that
+    routing, sorting and capacity-dropping are device-local; the only
+    model-axis crossing is then the (G, E, C, d) buffer <-> expert-sharded
+    einsum — the honest EP all-to-all — instead of fp32 gradients of the
+    whole gathered token tensor (see EXPERIMENTS.md §Perf iteration 1).
+    """
+    from .sharding import current_mesh, current_rules
+
+    mesh, rules = current_mesh(), current_rules()
+    if mesh is None or rules is None:
+        return 1, 1
+    g1 = _axis_prod(mesh, rules.get("batch"))
+    if "expert" in mesh.axis_names:
+        # expert-factorized mesh: the buffer crosses into the expert axis by
+        # slicing (free); folding TP devices into dispatch groups would make
+        # the group->expert transition unpartitionable (refuted variant,
+        # EXPERIMENTS.md §Perf iteration 6)
+        g2 = 1
+    else:
+        g2 = _axis_prod(mesh, rules.get("capacity"))  # the TP axis
+    if B % max(g1, 1) != 0 or g1 <= 0:
+        g1 = 1
+    if S % max(g2, 1) != 0 or g2 <= 0:
+        g2 = 1
+    return g1, g2
+
+
+def _group_axes(G1: int, G2: int):
+    """Mesh axis names backing the dispatch-group dim (for shard_map specs)."""
+    from .sharding import current_rules
+
+    rules = current_rules() or {}
+    axes: tuple = ()
+    if G1 > 1:
+        ba = rules.get("batch")
+        axes += tuple(ba) if isinstance(ba, (tuple, list)) else ((ba,) if ba else ())
+    if G2 > 1:
+        ta = rules.get("capacity")
+        axes += tuple(ta) if isinstance(ta, (tuple, list)) else ((ta,) if ta else ())
+    return axes
+
+
+def moe_forward(p: Params, x: jax.Array, cfg: MoEConfig) -> jax.Array:
+    """Token-dropping MoE: device-local dispatch + EP all-to-all.
+
+    Dispatch groups tile the full (data x model) device grid.  Routing,
+    sorting, capacity dropping, gather and the combine scatter run inside
+    shard_map — guaranteed device-local, no partitioner guessing (pure-pjit
+    dispatch replicated the gather indices at (G, T*K, d) u32 and
+    all-reduced fp32 gradients of the gathered tokens; see EXPERIMENTS.md
+    §Perf iteration 1-2).  Only the (G, E, C, d) capacity buffer crosses
+    the model axis, into the expert-sharded einsum and back: the honest EP
+    all-to-all, in bf16, once forward and once backward.
+    """
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from .sharding import current_mesh
+
+    B, S, d = x.shape
+    T = B * S
+    E, K = cfg.n_experts, cfg.top_k
+    G1, G2 = _moe_groups(B, S)
+    G = G1 * G2
+    Tg = T // G
+    C = int(math.ceil(Tg * K / E * cfg.capacity_factor))
+    if G2 > 1:
+        # (B, S, d) -> (G1, B/G1, G2, S/G2, d) -> (G, Tg, d): groups line up
+        # with the (data, model) device grid
+        xg = x.reshape(G1, B // G1, G2, S // G2, d)
+        xg = xg.transpose(0, 2, 1, 3, 4).reshape(G, Tg, d)
+    else:
+        xg = x.reshape(G, Tg, d)
+    router = p["router"].astype(jnp.float32)
+
+    def dispatch(xg_blk: jax.Array, router_blk: jax.Array):
+        """(g, Tg, d) -> buffer (g, E, C, d) + combine metadata. Local."""
+        g = xg_blk.shape[0]
+        logits = jnp.einsum("gtd,de->gte", xg_blk.astype(jnp.float32), router_blk)
+        if cfg.router_mode == "softmax_topk":
+            probs = jax.nn.softmax(logits, axis=-1)
+            w, idx = lax.top_k(probs, K)
+            w = w / jnp.clip(w.sum(-1, keepdims=True), 1e-9)
+        else:  # topk_softmax (mixtral)
+            lw, idx = lax.top_k(logits, K)
+            w = jax.nn.softmax(lw, axis=-1)
+        flat_e = idx.reshape(g, Tg * K)
+        flat_t = jnp.broadcast_to(jnp.repeat(jnp.arange(Tg), K)[None], (g, Tg * K))
+        flat_w = w.reshape(g, Tg * K)
+        order = jnp.argsort(flat_e, axis=1, stable=True)
+        se = jnp.take_along_axis(flat_e, order, axis=1)
+        st = jnp.take_along_axis(flat_t, order, axis=1)
+        sw = jnp.take_along_axis(flat_w, order, axis=1)
+        counts = jax.vmap(lambda e: jnp.bincount(e, length=E))(se)
+        starts = jnp.concatenate(
+            [jnp.zeros((g, 1), counts.dtype), jnp.cumsum(counts, axis=1)[:, :-1]],
+            axis=1)
+        pos = jnp.arange(Tg * K)[None] - jnp.take_along_axis(starts, se, axis=1)
+        keep = pos < C
+        buf_idx = jnp.where(keep, se * C + pos, E * C)
+        gathered = jnp.take_along_axis(xg_blk, st[..., None], axis=1)
+        xb = jnp.zeros((g, E * C + 1, d), dtype=xg_blk.dtype)
+        xb = jax.vmap(lambda b, i, v: b.at[i].set(v))(xb, buf_idx, gathered)
+        sw_eff = jnp.where(keep, sw, 0.0).astype(xg_blk.dtype)
+        return (xb[:, : E * C].reshape(g, E, C, d), st, sw_eff,
+                buf_idx.astype(jnp.int32))
+
+    def combine(yb_blk: jax.Array, st: jax.Array, sw: jax.Array,
+                buf_idx: jax.Array) -> jax.Array:
+        """(g, E, C, d) expert outputs -> (g, Tg, d). Local scatter-add."""
+        g = yb_blk.shape[0]
+        ybf = jnp.concatenate(
+            [yb_blk.reshape(g, E * C, d),
+             jnp.zeros((g, 1, d), yb_blk.dtype)], axis=1)
+        contrib = jnp.take_along_axis(ybf, buf_idx[..., None], axis=1)
+        contrib = contrib * sw[..., None]
+        out = jnp.zeros((g, Tg, d), jnp.float32)
+        out = jax.vmap(lambda o, i, v: o.at[i].add(v))(
+            out, st, contrib.astype(jnp.float32))
+        return out.astype(yb_blk.dtype)
+
+    mesh = current_mesh()
+    gaxes = _group_axes(G1, G2)
+    if mesh is not None and G > 1 and gaxes:
+        gspec = gaxes if len(gaxes) > 1 else gaxes[0]
+        d_in = (P(gspec, None, None), P(None, None))
+        d_out = (P(gspec, None, None, None), P(gspec, None), P(gspec, None),
+                 P(gspec, None))
+        xb, st, sw, bidx = shard_map(
+            dispatch, mesh=mesh, in_specs=d_in, out_specs=d_out,
+            check_vma=False)(xg, router)
+    else:
+        xb, st, sw, bidx = dispatch(xg, router)
+    # expert compute under pjit: the buffer reshards group->expert here
+    xb = logical(xb, "moe_batch", "expert", None, None)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xb, p["wg"])) * jnp.einsum(
+        "gecd,edf->gecf", xb, p["wu"])
+    h = logical(h, "moe_batch", "expert", None, "ffn")
+    yb = jnp.einsum("gecf,efd->gecd", h, p["wd"])
+    yb = logical(yb, "moe_batch", "expert", None, None)
+    if mesh is not None and G > 1 and gaxes:
+        c_in = (P(gspec, None, None, None), P(gspec, None), P(gspec, None),
+                P(gspec, None))
+        out = shard_map(combine, mesh=mesh, in_specs=c_in,
+                        out_specs=P(gspec, None, None),
+                        check_vma=False)(yb, st, sw, bidx)
+    else:
+        out = combine(yb, st, sw, bidx)
+    if "shared" in p:
+        out = out + mlp_forward(p["shared"], xg, "swiglu")
+    if G2 > 1:
+        out = out.reshape(G1, G2, B // G1, S // G2, d).transpose(0, 2, 1, 3, 4)
+    return out.reshape(B, S, d)
+
+
+# ----------------------------------------------------------------------
+# RWKV6 (Finch): time-mix with data-dependent decay + channel-mix
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RWKVConfig:
+    d_model: int
+    n_heads: int            # head size = d_model // n_heads (usually 64)
+    d_ff: int
+    lora_rank: int = 64
+
+    @property
+    def head_size(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def rwkv_init(rng: jax.Array, cfg: RWKVConfig, dtype=jnp.bfloat16) -> Params:
+    d, r = cfg.d_model, cfg.lora_rank
+    ks = jax.random.split(rng, 16)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        # token-shift mixing coefficients (static part) for r,k,v,g,w
+        "mu": (jax.random.uniform(ks[0], (5, d)) * 0.5 + 0.25).astype(jnp.float32),
+        # data-dependent token-shift LoRA (shared A, per-stream B)
+        "tm_a": (jax.random.normal(ks[1], (d, 5 * 32)) * s).astype(dtype),
+        "tm_b": (jax.random.normal(ks[2], (5, 32, d)) * 0.01).astype(dtype),
+        "wr": (jax.random.normal(ks[3], (d, d)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[4], (d, d)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[5], (d, d)) * s).astype(dtype),
+        "wg": (jax.random.normal(ks[6], (d, d)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[7], (d, d)) * s).astype(dtype),
+        # decay: w = exp(-exp(w0 + lora(x)))
+        "w0": (jax.random.uniform(ks[8], (d,)) * -1.0 - 5.0).astype(jnp.float32),
+        "wd_a": (jax.random.normal(ks[9], (d, r)) * s).astype(dtype),
+        "wd_b": (jax.random.normal(ks[10], (r, d)) * 0.01).astype(dtype),
+        "u": (jax.random.uniform(ks[11], (d,)) * 0.5).astype(jnp.float32),  # bonus
+        "ln_w": jnp.ones((d,), jnp.float32),   # per-head group norm
+        "cm_mu": (jax.random.uniform(ks[12], (2, d)) * 0.5 + 0.25).astype(jnp.float32),
+        "cm_k": (jax.random.normal(ks[13], (d, cfg.d_ff)) * s).astype(dtype),
+        "cm_v": (jax.random.normal(ks[14], (cfg.d_ff, d)) * (1.0 / math.sqrt(cfg.d_ff))).astype(dtype),
+        "cm_r": (jax.random.normal(ks[15], (d, d)) * s).astype(dtype),
+    }
+    return p
+
+
+def _rwkv_streams(p: Params, x: jax.Array, x_prev: jax.Array):
+    """Token-shift mixed streams (r, k, v, g, w) per RWKV6.
+
+    x: (B, S, d); x_prev: x shifted right by one (with carry for decode).
+    """
+    delta = (x_prev - x).astype(jnp.float32)
+    tm = jnp.tanh(x.astype(jnp.float32) @ p["tm_a"].astype(jnp.float32))
+    tm = tm.reshape(*x.shape[:-1], 5, 32)
+    dyn = jnp.einsum("...ni,nid->...nd", tm, p["tm_b"].astype(jnp.float32))
+    mixed = x[..., None, :].astype(jnp.float32) + delta[..., None, :] * (
+        p["mu"] + dyn)  # (..., 5, d)
+    return [mixed[..., i, :] for i in range(5)]
+
+
+def rwkv_time_mix(p: Params, x: jax.Array, cfg: RWKVConfig,
+                  x_carry: jax.Array | None = None,
+                  state: jax.Array | None = None,
+                  wkv_fn=None):
+    """RWKV6 attention-free mixer.
+
+    x: (B, S, d).  Returns (out, (new_x_carry, new_state)).
+    state: (B, H, N, N) wkv state; x_carry: (B, d) last token of prev chunk.
+    """
+    B, S, d = x.shape
+    H, N = cfg.n_heads, cfg.head_size
+    if x_carry is None:
+        x_carry = jnp.zeros((B, d), x.dtype)
+    x_prev = jnp.concatenate([x_carry[:, None, :], x[:, :-1, :]], axis=1)
+    xr, xk, xv, xg, xw = _rwkv_streams(p, x, x_prev)
+    dt = x.dtype
+    r = (xr.astype(dt) @ p["wr"]).reshape(B, S, H, N)
+    k = (xk.astype(dt) @ p["wk"]).reshape(B, S, H, N)
+    v = (xv.astype(dt) @ p["wv"]).reshape(B, S, H, N)
+    g = jax.nn.silu(xg.astype(dt) @ p["wg"])
+    wlog = p["w0"] + (jnp.tanh(xw.astype(dt) @ p["wd_a"]).astype(jnp.float32)
+                      @ p["wd_b"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(wlog)).reshape(B, S, H, N)  # decay in (0,1)
+    u = p["u"].reshape(H, N)
+    if state is None:
+        state = jnp.zeros((B, H, N, N), jnp.float32)
+    if wkv_fn is None:
+        from ..kernels.rwkv6 import ref as _ref
+        from functools import partial as _partial
+        # chunked time scan: remat per chunk bounds backward memory
+        wkv_fn = _partial(_ref.wkv6, chunk=128 if S % 128 == 0 and S > 128 else None)
+    r = logical(r, "batch", None, "heads", None)
+    k = logical(k, "batch", None, "heads", None)
+    v = logical(v, "batch", None, "heads", None)
+    w = logical(w, "batch", None, "heads", None)
+    state = logical(state, "batch", "heads", None, None)
+    y, new_state = wkv_fn(r, k, v, w, u, state)  # (B,S,H,N), (B,H,N,N)
+    y = y.reshape(B, S, H, N)
+    # per-head group norm
+    y = rms_norm(y, p["ln_w"].reshape(H, N), eps=1e-5)
+    y = y.reshape(B, S, d) * g
+    out = y.astype(dt) @ p["wo"]
+    return out, (x[:, -1, :], new_state)
+
+
+def rwkv_channel_mix(p: Params, x: jax.Array, x_carry: jax.Array | None = None):
+    """RWKV channel-mix FFN with token shift. Returns (out, new_carry)."""
+    B, S, d = x.shape
+    if x_carry is None:
+        x_carry = jnp.zeros((B, d), x.dtype)
+    x_prev = jnp.concatenate([x_carry[:, None, :], x[:, :-1, :]], axis=1)
+    mu = p["cm_mu"]
+    xk = x + (x_prev - x) * mu[0].astype(x.dtype)
+    xr = x + (x_prev - x) * mu[1].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_k"]))
+    out = jax.nn.sigmoid(xr @ p["cm_r"]) * (kk @ p["cm_v"])
+    return out, x[:, -1, :]
+
+
+# ----------------------------------------------------------------------
+# RG-LRU recurrent block (RecurrentGemma / Griffin)
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RGLRUConfig:
+    d_model: int
+    d_rnn: int
+    conv_width: int = 4
+    c: float = 8.0
+
+
+def rglru_init(rng: jax.Array, cfg: RGLRUConfig, dtype=jnp.bfloat16) -> Params:
+    d, dr = cfg.d_model, cfg.d_rnn
+    ks = jax.random.split(rng, 7)
+    s = 1.0 / math.sqrt(d)
+    # Lambda init so that a ~ U(0.9, 0.999)^c-ish (griffin init)
+    lam = jnp.log(jnp.expm1(-jnp.log(jax.random.uniform(ks[0], (dr,)) * 0.099 + 0.9) / cfg.c))
+    return {
+        "w_in_x": (jax.random.normal(ks[1], (d, dr)) * s).astype(dtype),
+        "w_in_g": (jax.random.normal(ks[2], (d, dr)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[3], (cfg.conv_width, dr)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "wa": (jax.random.normal(ks[4], (dr, dr)) * (1.0 / math.sqrt(dr))).astype(dtype),
+        "ba": jnp.zeros((dr,), jnp.float32),
+        "wx": (jax.random.normal(ks[5], (dr, dr)) * (1.0 / math.sqrt(dr))).astype(dtype),
+        "bx": jnp.zeros((dr,), jnp.float32),
+        "lam": lam.astype(jnp.float32),
+        "w_out": (jax.random.normal(ks[6], (dr, d)) * (1.0 / math.sqrt(dr))).astype(dtype),
+    }
+
+
+def rglru_scan(x: jax.Array, a: jax.Array, h0: jax.Array) -> jax.Array:
+    """h_t = a_t * h_{t-1} + x_t via associative scan over S. x,a: (B,S,D)."""
+
+    def combine(c1, c2):
+        a1, x1 = c1
+        a2, x2 = c2
+        return a1 * a2, x1 * a2 + x2
+
+    a0 = jnp.concatenate([jnp.ones_like(a[:, :1]), a[:, 1:]], axis=1)
+    # fold h0 into the first element
+    x = x.at[:, 0].add(a[:, 0] * h0)
+    _, h = lax.associative_scan(combine, (a0, x), axis=1)
+    return h
+
+
+def rglru_block(p: Params, x: jax.Array, cfg: RGLRUConfig,
+                state: tuple | None = None):
+    """Griffin recurrent block: in-proj -> conv1d -> RG-LRU, gated.
+
+    x: (B, S, d).  state = (conv_carry (B, W-1, dr), h (B, dr)).
+    Returns (out, new_state).
+    """
+    B, S, d = x.shape
+    dr = cfg.d_rnn
+    gate = jax.nn.gelu(x @ p["w_in_g"], approximate=True)
+    u = x @ p["w_in_x"]
+    W = cfg.conv_width
+    if state is None:
+        conv_carry = jnp.zeros((B, W - 1, dr), u.dtype)
+        h0 = jnp.zeros((B, dr), jnp.float32)
+    else:
+        conv_carry, h0 = state
+    upad = jnp.concatenate([conv_carry, u], axis=1)  # (B, S+W-1, dr)
+    conv = sum(upad[:, i : i + S, :] * p["conv_w"][i] for i in range(W)) + p["conv_b"]
+    new_conv_carry = upad[:, S:, :] if W > 1 else conv_carry
+    # RG-LRU gates
+    rg = jax.nn.sigmoid(conv.astype(jnp.float32) @ p["wa"].astype(jnp.float32) + p["ba"])
+    ig = jax.nn.sigmoid(conv.astype(jnp.float32) @ p["wx"].astype(jnp.float32) + p["bx"])
+    log_a = -cfg.c * rg * jax.nn.softplus(p["lam"])
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    gated = (ig * conv.astype(jnp.float32)) * mult
+    h = rglru_scan(gated, a, h0)
+    new_h = h[:, -1, :]
+    out = (h.astype(x.dtype) * gate) @ p["w_out"]
+    return out, (new_conv_carry, new_h)

@@ -1,0 +1,559 @@
+"""Decoder assembly: config -> params -> train forward / prefill / decode.
+
+One generic decoder covers the whole architecture pool via a per-layer
+*block plan*: each layer is (mixer kind, ffn kind) where
+
+  mixer: "attn" (global), "local" (sliding window), "rwkv", "rglru"
+  ffn:   "swiglu" | "geglu" | "mlp" | "moe" | "rwkv_cm" (channel mix)
+
+Layers are grouped as head (unrolled) + body (a repeating pattern,
+jax.lax.scan over stacked params — keeps HLO size independent of depth,
+which both compile time and the multi-pod dry-run depend on) + tail
+(unrolled remainder).
+
+Decode/prefill thread explicit state pytrees (KV caches, recurrent states)
+through the same structure; scan carries the stacked body state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import layers as L
+from .sharding import logical
+
+Params = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    block_pattern: tuple[str, ...] = ("attn",)
+    window: int | None = None
+    attn_cap: float | None = None
+    logit_cap: float | None = None
+    rope_theta: float = 1e4
+    mrope_sections: tuple[int, int, int] | None = None
+    qkv_bias: bool = False
+    norm_plus_one: bool = False        # gemma-style (1+w) RMSNorm
+    post_norm: bool = False            # gemma2 post-block norms
+    mlp_kind: str = "swiglu"
+    moe: L.MoEConfig | None = None
+    first_k_dense: int = 0
+    dense_ff: int | None = None
+    n_codebooks: int = 1               # musicgen: EnCodec codebooks
+    pos_embedding: str = "rope"        # rope | sinusoidal
+    embed_scale: bool = False
+    tie_embeddings: bool = True
+    rwkv_head_size: int = 64
+    rglru_width: int | None = None
+    conv_width: int = 4
+    vlm_patches: int = 0               # stub frontend: patches prepended
+    subquadratic: bool = False         # supports long_500k decode
+    query_chunk: int = 1024
+    remat: bool = True
+    scan_unroll: int = 1           # lax.scan unroll factor (roofline probes)
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab rounded up to a multiple of 256 so the vocab dim shards
+        over the model axis (logits are the largest activation)."""
+        return (self.vocab + 255) // 256 * 256
+
+    # ------------------------------------------------------------------
+    @property
+    def layer_plan(self) -> list[tuple[str, str]]:
+        plan = []
+        for i in range(self.n_layers):
+            mixer = self.block_pattern[i % len(self.block_pattern)]
+            if mixer == "rwkv":
+                ffn = "rwkv_cm"
+            elif self.moe is not None and i >= self.first_k_dense:
+                ffn = "moe"
+            else:
+                ffn = self.mlp_kind
+            plan.append((mixer, ffn))
+        return plan
+
+    @property
+    def groups(self) -> tuple[list, list, list]:
+        """(head_plan, body_pattern, tail_plan); body repeats n_body times."""
+        plan = self.layer_plan
+        head = plan[: self.first_k_dense]
+        rest = plan[self.first_k_dense :]
+        pat_len = len(self.block_pattern)
+        n_body = len(rest) // pat_len
+        body = rest[:pat_len]
+        tail = rest[n_body * pat_len :]
+        return head, body, tail
+
+    @property
+    def n_body(self) -> int:
+        _, body, _ = self.groups
+        rest = self.n_layers - self.first_k_dense
+        return rest // len(self.block_pattern)
+
+    def attn_cfg(self, mixer: str) -> L.AttnConfig:
+        return L.AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.head_dim,
+            rope_theta=self.rope_theta, mrope_sections=self.mrope_sections,
+            window=self.window if mixer == "local" else None,
+            cap=self.attn_cap, qkv_bias=self.qkv_bias,
+            use_rope=self.pos_embedding == "rope",
+        )
+
+    def rwkv_cfg(self) -> L.RWKVConfig:
+        return L.RWKVConfig(d_model=self.d_model,
+                            n_heads=self.d_model // self.rwkv_head_size,
+                            d_ff=self.d_ff)
+
+    def rglru_cfg(self) -> L.RGLRUConfig:
+        return L.RGLRUConfig(d_model=self.d_model,
+                             d_rnn=self.rglru_width or self.d_model,
+                             conv_width=self.conv_width)
+
+    def n_params(self) -> int:
+        """Total parameter count (for 6ND model flops)."""
+        shapes = jax.eval_shape(lambda k: init_params(self, k),
+                                jax.ShapeDtypeStruct((2,), jnp.uint32))
+        return sum(int(math.prod(x.shape)) for x in jax.tree.leaves(shapes))
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: routed experts count top_k/E)."""
+        total = self.n_params()
+        if self.moe is None:
+            return total
+        E, K = self.moe.n_experts, self.moe.top_k
+        n_moe_layers = sum(1 for _, f in self.layer_plan if f == "moe")
+        per_expert = 3 * self.d_model * self.moe.d_expert
+        routed = n_moe_layers * E * per_expert
+        active = total - routed + n_moe_layers * K * per_expert
+        return int(active)
+
+
+# ----------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------
+
+def _block_init(rng: jax.Array, cfg: ArchConfig, mixer: str, ffn: str,
+                dtype=jnp.bfloat16) -> Params:
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    d = cfg.d_model
+    p: Params = {"ln1": jnp.zeros((d,), jnp.float32) if cfg.norm_plus_one
+                 else jnp.ones((d,), jnp.float32)}
+    if mixer in ("attn", "local"):
+        p["attn"] = L.attn_init(k1, cfg.attn_cfg(mixer), dtype)
+    elif mixer == "rwkv":
+        p["rwkv"] = L.rwkv_init(k1, cfg.rwkv_cfg(), dtype)
+    elif mixer == "rglru":
+        p["rglru"] = L.rglru_init(k1, cfg.rglru_cfg(), dtype)
+    else:
+        raise ValueError(mixer)
+    p["ln2"] = p["ln1"].copy()
+    if ffn == "moe":
+        p["moe"] = L.moe_init(k2, d, cfg.moe, dtype)
+    elif ffn == "rwkv_cm":
+        pass  # rwkv_init already contains channel-mix params
+    else:
+        f = cfg.dense_ff if (cfg.moe is not None and cfg.dense_ff) else cfg.d_ff
+        p["mlp"] = L.mlp_init(k2, d, f, ffn, dtype)
+    if cfg.post_norm:
+        p["pln1"] = p["ln1"].copy()
+        p["pln2"] = p["ln1"].copy()
+    return p
+
+
+def init_params(cfg: ArchConfig, rng: jax.Array, dtype=jnp.bfloat16) -> Params:
+    head, body, tail = cfg.groups
+    n_body = cfg.n_body
+    keys = jax.random.split(rng, 8)
+    V = cfg.vocab_padded
+    emb_shape = (cfg.n_codebooks, V, cfg.d_model) if cfg.n_codebooks > 1 \
+        else (V, cfg.d_model)
+    params: Params = {
+        "embed": (jax.random.normal(keys[0], emb_shape) * 0.02).astype(dtype),
+        "final_ln": jnp.zeros((cfg.d_model,), jnp.float32) if cfg.norm_plus_one
+        else jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        hshape = (cfg.n_codebooks, cfg.d_model, V) if cfg.n_codebooks > 1 \
+            else (cfg.d_model, V)
+        params["lm_head"] = (jax.random.normal(keys[1], hshape)
+                             * (1.0 / math.sqrt(cfg.d_model))).astype(dtype)
+    if cfg.vlm_patches:
+        params["patch_proj"] = (jax.random.normal(keys[2], (cfg.d_model, cfg.d_model))
+                                * (1.0 / math.sqrt(cfg.d_model))).astype(dtype)
+    for j, (mixer, ffn) in enumerate(head):
+        params[f"head{j}"] = _block_init(jax.random.fold_in(keys[3], j), cfg,
+                                         mixer, ffn, dtype)
+    if n_body:
+        def one_group(k):
+            gp = {}
+            for j, (mixer, ffn) in enumerate(body):
+                gp[f"b{j}"] = _block_init(jax.random.fold_in(k, j), cfg, mixer, ffn, dtype)
+            return gp
+        gkeys = jax.random.split(keys[4], n_body)
+        groups = [one_group(k) for k in gkeys]
+        params["body"] = jax.tree.map(lambda *xs: jnp.stack(xs), *groups)
+    for j, (mixer, ffn) in enumerate(tail):
+        params[f"tail{j}"] = _block_init(jax.random.fold_in(keys[5], j), cfg,
+                                         mixer, ffn, dtype)
+    return params
+
+
+# ----------------------------------------------------------------------
+# block application (shared by train / prefill / decode)
+# ----------------------------------------------------------------------
+
+def _norm(x, w, cfg: ArchConfig):
+    return L.rms_norm(x, w, plus_one=cfg.norm_plus_one)
+
+
+def _apply_block(bp: Params, x: jax.Array, cfg: ArchConfig, mixer: str, ffn: str,
+                 positions, mode: str, state, pos=None):
+    """mode: train | prefill | decode. Returns (x, new_state)."""
+    new_state: dict = {}
+    h = _norm(x, bp["ln1"], cfg)
+    if mixer in ("attn", "local"):
+        acfg = cfg.attn_cfg(mixer)
+        if mode == "train":
+            a = L.attn_forward(bp["attn"], h, acfg, positions, cfg.query_chunk)
+        elif mode == "prefill":
+            a, kv = L.attn_prefill(bp["attn"], h, acfg, positions, cfg.query_chunk)
+            new_state["kv"] = kv
+        else:
+            a, kv = L.attn_decode(bp["attn"], h, acfg, state["kv"], pos)
+            new_state["kv"] = kv
+    elif mixer == "rwkv":
+        rcfg = cfg.rwkv_cfg()
+        if mode == "train":
+            a, _ = L.rwkv_time_mix(bp["rwkv"], h, rcfg)
+        else:
+            st = state.get("rwkv") if state else None
+            carry = st["x_tm"] if st else None
+            s0 = st["s"] if st else None
+            a, (xc, s1) = L.rwkv_time_mix(bp["rwkv"], h, rcfg, carry, s0)
+            new_state["rwkv"] = {"x_tm": xc, "s": s1}
+    elif mixer == "rglru":
+        gcfg = cfg.rglru_cfg()
+        if mode == "train":
+            a, _ = L.rglru_block(bp["rglru"], h, gcfg)
+        else:
+            st = state.get("rglru") if state else None
+            a, (conv, hh) = L.rglru_block(bp["rglru"], h, gcfg,
+                                          (st["conv"], st["h"]) if st else None)
+            new_state["rglru"] = {"conv": conv, "h": hh}
+    else:
+        raise ValueError(mixer)
+    if cfg.post_norm:
+        a = _norm(a, bp["pln1"], cfg)
+    x = x + a
+    h = _norm(x, bp["ln2"], cfg)
+    if ffn == "moe":
+        f = L.moe_forward(bp["moe"], h, cfg.moe)
+    elif ffn == "rwkv_cm":
+        if mode == "train":
+            f, _ = L.rwkv_channel_mix(bp["rwkv"], h)
+        else:
+            st = state.get("rwkv_cm") if state else None
+            f, xc = L.rwkv_channel_mix(bp["rwkv"], h, st)
+            new_state["rwkv_cm"] = xc
+    else:
+        f = L.mlp_forward(bp["mlp"], h, ffn)
+    if cfg.post_norm:
+        f = _norm(f, bp["pln2"], cfg)
+    x = x + f
+    x = logical(x, "batch", "seq", "embed")
+    return x, new_state
+
+
+# ----------------------------------------------------------------------
+# embedding / positions / heads
+# ----------------------------------------------------------------------
+
+def _embed(params: Params, cfg: ArchConfig, batch: dict) -> tuple[jax.Array, Any]:
+    """Returns (x (B,S,d), positions)."""
+    if cfg.n_codebooks > 1:
+        codes = batch["tokens"]                      # (B, S, K)
+        x = sum(jnp.take(params["embed"][k], codes[..., k], axis=0)
+                for k in range(cfg.n_codebooks))
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)  # (B,S,d)
+    B, S = x.shape[:2]
+    if cfg.vlm_patches:
+        patches = batch["patches"].astype(x.dtype) @ params["patch_proj"]
+        x = jnp.concatenate([patches, x], axis=1)
+        S = x.shape[1]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if cfg.pos_embedding == "sinusoidal":
+        x = x + L.sinusoidal_positions(S, cfg.d_model).astype(x.dtype)[None]
+    positions = _positions(cfg, B, S)
+    x = logical(x, "batch", "seq", "embed")
+    return x, positions
+
+
+def _positions(cfg: ArchConfig, B: int, S: int):
+    if cfg.mrope_sections is None:
+        return jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    # M-RoPE: patches get a (t=0, h, w) grid; text continues with t=h=w.
+    P = cfg.vlm_patches
+    side = max(int(math.sqrt(max(P, 1))), 1)
+    pt = jnp.concatenate([jnp.zeros(P, jnp.int32), jnp.arange(S - P)])
+    ph = jnp.concatenate([jnp.arange(P) // side, jnp.arange(S - P)])
+    pw = jnp.concatenate([jnp.arange(P) % side, jnp.arange(S - P)])
+    pos = jnp.stack([pt, ph, pw])                    # (3, S)
+    return jnp.broadcast_to(pos[:, None, :], (3, B, S))
+
+
+def _lm_logits(params: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    x = _norm(x, params["final_ln"], cfg)
+    if cfg.n_codebooks > 1:
+        w = params["lm_head"] if not cfg.tie_embeddings else \
+            jnp.swapaxes(params["embed"], 1, 2)      # (K, d, V)
+        logits = jnp.einsum("bsd,kdv->bskv", x, w)
+    elif cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["lm_head"]
+    if cfg.logit_cap is not None:
+        logits = L.softcap(logits.astype(jnp.float32), cfg.logit_cap)
+    if cfg.vocab_padded != cfg.vocab:
+        # mask padded vocab slots out of softmax/argmax
+        pad_mask = (jnp.arange(cfg.vocab_padded) >= cfg.vocab) * jnp.asarray(
+            -1e9, logits.dtype)
+        logits = logits + pad_mask
+    logits = logical(logits, "batch", None, "vocab")
+    return logits
+
+
+# ----------------------------------------------------------------------
+# full passes
+# ----------------------------------------------------------------------
+
+def forward(params: Params, cfg: ArchConfig, batch: dict) -> jax.Array:
+    """Training/scoring forward: logits over the full sequence."""
+    x, positions = _embed(params, cfg, batch)
+    head, body, tail = cfg.groups
+
+    for j, (mixer, ffn) in enumerate(head):
+        x, _ = _apply_block(params[f"head{j}"], x, cfg, mixer, ffn,
+                            positions, "train", None)
+    if cfg.n_body:
+        def body_fn(xc, gp):
+            for j, (mixer, ffn) in enumerate(body):
+                xc, _ = _apply_block(gp[f"b{j}"], xc, cfg, mixer, ffn,
+                                     positions, "train", None)
+            return xc, None
+        if cfg.remat:
+            body_fn = jax.checkpoint(body_fn, prevent_cse=False)
+        x, _ = lax.scan(body_fn, x, params["body"], unroll=cfg.scan_unroll)
+    for j, (mixer, ffn) in enumerate(tail):
+        x, _ = _apply_block(params[f"tail{j}"], x, cfg, mixer, ffn,
+                            positions, "train", None)
+    return _lm_logits(params, cfg, x)
+
+
+def init_decode_state(cfg: ArchConfig, B: int, S_max: int, dtype=jnp.bfloat16) -> Params:
+    """Zeroed decode state for every layer (KV caches + recurrent states)."""
+    head, body, tail = cfg.groups
+
+    def block_state(mixer, ffn):
+        st = {}
+        if mixer in ("attn", "local"):
+            KV, hd = cfg.n_kv_heads, cfg.head_dim
+            S_eff = min(S_max, cfg.window) if (mixer == "local" and cfg.window) else S_max
+            st["kv"] = {"k": jnp.zeros((B, S_eff, KV, hd), dtype),
+                        "v": jnp.zeros((B, S_eff, KV, hd), dtype)}
+        elif mixer == "rwkv":
+            H = cfg.d_model // cfg.rwkv_head_size
+            N = cfg.rwkv_head_size
+            st["rwkv"] = {"x_tm": jnp.zeros((B, cfg.d_model), dtype),
+                          "s": jnp.zeros((B, H, N, N), jnp.float32)}
+        elif mixer == "rglru":
+            dr = cfg.rglru_width or cfg.d_model
+            st["rglru"] = {"conv": jnp.zeros((B, cfg.conv_width - 1, dr), dtype),
+                           "h": jnp.zeros((B, dr), jnp.float32)}
+        if ffn == "rwkv_cm":
+            st["rwkv_cm"] = jnp.zeros((B, cfg.d_model), dtype)
+        return st
+
+    state: Params = {}
+    for j, (mixer, ffn) in enumerate(head):
+        state[f"head{j}"] = block_state(mixer, ffn)
+    if cfg.n_body:
+        groups = []
+        for _ in range(cfg.n_body):
+            groups.append({f"b{j}": block_state(m, f) for j, (m, f) in enumerate(body)})
+        state["body"] = jax.tree.map(lambda *xs: jnp.stack(xs), *groups)
+    for j, (mixer, ffn) in enumerate(tail):
+        state[f"tail{j}"] = block_state(mixer, ffn)
+    return state
+
+
+def decode_step(params: Params, cfg: ArchConfig, state: Params,
+                tokens: jax.Array, pos: jax.Array):
+    """One decode step.  tokens: (B, 1) (or (B, 1, K)); pos: (B,) write index.
+
+    Returns (logits (B, 1, V...), new_state).
+    """
+    batch = {"tokens": tokens}
+    if cfg.vlm_patches:
+        # decode consumes only text tokens; patches live in the cache already
+        cfg = dataclasses.replace(cfg, vlm_patches=0)
+    sin_cfg = cfg
+    if cfg.pos_embedding == "sinusoidal":
+        # add position embedding at the true offset below, not inside _embed
+        cfg = dataclasses.replace(cfg, pos_embedding="none")
+    x, _ = _embed(params, cfg, batch)
+    if sin_cfg.pos_embedding == "sinusoidal":
+        d = sin_cfg.d_model
+        dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+        ang = pos.astype(jnp.float32)[:, None] / jnp.power(10000.0, dim / d)
+        pe = jnp.zeros((x.shape[0], d), jnp.float32)
+        pe = pe.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
+        x = x + pe[:, None, :].astype(x.dtype)
+    head, body, tail = cfg.groups
+    new_state: Params = {}
+    for j, (mixer, ffn) in enumerate(head):
+        x, st = _apply_block(params[f"head{j}"], x, cfg, mixer, ffn,
+                             None, "decode", state[f"head{j}"], pos)
+        new_state[f"head{j}"] = st
+    if cfg.n_body:
+        # caches ride the scan CARRY (updated in place per group index):
+        # a while-loop carry aliases its buffers, whereas stacked scan
+        # outputs (ys) must be staged separately -- carrying the stack
+        # removes the second live copy of every KV cache
+        # (EXPERIMENTS.md §Perf iteration 7)
+        def body_fn(carry, inp):
+            xc, cstack = carry
+            gp, i = inp
+            gst = jax.tree.map(lambda s: lax.dynamic_index_in_dim(
+                s, i, axis=0, keepdims=False), cstack)
+            out_st = {}
+            for j, (mixer, ffn) in enumerate(body):
+                xc, st = _apply_block(gp[f"b{j}"], xc, cfg, mixer, ffn,
+                                      None, "decode", gst[f"b{j}"], pos)
+                out_st[f"b{j}"] = st
+            cstack = jax.tree.map(
+                lambda s, ns: lax.dynamic_update_index_in_dim(
+                    s, ns.astype(s.dtype), i, axis=0),
+                cstack, out_st)
+            return (xc, cstack), None
+        (x, body_state), _ = lax.scan(
+            body_fn, (x, state["body"]),
+            (params["body"], jnp.arange(cfg.n_body)), unroll=cfg.scan_unroll)
+        new_state["body"] = body_state
+    for j, (mixer, ffn) in enumerate(tail):
+        x, st = _apply_block(params[f"tail{j}"], x, cfg, mixer, ffn,
+                             None, "decode", state[f"tail{j}"], pos)
+        new_state[f"tail{j}"] = st
+    return _lm_logits(params, cfg, x), new_state
+
+
+def prefill(params: Params, cfg: ArchConfig, batch: dict, last_only: bool = False):
+    """Forward over a prompt, returning (logits, decode state).
+
+    last_only=True computes the LM head only for the final position — the
+    serving configuration (full-sequence logits at 32k x 256k-vocab would
+    dwarf the backbone's memory).
+    """
+    x, positions = _embed(params, cfg, batch)
+    head, body, tail = cfg.groups
+    new_state: Params = {}
+    for j, (mixer, ffn) in enumerate(head):
+        x, st = _apply_block(params[f"head{j}"], x, cfg, mixer, ffn,
+                             positions, "prefill", None)
+        new_state[f"head{j}"] = st
+    if cfg.n_body:
+        def body_fn(xc, gp):
+            out_st = {}
+            for j, (mixer, ffn) in enumerate(body):
+                xc, st = _apply_block(gp[f"b{j}"], xc, cfg, mixer, ffn,
+                                      positions, "prefill", None)
+                out_st[f"b{j}"] = st
+            return xc, out_st
+        if cfg.remat:
+            body_fn = jax.checkpoint(body_fn, prevent_cse=False)
+        x, body_state = lax.scan(body_fn, x, params["body"],
+                                 unroll=cfg.scan_unroll)
+        new_state["body"] = body_state
+    for j, (mixer, ffn) in enumerate(tail):
+        x, st = _apply_block(params[f"tail{j}"], x, cfg, mixer, ffn,
+                             positions, "prefill", None)
+        new_state[f"tail{j}"] = st
+    if last_only:
+        x = x[:, -1:]
+    return _lm_logits(params, cfg, x), new_state
+
+
+def forward_hidden(params: Params, cfg: ArchConfig, batch: dict) -> jax.Array:
+    """Backbone only: final hidden states (B, S, d), pre LM head."""
+    x, positions = _embed(params, cfg, batch)
+    head, body, tail = cfg.groups
+    for j, (mixer, ffn) in enumerate(head):
+        x, _ = _apply_block(params[f"head{j}"], x, cfg, mixer, ffn,
+                            positions, "train", None)
+    if cfg.n_body:
+        def body_fn(xc, gp):
+            for j, (mixer, ffn) in enumerate(body):
+                xc, _ = _apply_block(gp[f"b{j}"], xc, cfg, mixer, ffn,
+                                     positions, "train", None)
+            return xc, None
+        if cfg.remat:
+            body_fn = jax.checkpoint(body_fn, prevent_cse=False)
+        x, _ = lax.scan(body_fn, x, params["body"], unroll=cfg.scan_unroll)
+    for j, (mixer, ffn) in enumerate(tail):
+        x, _ = _apply_block(params[f"tail{j}"], x, cfg, mixer, ffn,
+                            positions, "train", None)
+    return x
+
+
+def loss_fn(params: Params, cfg: ArchConfig, batch: dict,
+            seq_chunk: int = 512) -> jax.Array:
+    """Next-token cross entropy (mean over tokens; fp32 logsumexp).
+
+    The LM head + loss are computed in sequence chunks so the full
+    (B, S, vocab) logits tensor is never materialized — at 256k-vocab
+    training shapes the logits would otherwise dwarf the backbone memory.
+    """
+    x = forward_hidden(params, cfg, batch)
+    labels = batch["labels"]
+    if cfg.vlm_patches:
+        x = x[:, cfg.vlm_patches :]
+    B, S = x.shape[:2]
+    while S % seq_chunk != 0:
+        seq_chunk //= 2
+    n = S // seq_chunk
+
+    def chunk_loss(carry, idx):
+        xc = lax.dynamic_slice_in_dim(x, idx * seq_chunk, seq_chunk, axis=1)
+        lc = lax.dynamic_slice_in_dim(labels, idx * seq_chunk, seq_chunk, axis=1)
+        logits = _lm_logits(params, cfg, xc).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - gold), None
+
+    if n <= 1:
+        total, _ = chunk_loss(jnp.zeros((), jnp.float32), 0)
+    else:
+        (total, _) = lax.scan(chunk_loss, jnp.zeros((), jnp.float32),
+                              jnp.arange(n))[0], None
+    n_tok = B * S * (cfg.n_codebooks if cfg.n_codebooks > 1 else 1)
+    return total / n_tok

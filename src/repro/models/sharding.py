@@ -1,0 +1,74 @@
+"""Logical activation sharding annotations.
+
+Model code calls `logical(x, "batch", "seq", None, ...)` with one logical
+name (or None) per array axis.  Outside any mesh context this is identity;
+`launch.sharding.activation_rules(...)` installs a mapping from logical
+names to mesh axes, turning the calls into with_sharding_constraint — the
+single knob the perf loop (§Perf) uses to move activation layouts without
+touching model code.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_rules() -> Optional[dict]:
+    return getattr(_state, "rules", None)
+
+
+def current_mesh():
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, rules: dict):
+    """rules: logical axis name -> mesh axis (str | tuple | None)."""
+    prev_rules = getattr(_state, "rules", None)
+    prev_mesh = getattr(_state, "mesh", None)
+    _state.rules, _state.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = prev_rules, prev_mesh
+
+
+def _axis_size(mesh, ax) -> int:
+    if ax is None:
+        return 1
+    axes = ax if isinstance(ax, (tuple, list)) else (ax,)
+    s = 1
+    for a in axes:
+        s *= mesh.shape[a] if a in mesh.axis_names else 1
+    return s
+
+
+def logical(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    rules, mesh = current_rules(), current_mesh()
+    if rules is None or mesh is None:
+        return x
+    if len(names) != x.ndim:
+        # name prefix allowed; remaining axes unsharded
+        names = tuple(names) + (None,) * (x.ndim - len(names))
+    axes = []
+    used: set = set()
+    for dim, n in zip(x.shape, names):
+        ax = rules.get(n) if n else None
+        if ax is not None and (dim % _axis_size(mesh, ax) != 0):
+            ax = None  # divisibility guard: replicate rather than pad
+        if ax is not None:
+            flat = ax if isinstance(ax, tuple) else (ax,)
+            if any(a in used for a in flat):
+                ax = None  # first dim wins a contested mesh axis
+            else:
+                used.update(flat)
+        axes.append(ax)
+    spec = P(*axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

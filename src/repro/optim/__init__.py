@@ -1,0 +1,2 @@
+from .adamw import AdamWConfig, apply_updates, init_state, schedule
+from .compression import compressed_psum, compressed_psum_tree, quantize_int8, dequantize

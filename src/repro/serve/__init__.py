@@ -1,0 +1,1 @@
+from .engine import Batcher, ServeConfig, greedy_generate, make_decode_fn, pad_prefill_state

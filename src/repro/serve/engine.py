@@ -1,0 +1,147 @@
+"""Serving engine: prefill + batched decode with explicit state.
+
+Continuous-batching-lite: a request queue is served in fixed-size decode
+batches; finished rows are refilled from the queue (slot reuse).  The
+engine is deliberately functional — state in, state out — so the same
+decode_step lowers for the dry-run decode cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import model as M
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_seq: int = 1024
+    batch: int = 8
+    temperature: float = 0.0   # 0 = greedy
+
+
+def pad_prefill_state(cfg: M.ArchConfig, state: dict, S_max: int) -> dict:
+    """Grow prefill KV caches to S_max slots (recurrent states untouched)."""
+
+    def grow(path_leaf):
+        return path_leaf
+
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if k == "kv":
+                    pad = S_max - v["k"].shape[-3]
+                    out[k] = {
+                        "k": jnp.pad(v["k"], ((0, 0),) * (v["k"].ndim - 3)
+                                     + ((0, pad), (0, 0), (0, 0))),
+                        "v": jnp.pad(v["v"], ((0, 0),) * (v["v"].ndim - 3)
+                                     + ((0, pad), (0, 0), (0, 0))),
+                    }
+                else:
+                    out[k] = walk(v)
+            return out
+        return node
+
+    return walk(state)
+
+
+def make_decode_fn(cfg: M.ArchConfig) -> Callable:
+    @jax.jit
+    def step(params, state, tokens, pos):
+        return M.decode_step(params, cfg, state, tokens, pos)
+    return step
+
+
+def greedy_generate(params, cfg: M.ArchConfig, prompt: jax.Array, n_new: int,
+                    s_max: int | None = None):
+    """Generate n_new tokens after `prompt` (B, S0). Returns (B, n_new)."""
+    B, S0 = prompt.shape[:2]
+    s_max = s_max or (S0 + n_new)
+    logits, state = M.prefill(params, cfg, {"tokens": prompt})
+    state = pad_prefill_state(cfg, state, s_max)
+    step = make_decode_fn(cfg)
+    if cfg.n_codebooks > 1:
+        last = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)  # (B,1,K)
+    else:
+        last = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)  # (B,1)
+    out = []
+    pos = jnp.full((B,), S0, jnp.int32)
+    for t in range(n_new):
+        logits, state = step(params, state, last, pos)
+        last = jnp.argmax(logits[:, -1:] if cfg.n_codebooks == 1 else logits[:, -1:],
+                          axis=-1).astype(jnp.int32)
+        out.append(last)
+        pos = pos + 1
+    return jnp.concatenate(out, axis=1)
+
+
+class Batcher:
+    """Slot-based continuous batching over a request queue."""
+
+    def __init__(self, params, cfg: M.ArchConfig, scfg: ServeConfig):
+        self.params, self.cfg, self.scfg = params, cfg, scfg
+        self.step = make_decode_fn(cfg)
+
+    def serve(self, prompts: list[np.ndarray], n_new: int) -> list[np.ndarray]:
+        """Serve a list of (S0,) prompts; returns list of (n_new,) outputs."""
+        cfg, scfg = self.cfg, self.scfg
+        results: list[np.ndarray | None] = [None] * len(prompts)
+        queue = list(range(len(prompts)))
+        B = scfg.batch
+        state = M.init_decode_state(cfg, B, scfg.max_seq)
+        slot_req = [-1] * B
+        slot_pos = np.zeros(B, np.int32)
+        slot_out: list[list] = [[] for _ in range(B)]
+        cur = jnp.zeros((B, 1) if cfg.n_codebooks == 1 else (B, 1, cfg.n_codebooks),
+                        jnp.int32)
+
+        def admit(slot):
+            if not queue:
+                slot_req[slot] = -1
+                return
+            rid = queue.pop(0)
+            slot_req[slot] = rid
+            prompt = prompts[rid]
+            # prefill by stepping tokens through this slot (simple engine;
+            # the bulk-prefill path is used by the dry-run prefill cells)
+            slot_pos[slot] = 0
+            slot_out[slot] = []
+            self._pending_prompt = getattr(self, "_pending_prompt", {})
+            self._pending_prompt[slot] = list(np.asarray(prompt).tolist())
+
+        self._pending_prompt = {}
+        for s in range(B):
+            admit(s)
+        active = any(r >= 0 for r in slot_req)
+        cur_np = np.zeros(cur.shape, np.int32)
+        while active:
+            # feed either the next prompt token or the last generated token
+            for s in range(B):
+                if slot_req[s] < 0:
+                    continue
+                pend = self._pending_prompt.get(s) or []
+                if pend:
+                    tok = pend.pop(0)
+                    cur_np[s] = tok
+            cur = jnp.asarray(cur_np)
+            pos = jnp.asarray(slot_pos)
+            logits, state = self.step(self.params, state, cur, pos)
+            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+            for s in range(B):
+                if slot_req[s] < 0:
+                    continue
+                slot_pos[s] += 1
+                if not self._pending_prompt.get(s):
+                    slot_out[s].append(nxt[s].copy())
+                    cur_np[s] = nxt[s]
+                    if len(slot_out[s]) >= n_new:
+                        results[slot_req[s]] = np.array(slot_out[s])
+                        admit(s)
+            active = any(r >= 0 for r in slot_req)
+        return results  # type: ignore

@@ -1,0 +1,3 @@
+"""Cluster simulation substrate: event-driven simulator + workload generators."""
+from .cluster import ClusterSim, SimConfig, SimResult, run_workload, scheme
+from .workload import make_workload, production_dag, query_dag, build_system_dag, workflow_dag

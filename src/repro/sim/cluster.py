@@ -1,0 +1,445 @@
+"""Discrete-event cluster simulator (paper §8 experimental harness).
+
+Simulates a cluster of machines with d-resource capacity, online job
+arrivals, heartbeat-driven matching via `core.online.Matcher`, plus the
+runtime artifacts the paper discusses:
+
+  * stragglers (injected duration stretch) + speculative re-execution
+    (the mitigation §2.3 corrects for),
+  * machine failures with task re-queueing and rejoin (fault tolerance /
+    elasticity at the cluster level),
+  * implicit over-allocation slowdowns when a scheduler ignores some
+    resource dims (Tez/CP only fit cores+memory -> network/disk overload,
+    the Fig. 11 effect), and explicit bounded overbooking for DAGPS.
+
+Scheme presets mirror §8.1's compared schemes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Callable, Sequence
+
+import numpy as np
+
+from ..core.builder import build_schedule
+from ..core.baselines import bfs_order, cp_order, random_order
+from ..core.dag import DAG
+from ..core.online import (
+    JobView,
+    Matcher,
+    MatcherConfig,
+    PendingTask,
+    drf_fairness,
+    slot_fairness,
+)
+
+
+@dataclasses.dataclass
+class SchemeSpec:
+    name: str
+    order_fn: str = "dagps"        # dagps | bfs | cp | random
+    matcher: MatcherConfig = dataclasses.field(default_factory=MatcherConfig)
+
+
+def scheme(name: str, **overrides) -> SchemeSpec:
+    """Preset schemes from §8.1."""
+    presets: dict[str, SchemeSpec] = {
+        # Tez: breadth-first order on the Capacity Scheduler; knows cores+mem.
+        "tez": SchemeSpec(
+            "tez", "bfs",
+            MatcherConfig(use_packing=False, use_srpt=False, use_overbooking=False,
+                          fit_dims=(0, 1), kappa=0.02),
+        ),
+        "tez+cp": SchemeSpec(
+            "tez+cp", "cp",
+            MatcherConfig(use_packing=False, use_srpt=False, use_overbooking=False,
+                          fit_dims=(0, 1), kappa=0.02),
+        ),
+        "tez+tetris": SchemeSpec(
+            "tez+tetris", "bfs",
+            MatcherConfig(use_packing=True, use_srpt=True, use_overbooking=False,
+                          use_priority=False, kappa=10.0),  # Tetris: unbounded unfairness
+        ),
+        "tez+drf": SchemeSpec(
+            "tez+drf", "bfs",
+            MatcherConfig(use_packing=False, use_srpt=False, use_overbooking=False,
+                          fit_dims=(0, 1), kappa=0.02, fairness=drf_fairness),
+        ),
+        "random": SchemeSpec(
+            "random", "random",
+            MatcherConfig(use_packing=False, use_srpt=False, use_overbooking=False,
+                          kappa=10.0),
+        ),
+        "dagps": SchemeSpec("dagps", "dagps", MatcherConfig()),
+        # ablation: DAGPS order without overbooking
+        "dagps-noob": SchemeSpec(
+            "dagps-noob", "dagps", MatcherConfig(use_overbooking=False)
+        ),
+    }
+    spec = presets[name]
+    if overrides:
+        spec = dataclasses.replace(spec, matcher=dataclasses.replace(spec.matcher, **overrides))
+    return spec
+
+
+@dataclasses.dataclass
+class SimConfig:
+    n_machines: int = 50
+    d: int = 4
+    seed: int = 0
+    expose_per_job: int = 8        # runnable tasks an AM exposes per heartbeat
+    build_machines: int | None = None  # m for offline construction (job share)
+    straggle_prob: float = 0.0
+    straggle_factor: tuple[float, float] = (2.0, 5.0)
+    speculate: bool = True
+    spec_threshold: float = 1.8
+    failure_rate: float = 0.0      # machine-failures per simulated second
+    repair_time: float = 120.0
+    record_usage: bool = False
+
+
+@dataclasses.dataclass
+class JobResult:
+    job_id: int
+    group: int
+    arrival: float
+    finish: float
+    n_tasks: int
+
+    @property
+    def jct(self) -> float:
+        return self.finish - self.arrival
+
+
+@dataclasses.dataclass
+class SimResult:
+    jobs: list[JobResult]
+    makespan: float
+    usage_samples: list[tuple[float, np.ndarray]]
+    allocations: list[tuple[float, float, int, float]]  # start, end, group, weight
+    speculative_launches: int = 0
+    failed_tasks_requeued: int = 0
+
+    def jcts(self) -> np.ndarray:
+        return np.array([j.jct for j in self.jobs])
+
+    def jain_index(self, window: float, shares: dict[int, float]) -> float:
+        """Mean Jain's index of per-group usage over fixed windows (Table 4)."""
+        if not self.allocations:
+            return 1.0
+        horizon = self.makespan
+        total_share = sum(shares.values()) or 1.0
+        idxs = []
+        t = 0.0
+        while t < horizon:
+            hi = t + window
+            usage = {g: 0.0 for g in shares}
+            for (s, e, g, w) in self.allocations:
+                ov = max(0.0, min(e, hi) - max(s, t))
+                if ov > 0 and g in usage:
+                    usage[g] += ov * w
+            xs = np.array([usage[g] / (shares[g] / total_share) for g in shares])
+            if xs.sum() > 0:
+                idxs.append(float(xs.sum() ** 2 / (len(xs) * (xs ** 2).sum())))
+            t = hi
+        return float(np.mean(idxs)) if idxs else 1.0
+
+
+class _Job:
+    def __init__(self, job_id: int, dag: DAG, arrival: float, group: int,
+                 pri: np.ndarray):
+        self.job_id = job_id
+        self.dag = dag
+        self.arrival = arrival
+        self.group = group
+        self.pri = pri
+        self.pending_parents = np.array([len(dag.parents[i]) for i in range(dag.n)])
+        self.runnable: set[int] = {i for i in range(dag.n) if self.pending_parents[i] == 0}
+        self.running: set[int] = set()
+        self.done: set[int] = set()
+        weight = np.abs(dag.demand).sum(axis=1)
+        self._work = dag.duration * weight
+        self.srpt = float(self._work.sum())
+        self.finish: float | None = None
+
+    def task_started(self, t: int) -> None:
+        self.runnable.discard(t)
+        self.running.add(t)
+
+    def task_requeued(self, t: int) -> None:
+        self.running.discard(t)
+        self.runnable.add(t)
+
+    def task_done(self, t: int) -> list[int]:
+        if t in self.done:
+            return []
+        self.running.discard(t)
+        self.runnable.discard(t)
+        self.done.add(t)
+        self.srpt -= float(self._work[t])
+        newly = []
+        for c in self.dag.children[t]:
+            self.pending_parents[c] -= 1
+            if self.pending_parents[c] == 0 and c not in self.done:
+                newly.append(int(c))
+                self.runnable.add(int(c))
+        return newly
+
+    @property
+    def complete(self) -> bool:
+        return len(self.done) == self.dag.n
+
+
+class ClusterSim:
+    """Event-driven simulation of many DAG jobs under a scheme."""
+
+    def __init__(self, cfg: SimConfig, spec: SchemeSpec):
+        self.cfg = cfg
+        self.spec = spec
+
+    def _make_pri(self, dag: DAG, rng: np.random.Generator) -> np.ndarray:
+        kind = self.spec.order_fn
+        if kind == "dagps":
+            m = self.cfg.build_machines or max(self.cfg.n_machines // 10, 4)
+            return build_schedule(dag, m).pri_score
+        if kind == "bfs":
+            order = bfs_order(dag)
+        elif kind == "cp":
+            order = cp_order(dag)
+        else:
+            order = random_order(dag, int(rng.integers(1 << 31)))
+        rank = np.empty(dag.n)
+        rank[order] = np.arange(dag.n)
+        return 1.0 - rank / max(dag.n, 1)
+
+    # ------------------------------------------------------------------
+    def run(self, arrivals: Sequence[tuple[float, DAG, int]]) -> SimResult:
+        cfg = self.cfg
+        rng = np.random.default_rng(cfg.seed)
+        M, d = cfg.n_machines, cfg.d
+        avail = np.ones((M, d), dtype=np.float64)
+        alive = np.ones(M, dtype=bool)
+        groups = sorted({g for (_, _, g) in arrivals})
+        shares = {g: 1.0 for g in groups}
+        matcher = Matcher(self.spec.matcher, capacity=float(M), shares=shares)
+
+        jobs: dict[int, _Job] = {}
+        counter = itertools.count()
+        events: list[tuple[float, int, str, tuple]] = []
+        for k, (t, dag, g) in enumerate(arrivals):
+            heapq.heappush(events, (float(t), next(counter), "arrival", (k, dag, g)))
+        if cfg.failure_rate > 0:
+            t_fail = float(rng.exponential(1.0 / cfg.failure_rate))
+            heapq.heappush(events, (t_fail, next(counter), "fail", ()))
+
+        running: dict[int, dict] = {}   # run_id -> info
+        run_counter = itertools.count()
+        task_active: dict[tuple[int, int], list[int]] = {}  # (job,task) -> run_ids
+        results: list[JobResult] = []
+        usage_samples: list[tuple[float, np.ndarray]] = []
+        allocations: list[tuple[float, float, int, float]] = []
+        spec_launches = 0
+        requeued = 0
+        t_now = 0.0
+
+        def machine_load(m: int) -> np.ndarray:
+            return 1.0 - avail[m]
+
+        def start_task(job: _Job, tid: int, m: int, now: float, speculative: bool = False) -> None:
+            nonlocal spec_launches
+            dem = job.dag.demand[tid]
+            avail[m] -= dem
+            base = float(job.dag.duration[tid])
+            dur = base
+            if not speculative and cfg.straggle_prob > 0 and rng.random() < cfg.straggle_prob:
+                lo, hi = cfg.straggle_factor
+                dur = base * float(rng.uniform(lo, hi))
+            # implicit/explicit overload on fungible dims slows this task down
+            load = machine_load(m)
+            overload = float(max(load[2:].max() if d > 2 else 0.0, 1.0))
+            dur_eff = dur * overload
+            rid = next(run_counter)
+            running[rid] = dict(job=job.job_id, task=tid, machine=m,
+                                start=now, expected=base, dead=False)
+            task_active.setdefault((job.job_id, tid), []).append(rid)
+            if not speculative:
+                job.task_started(tid)
+            else:
+                spec_launches += 1
+            heapq.heappush(events, (now + dur_eff, next(counter), "finish", (rid,)))
+            if cfg.speculate and not speculative:
+                chk = now + cfg.spec_threshold * base
+                heapq.heappush(events, (chk, next(counter), "spec", (rid,)))
+            allocations.append((now, now + dur_eff, job.group, float(np.abs(dem).sum())))
+
+        def free_run(rid: int) -> None:
+            info = running[rid]
+            if not info["dead"]:
+                info["dead"] = True
+                avail[info["machine"]] += jobs[info["job"]].dag.demand[info["task"]]
+
+        def _candidates() -> tuple[list[PendingTask], dict[int, JobView]]:
+            cands: list[PendingTask] = []
+            views: dict[int, JobView] = {}
+            for j in jobs.values():
+                if j.complete or not j.runnable:
+                    continue
+                views[j.job_id] = JobView(j.job_id, j.group, j.srpt)
+                top = sorted(j.runnable, key=lambda t: -j.pri[t])[: cfg.expose_per_job]
+                for tid in top:
+                    cands.append(PendingTask(
+                        job_id=j.job_id, task_id=tid,
+                        demand=j.dag.demand[tid], duration=float(j.dag.duration[tid]),
+                        pri_score=float(j.pri[tid]),
+                    ))
+            return cands, views
+
+        def match_machine(m: int, now: float) -> None:
+            if not alive[m]:
+                return
+            cands, views = _candidates()
+            if not cands:
+                return
+            picks = matcher.find_tasks_for_machine(m, avail[m], cands, views)
+            for task, _over in picks:
+                start_task(jobs[task.job_id], task.task_id, m, now)
+
+        def match_all(now: float) -> None:
+            cands, views = _candidates()
+            if not cands:
+                return
+            order = np.argsort(-avail.sum(axis=1))
+            for m in order:
+                m = int(m)
+                if not alive[m] or not (avail[m] > 1e-9).any():
+                    continue
+                if not cands:
+                    break
+                # sound skip: machine can host nothing if its availability is
+                # below the per-dim minimum demand of all remaining candidates
+                min_dem = np.min([t.demand for t in cands], axis=0)
+                fd = list(self.spec.matcher.fit_dims)
+                if (avail[m][fd] + 1e-9 < min_dem[fd]).any() and not self.spec.matcher.use_overbooking:
+                    continue
+                picks = matcher.find_tasks_for_machine(m, avail[m], cands, views)
+                started_ids = set()
+                for task, _over in picks:
+                    start_task(jobs[task.job_id], task.task_id, m, now)
+                    started_ids.add((task.job_id, task.task_id))
+                if started_ids:
+                    cands = [t for t in cands if (t.job_id, t.task_id) not in started_ids]
+
+        while events:
+            t_now, _, kind, data = heapq.heappop(events)
+            if kind == "arrival":
+                k, dag, g = data
+                pri = self._make_pri(dag, rng)
+                job = _Job(k, dag, t_now, g, pri)
+                jobs[k] = job
+                match_all(t_now)
+            elif kind == "finish":
+                (rid,) = data
+                info = running[rid]
+                if info["dead"]:
+                    continue
+                job = jobs[info["job"]]
+                tid = info["task"]
+                free_run(rid)
+                # kill sibling speculative copies
+                for sib in task_active.get((job.job_id, tid), []):
+                    if sib != rid and not running[sib]["dead"]:
+                        free_run(sib)
+                job.task_done(tid)
+                if job.complete and job.finish is None:
+                    job.finish = t_now
+                    results.append(JobResult(job.job_id, job.group, job.arrival,
+                                             t_now, job.dag.n))
+                if cfg.record_usage:
+                    usage_samples.append((t_now, (1.0 - avail[alive]).sum(axis=0)))
+                # drain simultaneous finishes before re-matching
+                while events and events[0][2] == "finish" and events[0][0] <= t_now + 1e-9:
+                    _, _, _, (rid2,) = heapq.heappop(events)
+                    info2 = running[rid2]
+                    if info2["dead"]:
+                        continue
+                    job2 = jobs[info2["job"]]
+                    tid2 = info2["task"]
+                    free_run(rid2)
+                    for sib in task_active.get((job2.job_id, tid2), []):
+                        if sib != rid2 and not running[sib]["dead"]:
+                            free_run(sib)
+                    job2.task_done(tid2)
+                    if job2.complete and job2.finish is None:
+                        job2.finish = t_now
+                        results.append(JobResult(job2.job_id, job2.group, job2.arrival,
+                                                 t_now, job2.dag.n))
+                match_all(t_now)
+            elif kind == "spec":
+                (rid,) = data
+                info = running[rid]
+                if info["dead"]:
+                    continue
+                job = jobs[info["job"]]
+                tid = info["task"]
+                # only speculate if some machine can host a copy right now
+                dem = job.dag.demand[tid]
+                fit = np.nonzero(alive & (avail >= dem - 1e-9).all(axis=1))[0]
+                if len(fit):
+                    start_task(job, tid, int(fit[0]), t_now, speculative=True)
+            elif kind == "fail":
+                m = int(rng.integers(M))
+                if alive[m]:
+                    alive[m] = False
+                    for rid, info in list(running.items()):
+                        if not info["dead"] and info["machine"] == m:
+                            free_run(rid)
+                            job = jobs[info["job"]]
+                            job.task_requeued(info["task"])
+                            requeued += 1
+                    avail[m] = 0.0
+                    heapq.heappush(events, (t_now + cfg.repair_time, next(counter), "join", (m,)))
+                still_work = any(not j.complete for j in jobs.values()) or any(
+                    e[2] == "arrival" for e in events
+                )
+                if cfg.failure_rate > 0 and still_work:
+                    nxt = t_now + float(rng.exponential(1.0 / cfg.failure_rate))
+                    heapq.heappush(events, (nxt, next(counter), "fail", ()))
+            elif kind == "join":
+                (m,) = data
+                alive[m] = True
+                avail[m] = 1.0
+                match_machine(m, t_now)
+
+        makespan = max((j.finish for j in results), default=0.0)
+        return SimResult(results, makespan, usage_samples, allocations,
+                         spec_launches, requeued)
+
+
+def run_workload(
+    dags: Sequence[DAG],
+    scheme_name: str,
+    n_machines: int = 50,
+    interarrival: float = 25.0,
+    n_groups: int = 1,
+    seed: int = 0,
+    **cfg_overrides,
+) -> SimResult:
+    """Poisson arrivals (§8.1: avg 25s apart), even group assignment."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    arrivals = []
+    for k, dag in enumerate(dags):
+        arrivals.append((t, dag, k % n_groups))
+        t += float(rng.exponential(interarrival))
+    sim_fields = {f.name for f in dataclasses.fields(SimConfig)}
+    matcher_fields = {f.name for f in dataclasses.fields(MatcherConfig)}
+    sim_kwargs = {k: v for k, v in cfg_overrides.items() if k in sim_fields}
+    matcher_kwargs = {k: v for k, v in cfg_overrides.items() if k in matcher_fields}
+    unknown = set(cfg_overrides) - sim_fields - matcher_fields
+    if unknown:
+        raise TypeError(f"unknown overrides: {unknown}")
+    cfg = SimConfig(n_machines=n_machines, seed=seed, **sim_kwargs)
+    return ClusterSim(cfg, scheme(scheme_name, **matcher_kwargs)).run(arrivals)

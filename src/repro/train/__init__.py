@@ -1,0 +1,3 @@
+from .step import TrainConfig, init_train_state, make_train_step
+from .pipeline import (PipelinePlan, gpipe_makespan, ideal_makespan,
+                       one_f_one_b_makespan, pipeline_dag, schedule_pipeline)

@@ -1,0 +1,77 @@
+"""Training step builder: loss -> grads -> AdamW, with gradient
+accumulation over microbatches.
+
+Microbatch execution order is pluggable: `microbatch_order` takes the
+static permutation produced by the DAGPS pipeline scheduler
+(train/pipeline.py) so the gradient-accumulation loop runs microbatches in
+the schedule's order (semantically neutral for pure grad-accum, load-
+bearing for the pipeline executor which shares this code path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..models import model as M
+from ..optim import AdamWConfig, apply_updates, init_state
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    microbatches: int = 1
+    microbatch_order: tuple[int, ...] | None = None   # from DAGPS (L3)
+
+
+def make_train_step(cfg: M.ArchConfig, tcfg: TrainConfig) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss(params, batch):
+        return M.loss_fn(params, cfg, batch)
+
+    grad_fn = jax.value_and_grad(loss)
+
+    def train_step(params, opt_state, batch):
+        n_mb = tcfg.microbatches
+        if n_mb <= 1:
+            l, grads = grad_fn(params, batch)
+        else:
+            B = batch["tokens"].shape[0]
+            assert B % n_mb == 0
+            mb = B // n_mb
+            order = jnp.asarray(tcfg.microbatch_order
+                                if tcfg.microbatch_order is not None
+                                else range(n_mb), dtype=jnp.int32)
+
+            def slice_mb(i):
+                start = order[i] * mb
+                return {k: lax.dynamic_slice_in_dim(v, start, mb, axis=0)
+                        for k, v in batch.items()}
+
+            def acc_fn(carry, i):
+                acc, lsum = carry
+                li, gi = grad_fn(params, slice_mb(i))
+                acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), acc, gi)
+                return (acc, lsum + li), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gacc, lsum), _ = lax.scan(acc_fn, (zeros, 0.0), jnp.arange(n_mb))
+            grads = jax.tree.map(lambda g: g / n_mb, gacc)
+            l = lsum / n_mb
+        new_params, new_opt, om = apply_updates(tcfg.optimizer, params, grads, opt_state)
+        metrics = {"loss": l, **om}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def init_train_state(cfg: M.ArchConfig, tcfg: TrainConfig, rng, dtype=jnp.bfloat16):
+    params = M.init_params(cfg, rng, dtype)
+    opt_state = init_state(tcfg.optimizer, params)
+    return params, opt_state

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# tests must see 1 CPU device (the dry-run sets its own flags in-process);
+# keep any user XLA_FLAGS out of the way.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,105 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
+swept over shapes and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import kernel as fak, ref as far
+from repro.kernels.rg_lru import kernel as rgk, ref as rgr
+from repro.kernels.rwkv6 import kernel as wkk, ref as wkr
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [
+    # (B, Sq, Sk, H, KV, hd)
+    (1, 128, 128, 2, 2, 64),
+    (2, 256, 256, 4, 2, 64),
+    (1, 128, 256, 4, 1, 128),   # MQA, rectangular
+])
+@pytest.mark.parametrize("opts", [
+    dict(causal=True),
+    dict(causal=True, window=64),
+    dict(causal=True, cap=30.0),
+    dict(causal=False),
+])
+def test_flash_attention_matches_ref(dtype, shape, opts):
+    B, Sq, Sk, H, KV, hd = shape
+    q = jax.random.normal(KEY, (B, Sq, H, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, Sk, KV, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, Sk, KV, hd), dtype)
+    got = fak.flash_attention(q, k, v, block_q=64, block_k=64,
+                              interpret=True, **opts)
+    want = far.attention(q, k, v, **opts)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(1, 32, 2, 16), (2, 64, 3, 32)])
+@pytest.mark.parametrize("chunk", [16, 32])
+def test_wkv6_matches_ref(dtype, shape, chunk):
+    B, S, H, N = shape
+    r = (jax.random.normal(KEY, (B, S, H, N)) * 0.5).astype(dtype)
+    k = (jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, H, N)) * 0.5).astype(dtype)
+    v = (jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, H, N)) * 0.5).astype(dtype)
+    w = (jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(KEY, 3), (B, S, H, N)))
+         * 0.5 + 0.45).astype(dtype)
+    u = (jax.random.normal(jax.random.fold_in(KEY, 4), (H, N)) * 0.3).astype(jnp.float32)
+    s0 = jax.random.normal(jax.random.fold_in(KEY, 5), (B, H, N, N)) * 0.1
+    y1, sT1 = wkk.wkv6(r, k, v, w, u, s0, chunk=chunk, interpret=True)
+    y2, sT2 = wkr.wkv6(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(sT1), np.asarray(sT2), rtol=1e-3, atol=1e-3)
+
+
+def test_wkv6_chunk_invariance():
+    B, S, H, N = 1, 64, 2, 16
+    r = jax.random.normal(KEY, (B, S, H, N)) * 0.5
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, H, N)) * 0.5
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, H, N)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(KEY, 3), (B, S, H, N))) * 0.5 + 0.45
+    u = jax.random.normal(jax.random.fold_in(KEY, 4), (H, N)) * 0.3
+    s0 = jnp.zeros((B, H, N, N))
+    outs = [wkk.wkv6(r, k, v, w, u, s0, chunk=c, interpret=True)[0]
+            for c in (8, 16, 64)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(1, 64, 128), (2, 128, 256)])
+def test_rglru_matches_ref(dtype, shape):
+    B, S, D = shape
+    x = (jax.random.normal(KEY, (B, S, D)) * 0.5).astype(dtype)
+    a = (jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, D)))
+         * 0.4 + 0.5).astype(dtype)
+    h0 = jax.random.normal(jax.random.fold_in(KEY, 2), (B, D)) * 0.2
+    h1, hT1 = rgk.rglru_scan(x, a, h0, chunk=32, d_block=128, interpret=True)
+    h2, hT2 = rgr.rglru_scan(x, a, h0)
+    np.testing.assert_allclose(np.asarray(h1, np.float32),
+                               np.asarray(h2, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(hT1), np.asarray(hT2), rtol=1e-3, atol=1e-3)
+
+
+def test_rglru_state_chaining():
+    """Running two half-sequences with carried state == one full run."""
+    B, S, D = 1, 64, 128
+    x = jax.random.normal(KEY, (B, S, D)) * 0.5
+    a = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, D))) * 0.4 + 0.5
+    h0 = jnp.zeros((B, D))
+    full, _ = rgk.rglru_scan(x, a, h0, chunk=16, interpret=True)
+    h1, hT = rgk.rglru_scan(x[:, :32], a[:, :32], h0, chunk=16, interpret=True)
+    h2, _ = rgk.rglru_scan(x[:, 32:], a[:, 32:], hT, chunk=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(full),
+                               np.asarray(jnp.concatenate([h1, h2], axis=1)),
+                               rtol=1e-5, atol=1e-5)

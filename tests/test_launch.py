@@ -1,0 +1,128 @@
+"""Launch-layer tests: sharding rules (pure logic) + a tiny-mesh pjit
+compile in a subprocess (the main test process keeps 1 device)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_spec_guards_divisibility():
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from jax.sharding import PartitionSpec as P
+from repro.launch.sharding import spec_for_path, _guard
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+
+
+class K:
+    def __init__(self, key):
+        self.key = key
+
+
+# wk with kv heads = 2 < model axis 4 -> TP dropped
+s = spec_for_path((K("body"), K("attn"), K("wk")), (8, 64, 2, 16), mesh)
+assert s == P(None, "data", None, None), s
+# mlp weight: both axes shard
+s = spec_for_path((K("mlp"), K("wg")), (64, 128), mesh)
+assert s == P("data", "model"), s
+# inference: fsdp off
+s = spec_for_path((K("mlp"), K("wg")), (64, 128), mesh, fsdp=False)
+assert s == P(None, "model"), s
+# moe with many experts: expert-parallel
+s = spec_for_path((K("moe"), K("wg")), (8, 64, 128), mesh)
+assert s == P("model", "data", None), s
+# moe with few experts: expert-TP on d_ff
+s = spec_for_path((K("moe"), K("wg")), (2, 64, 128), mesh)
+assert s == P(None, "data", "model"), s
+print("SPEC_OK")
+"""
+    out = _run(code)
+    assert "SPEC_OK" in out
+
+
+def test_tiny_mesh_train_compiles():
+    """End-to-end pjit train-step compile on a 2x2 debug mesh."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from repro import configs
+from repro.data import batch_specs
+from repro.models import model as M
+from repro.models.sharding import activation_sharding
+from repro.optim import AdamWConfig, init_state
+from repro.train import TrainConfig, make_train_step
+from repro.launch.sharding import activation_rules, batch_shardings, tree_shardings
+
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+cfg = configs.get_smoke("gemma2_2b")
+tcfg = TrainConfig(optimizer=AdamWConfig())
+with mesh, activation_sharding(mesh, activation_rules(mesh, 4, n_kv=cfg.n_kv_heads)):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params_s = jax.eval_shape(lambda k: M.init_params(cfg, k), key)
+    pspec = tree_shardings(params_s, mesh)
+    opt_s = jax.eval_shape(lambda p: init_state(tcfg.optimizer, p), params_s)
+    ospec = tree_shardings(opt_s, mesh)
+    bsd = batch_specs(cfg, 4, 32)
+    bspec = batch_shardings(bsd, mesh)
+    step = make_train_step(cfg, tcfg)
+    compiled = jax.jit(step, in_shardings=(pspec, ospec, bspec),
+                       out_shardings=(pspec, ospec, None)).lower(
+        params_s, opt_s, bsd).compile()
+    assert compiled.cost_analysis()["flops"] > 0
+print("COMPILE_OK")
+"""
+    out = _run(code)
+    assert "COMPILE_OK" in out
+
+
+def test_collective_parser():
+    from repro.launch.roofline import parse_collectives
+    hlo = '''
+  %all-gather = f32[4096,128]{1,0} all-gather(%x), channel_id=1, replica_groups=[16,16]<=[16,16]T(1,0), dimensions={0}
+  %all-reduce.1 = bf16[128,64]{1,0} all-reduce(%y), replica_groups=[32,8]<=[256], to_apply=%add
+  %ars = (f32[64]{0}, f32[64]{0}) all-reduce-start(%z), replica_groups={{0,1,2,3}}
+  %ard = f32[64]{0} all-reduce-done(%ars)
+  %cp = bf16[32,32]{1,0} collective-permute(%w), source_target_pairs={{0,1},{1,0}}
+'''
+    st = parse_collectives(hlo, 256)
+    assert st.count_by_kind == {"all-gather": 1, "all-reduce": 2,
+                                "collective-permute": 1}
+    ag = 4096 * 128 * 4 * 15 / 16
+    ar = 128 * 64 * 2 * 2 * 7 / 8
+    ars = 2 * (64 * 4) * 3 / 4   # start counted once, group of 4
+    cp = 32 * 32 * 2
+    assert st.bytes_by_kind["all-gather"] == pytest.approx(ag)
+    assert st.bytes_by_kind["all-reduce"] == pytest.approx(ar + ars)
+    assert st.bytes_by_kind["collective-permute"] == pytest.approx(cp)
+
+
+def test_roofline_terms_math():
+    from repro.launch.roofline import CollectiveStats, roofline_terms
+    coll = CollectiveStats({"all-reduce": 1e9}, 1e9, {"all-reduce": 3})
+    rl = roofline_terms({"flops": 197e12, "bytes accessed": 819e9}, coll,
+                        n_devices=2, model_flops=2 * 197e12)
+    assert rl.compute_s == pytest.approx(1.0)
+    assert rl.memory_s == pytest.approx(1.0)
+    assert rl.collective_s == pytest.approx(1e9 / 50e9)
+    assert rl.dominant in ("compute", "memory")
+    assert rl.useful_ratio == pytest.approx(1.0)
+
+
+def _run(code: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("JAX_PLATFORMS", None)
+    env["JAX_PLATFORMS"] = "cpu"
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, env=env, timeout=420)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return proc.stdout

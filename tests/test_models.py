@@ -1,0 +1,145 @@
+"""Per-architecture smoke tests + model-level behaviors."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model as M
+from repro.serve import pad_prefill_state
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=16):
+    shape = (B, S, cfg.n_codebooks) if cfg.n_codebooks > 1 else (B, S)
+    toks = jax.random.randint(KEY, shape, 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.vlm_patches:
+        batch["patches"] = jax.random.normal(
+            KEY, (B, cfg.vlm_patches, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    """Reduced config: one forward + one train step, shapes + finiteness."""
+    cfg = configs.get_smoke(arch)
+    params = M.init_params(cfg, KEY, dtype=jnp.float32)
+    batch = _batch(cfg)
+    logits = M.forward(params, cfg, batch)
+    S_out = batch["tokens"].shape[1] + cfg.vlm_patches
+    expect = (2, S_out, cfg.n_codebooks, cfg.vocab_padded) if cfg.n_codebooks > 1 \
+        else (2, S_out, cfg.vocab_padded)
+    assert logits.shape == expect
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    from repro.optim import AdamWConfig
+    from repro.train import TrainConfig, make_train_step, init_train_state
+    tcfg = TrainConfig(optimizer=AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10))
+    params, opt = init_train_state(cfg, tcfg, KEY, dtype=jnp.float32)
+    step = make_train_step(cfg, tcfg)
+    p2, o2, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(o2["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", ["granite3_8b", "gemma2_2b", "rwkv6_7b",
+                                  "recurrentgemma_2b", "musicgen_large",
+                                  "mixtral_8x7b", "deepseek_moe_16b",
+                                  "qwen2_vl_7b", "codeqwen15_7b",
+                                  "phi4_mini_3_8b"])
+def test_decode_matches_forward(arch):
+    """prefill(S-1) + decode_step(S-1) == forward(S)[-1] for every family."""
+    cfg = configs.get_smoke(arch)
+    if cfg.vlm_patches:
+        pytest.skip("vlm decode covered separately (patch cache semantics)")
+    params = M.init_params(cfg, jax.random.PRNGKey(1), dtype=jnp.float32)
+    B, S = 2, 12
+    shape = (B, S, cfg.n_codebooks) if cfg.n_codebooks > 1 else (B, S)
+    toks = jax.random.randint(jax.random.PRNGKey(2), shape, 0, cfg.vocab)
+    full = M.forward(params, cfg, {"tokens": toks})
+    _, state = M.prefill(params, cfg, {"tokens": toks[:, : S - 1]})
+    state = pad_prefill_state(cfg, state, S)
+    dl, _ = M.decode_step(params, cfg, state, toks[:, S - 1 : S],
+                          jnp.full((B,), S - 1, jnp.int32))
+    err = float(jnp.max(jnp.abs(dl[:, 0] - full[:, -1])))
+    assert err < 2e-2, err
+
+
+def test_decode_ring_buffer_local_attention():
+    """Sliding-window ring cache: decoding past the window stays finite and
+    matches a full-cache decode on the overlapping window."""
+    cfg = configs.get_smoke(mixtral := "mixtral_8x7b")
+    params = M.init_params(cfg, KEY, dtype=jnp.float32)
+    B = 1
+    state = M.init_decode_state(cfg, B, S_max=cfg.window, dtype=jnp.float32)
+    pos = jnp.zeros((B,), jnp.int32)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    for i in range(cfg.window + 4):  # wrap the ring
+        logits, state = M.decode_step(params, cfg, state, tok, pos)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+        pos = pos + 1
+
+
+def test_moe_capacity_drops_tokens():
+    from repro.models.layers import MoEConfig, moe_forward, moe_init
+    d = 32
+    cfg_tight = MoEConfig(n_experts=4, top_k=2, d_expert=64, capacity_factor=0.5)
+    p = moe_init(KEY, d, cfg_tight, dtype=jnp.float32)
+    x = jax.random.normal(KEY, (2, 16, d), jnp.float32)
+    y_tight = moe_forward(p, x, cfg_tight)
+    cfg_loose = MoEConfig(n_experts=4, top_k=2, d_expert=64, capacity_factor=8.0)
+    y_loose = moe_forward(p, x, cfg_loose)
+    assert not np.allclose(np.asarray(y_tight), np.asarray(y_loose))
+
+
+def test_vocab_padding_masked():
+    cfg = configs.get_smoke("granite3_8b")
+    assert cfg.vocab_padded == cfg.vocab  # 256 already aligned
+    import dataclasses
+    cfg2 = dataclasses.replace(cfg, vocab=250)
+    params = M.init_params(cfg2, KEY, dtype=jnp.float32)
+    logits = M.forward(params, cfg2, _batch(cfg2))
+    pad = np.asarray(logits, np.float32)[..., 250:]
+    assert (pad < -1e8).all()
+
+
+def test_loss_decreases_under_training():
+    from repro.optim import AdamWConfig
+    from repro.train import TrainConfig, make_train_step, init_train_state
+    from repro.data import DataConfig, make_batch
+    cfg = configs.get_smoke("phi4_mini_3_8b")
+    tcfg = TrainConfig(optimizer=AdamWConfig(lr=2e-3, warmup_steps=2, total_steps=40))
+    params, opt = init_train_state(cfg, tcfg, KEY, dtype=jnp.float32)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    losses = []
+    for i in range(6):
+        b = make_batch(cfg, DataConfig(), i % 2, 8, 32)  # 2 repeating batches
+        params, opt, m = step(params, opt, b)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+
+def test_grad_accumulation_matches_full_batch():
+    from repro.optim import AdamWConfig
+    from repro.train import TrainConfig, make_train_step, init_train_state
+    cfg = configs.get_smoke("granite3_8b")
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=10, grad_clip=0.0)
+    batch = _batch(cfg, B=4, S=16)
+    outs = {}
+    for mb, order in ((1, None), (2, None), (2, (1, 0))):
+        tcfg = TrainConfig(optimizer=opt_cfg, microbatches=mb, microbatch_order=order)
+        params, opt = init_train_state(cfg, tcfg, KEY, dtype=jnp.float32)
+        step = make_train_step(cfg, tcfg)
+        p2, _, m = step(params, opt, batch)
+        outs[(mb, order)] = (m["loss"], p2)
+    l1, p1 = outs[(1, None)]
+    for key in ((2, None), (2, (1, 0))):
+        l2, p2 = outs[key]
+        assert abs(float(l1) - float(l2)) < 1e-4
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-3, atol=2e-5)

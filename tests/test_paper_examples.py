@@ -1,0 +1,79 @@
+"""Paper worked examples: Fig. 2 and the appendix adversarial DAGs.
+
+Fig. 2's exact demand vectors are not published in the text; we use a
+construction with the same structure (three pairwise-conflicting tasks
+{t0, t1, t3}, long tasks {t0, t2, t4} that OPT overlaps) and the same
+qualitative outcome: DAGPS == OPT while CPSched/Tetris pay ~2-3x.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import DAG, build_schedule, new_lb
+from repro.core.baselines import bfs_order, cp_order, simulate_execution
+from repro.sim.workload import lemma1_dag, tetris_trap_dag
+
+T, EPS = 100.0, 0.02
+
+
+def fig2_dag() -> DAG:
+    dur = np.array([T, EPS * T, T * (1 - 4 * EPS), EPS * T, T * (1 - 2 * EPS)])
+    dem = np.array([
+        [0.80, 0.05],   # t0: long
+        [0.75, 0.10],   # t1 -> t2
+        [0.10, 0.80],   # t2: long
+        [0.70, 0.25],   # t3 -> t4 (conflicts t2 on r1)
+        [0.05, 0.10],   # t4: long
+    ])
+    parents = [np.array([], int), np.array([], int), np.array([1]),
+               np.array([], int), np.array([3])]
+    return DAG(duration=dur, demand=dem, stage_of=np.arange(5),
+               parents=parents, name="fig2")
+
+
+def test_fig2_dagps_matches_opt():
+    dag = fig2_dag()
+    opt = T * (1 + 2 * EPS)
+    sched = build_schedule(dag, m=1, ticks=400)
+    sched.validate()
+    assert sched.makespan <= opt * 1.02
+
+
+def test_fig2_cp_and_tetris_pay_2x():
+    dag = fig2_dag()
+    opt = T * (1 + 2 * EPS)
+    cp = simulate_execution(dag, 1, order=cp_order(dag))
+    tet = simulate_execution(dag, 1, policy="tetris")
+    assert cp >= 1.8 * opt
+    assert tet >= 1.8 * opt
+
+
+def test_fig2_online_follows_schedule():
+    dag = fig2_dag()
+    sched = build_schedule(dag, m=1, ticks=400)
+    dg = simulate_execution(dag, 1, policy="dagps", pri_score=sched.pri_score)
+    assert dg <= T * (1 + 2 * EPS) * 1.02
+
+
+def test_lemma1_dependency_blind_loses():
+    """Fig. 17: schedulers ignoring structure pay ~Omega(d) on the red-task
+    DAG; DAGPS's structural tie-break finds the red tasks."""
+    dag = lemma1_dag(d=4, k=6, t=10.0)
+    lb = new_lb(dag, 1)
+    # dependency-blind: BFS with adversarial stage ids runs red tasks last
+    blind = simulate_execution(dag, 1, order=bfs_order(dag))
+    sched = build_schedule(dag, m=1)
+    sched.validate()
+    dagps = simulate_execution(dag, 1, policy="dagps", pri_score=sched.pri_score)
+    assert blind > 1.5 * lb
+    assert dagps <= blind
+    assert sched.makespan <= 1.35 * lb
+
+
+def test_tetris_trap():
+    """Fig. 19 spirit: greedy packing serializes long tasks DAGPS overlaps."""
+    dag = tetris_trap_dag(d=4)
+    sched = build_schedule(dag, m=1)
+    sched.validate()
+    tet = simulate_execution(dag, 1, policy="tetris")
+    assert sched.makespan <= tet * 1.05  # never worse than the greedy packer

@@ -1,0 +1,69 @@
+"""Property-based tests (hypothesis) for system invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DAG, build_schedule, new_lb, simulate_execution
+from repro.core.baselines import bfs_order
+from repro.core.online import DeficitCounters
+from repro.optim.compression import dequantize, quantize_int8
+
+
+@st.composite
+def small_dags(draw):
+    n_stages = draw(st.integers(2, 7))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+    tasks, durs, dems, deps = [], [], [], []
+    for s in range(n_stages):
+        tasks.append(int(rng.integers(1, 5)))
+        durs.append(float(rng.uniform(0.5, 20.0)))
+        dems.append(np.clip(rng.uniform(0.05, 0.8, 4), 0.05, 0.8))
+        n_par = int(rng.integers(0, min(s, 2) + 1))
+        deps.append(sorted(rng.choice(s, size=n_par, replace=False).tolist()) if s and n_par else [])
+    from repro.core.dag import from_stage_graph
+    return from_stage_graph(tasks, durs, dems, deps, rng=rng)
+
+
+@settings(max_examples=15, deadline=None)
+@given(small_dags(), st.integers(1, 4))
+def test_schedule_respects_dependencies_and_beats_nothing(dag, m):
+    sched = build_schedule(dag, m=m, ticks=128)
+    sched.validate()                       # deps + capacity
+    assert dag.validate_order(sched.order)
+    # constructed makespan is never below the lower bound (allow tick fuzz)
+    lb = new_lb(dag, m)
+    assert sched.makespan >= lb * 0.98 - 2 * sched.tick
+
+
+@settings(max_examples=15, deadline=None)
+@given(small_dags(), st.integers(1, 4))
+def test_executor_work_conserving_and_bounded(dag, m):
+    ms = simulate_execution(dag, m, order=bfs_order(dag))
+    lb = new_lb(dag, m)
+    serial = float(dag.duration.sum())
+    assert lb * 0.999 <= ms <= serial + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 3), min_size=5, max_size=60),
+       st.floats(0.05, 0.5))
+def test_deficit_counters_never_exceed_bound_when_enforced(allocs, kappa):
+    """If the scheduler always serves must_serve() when set, deficits stay
+    within kappa*C + one allocation quantum."""
+    C = 10.0
+    dc = DeficitCounters({0: 1.0, 1: 1.0, 2: 1.0, 3: 1.0}, capacity=C, kappa=kappa)
+    for g in allocs:
+        forced = dc.must_serve()
+        dc.allocated(forced if forced is not None else g, 1.0)
+        worst = max(dc.deficit.values())
+        assert worst <= kappa * C + 1.0 + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 512))
+def test_int8_compression_relative_error(seed, n):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n).astype(np.float32) * rng.uniform(1e-3, 1e3)
+    q, s = quantize_int8(x)
+    err = np.abs(dequantize(np.asarray(q), np.asarray(s)) - x)
+    assert err.max() <= float(s) * 0.5 + 1e-12  # half-ULP of the int8 grid
