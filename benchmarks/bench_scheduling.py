@@ -184,13 +184,35 @@ def bench_domains() -> None:
 
 
 def bench_construction() -> None:
-    """§7: BuildSchedule wall time across DAG sizes."""
-    for scale, label in ((0.5, "small"), (1.0, "medium"), (2.0, "large")):
+    """§7: BuildSchedule wall time across DAG sizes, per placement backend.
+
+    Emits one row per (size, backend) plus the reference/batched speedup
+    ratio so BENCH_*.json tracks the perf trajectory of the engine layer.
+    """
+    from repro.core import available_backends, get_backend
+    from benchmarks import common
+
+    sizes = ((0.5, "small"),) if common.QUICK else (
+        (0.5, "small"), (1.0, "medium"), (2.0, "large"))
+    backends = ["reference", "batched"]
+    if "jit" in available_backends() and get_backend("jit").available() \
+            and not common.QUICK:
+        backends.append("jit")
+    for scale, label in sizes:
         dag = production_dag(np.random.default_rng(99), scale=scale, share=8)
-        t0 = time.perf_counter()
-        build_schedule(dag, 8)
-        dt = time.perf_counter() - t0
-        emit(f"s7_construction_{label}_n{dag.n}", dt * 1e6, round(dt, 3))
+        times: dict[str, float] = {}
+        for be in backends:
+            t0 = time.perf_counter()
+            build_schedule(dag, 8, backend=be)
+            times[be] = time.perf_counter() - t0
+            emit(f"s7_construction_{label}_n{dag.n}_{be}",
+                 times[be] * 1e6, round(times[be], 3))
+        # legacy row: the default backend's wall time under the old name
+        emit(f"s7_construction_{label}_n{dag.n}",
+             times["batched"] * 1e6, round(times["batched"], 3))
+        emit(f"s7_construction_{label}_speedup_ref_over_batched",
+             times["batched"] * 1e6,
+             round(times["reference"] / max(times["batched"], 1e-9), 2))
 
 
 ALL = [bench_jct, bench_makespan, bench_fairness, bench_alternatives,

@@ -18,6 +18,10 @@ ROWS: list[tuple[str, float, str]] = []
 # paper-sized populations.
 SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
 
+# --quick: smoke mode for CI — benchmarks that support it shrink to their
+# smallest variant (e.g. construction runs only the small DAG).
+QUICK = False
+
 
 def n_jobs(base: int) -> int:
     return max(int(base * SCALE), 2)

@@ -6,13 +6,14 @@ the paper's 20k-DAG populations correspond to SCALE ~ 800).
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run jct roofline
+  PYTHONPATH=src python -m benchmarks.run --quick construction   # CI smoke
 """
 
 from __future__ import annotations
 
 import sys
 
-from . import bench_scheduling, bench_systems
+from . import bench_scheduling, bench_systems, common
 
 GROUPS = {
     "jct": [bench_scheduling.bench_jct],
@@ -31,6 +32,9 @@ GROUPS = {
 
 def main() -> None:
     args = sys.argv[1:]
+    if "--quick" in args:
+        args = [a for a in args if a != "--quick"]
+        common.QUICK = True
     names = args if args else list(GROUPS)
     print("name,us_per_call,derived")
     for name in names:

@@ -13,6 +13,8 @@ Experimental baselines:
 All of these run through `simulate_execution`, an event-driven,
 work-conserving list-scheduling executor over m machines with d-resource
 capacity — so comparisons measure the *order quality*, exactly as in Fig. 12.
+Fit tests and packing scores go through `engine.packing`, the same kernels
+the online matcher and the cluster simulator use.
 """
 
 from __future__ import annotations
@@ -23,6 +25,7 @@ from typing import Callable, Sequence
 import numpy as np
 
 from .dag import DAG
+from .engine import packing
 
 
 # ----------------------------------------------------------------------
@@ -138,15 +141,11 @@ def simulate_execution(
                 cands = np.fromiter(runnable, dtype=np.int64, count=len(runnable))
             if len(cands) == 0:
                 return
-            demc = dag.demand[cands][:, fit]                    # (nc, df)
-            ok = (avail[None, :, fit] >= demc[:, None, :] - 1e-9).all(axis=2)  # (nc, m)
+            ok, best_m, best_s = packing.best_fit_machines(avail, dag.demand[cands],
+                                                           dims=fit)
             fit_any = ok.any(axis=1)
             if not fit_any.any():
                 return
-            scores = demc @ avail[:, fit].T                     # (nc, m)
-            scores = np.where(ok, scores, -np.inf)
-            best_m = np.argmax(scores, axis=1)
-            best_s = scores[np.arange(len(cands)), best_m]
             if policy == "priority":
                 pr = np.where(fit_any, prio[cands], np.inf)
                 ci = int(np.argmin(pr))
@@ -209,7 +208,8 @@ def strip_levels(dag: DAG) -> np.ndarray:
 
 def run_baseline(dag: DAG, m: int, scheme: str, seed: int = 0,
                  fit_dims: Sequence[int] | None = None,
-                 pri_score: np.ndarray | None = None) -> float:
+                 pri_score: np.ndarray | None = None,
+                 backend: str | None = None) -> float:
     """Makespan of `scheme` on dag with m machines."""
     if scheme == "bfs":
         return simulate_execution(dag, m, order=bfs_order(dag), fit_dims=fit_dims)
@@ -228,7 +228,7 @@ def run_baseline(dag: DAG, m: int, scheme: str, seed: int = 0,
     if scheme == "dagps":
         from .builder import build_schedule
 
-        sched = build_schedule(dag, m)
+        sched = build_schedule(dag, m, backend=backend)
         return simulate_execution(
             dag, m, policy="dagps", pri_score=pri_score if pri_score is not None else sched.pri_score,
             fit_dims=fit_dims,

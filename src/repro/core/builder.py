@@ -14,17 +14,27 @@ BuildSchedule:
   4. Keep the most compact schedule across all candidates; OrderTasks
      returns tasks sorted by start time, which the online component (§5)
      consumes as priScore.
+
+All candidate (T-set, order, direction) variants are evaluated against ONE
+shared Space through snapshot/restore (an undo log — O(cells written) per
+variant, never a full grid clone), and the per-task fit queries go through
+a pluggable placement backend (core/engine/): "reference" rescans the grid
+per task, "batched" (default) answers whole ready-sets with one
+(n_tasks, m, W) feasibility scan, "jit" runs that scan via jax.jit.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import math
 from typing import Iterable
 
 import numpy as np
 
 from .dag import DAG
+from .engine import FORWARD, BACKWARD, PeerTask, PlacementBackend, get_backend
+from .engine.base import ceil32
 from .space import Space
 
 
@@ -64,29 +74,43 @@ class Schedule:
 # ----------------------------------------------------------------------
 
 class _Placer:
-    def __init__(self, dag: DAG, space: Space, dur_ticks: np.ndarray):
+    def __init__(self, dag: DAG, space: Space, dur_ticks: np.ndarray,
+                 backend: PlacementBackend):
         self.dag = dag
         self.space = space
         self.k = dur_ticks
+        self.backend = backend
         # structural tie-break: among equal durations, place tasks that
         # enable the most downstream work first (resolves Fig. 17's "red"
         # tasks, which are identical to their siblings except structurally).
         self.n_desc = np.array([len(dag.children[i]) for i in range(dag.n)])
+        self.n_par = np.array([len(dag.parents[i]) for i in range(dag.n)])
+        self.demand32 = ceil32(dag.demand)   # for float32-comparing sessions
         self.placed_start = np.zeros(dag.n, dtype=np.int64)
         self.placed_end = np.zeros(dag.n, dtype=np.int64)
         self.machine = np.full(dag.n, -1, dtype=np.int64)
         self.is_placed = np.zeros(dag.n, dtype=bool)
 
-    def clone(self, space: Space) -> "_Placer":
+    def branch(self) -> "_Placer":
+        """Cheap variant copy: own task arrays, SHARED space (snapshot it)."""
         p = _Placer.__new__(_Placer)
-        p.dag, p.k = self.dag, self.k
-        p.n_desc = self.n_desc
-        p.space = space
+        p.dag, p.k, p.backend = self.dag, self.k, self.backend
+        p.n_desc, p.n_par = self.n_desc, self.n_par
+        p.demand32 = self.demand32
+        p.space = self.space
         p.placed_start = self.placed_start.copy()
         p.placed_end = self.placed_end.copy()
         p.machine = self.machine.copy()
         p.is_placed = self.is_placed.copy()
         return p
+
+    def _save(self):
+        return (self.placed_start.copy(), self.placed_end.copy(),
+                self.machine.copy(), self.is_placed.copy())
+
+    def _load(self, saved) -> None:
+        self.placed_start, self.placed_end, self.machine, self.is_placed = (
+            saved[0].copy(), saved[1].copy(), saved[2].copy(), saved[3].copy())
 
     def _commit(self, t: int, m: int, t0: int) -> None:
         self.space.commit(t, m, t0, self.k[t], self.dag.demand[t])
@@ -95,102 +119,134 @@ class _Placer:
         self.machine[t] = m
         self.is_placed[t] = True
 
-    def place_forward(self, ids: np.ndarray) -> bool:
-        """PlaceTasksF: dependency-order within subset, longest task first."""
+    def _anchor(self, t: int, forward: bool) -> int:
+        """Ready tick (forward) / deadline tick (backward) for one task.
+
+        Unplaced parents *within the subset* gate readiness; parents outside
+        the subset constrain the start only if already placed (see §4.3
+        discussion of inter-subset dependencies).  Mirrored for backward.
+        """
         dag, sp = self.dag, self.space
-        in_subset = np.zeros(dag.n, dtype=bool)
-        in_subset[ids] = True
-        # unplaced parents *within the subset* gate readiness; parents outside
-        # the subset constrain the start only if already placed (see §4.3
-        # discussion of inter-subset dependencies).
-        pending_parents = np.array(
-            [int(in_subset[dag.parents[i]].sum()) for i in range(dag.n)]
-        )
-        key_fn = lambda i: (-dag.duration[i], -self.n_desc[i], i)
-        ready = [i for i in ids if pending_parents[i] == 0]
-        ready.sort(key=key_fn)
-        remaining = len(ids)
-        hint: dict[tuple[int, float, bytes], tuple[int, int]] = {}
-        while remaining:
-            if not ready:
-                return False  # cycle — cannot happen on a valid DAG
-            t = ready.pop(0)
+        if forward:
             par = dag.parents[t]
             pl = par[self.is_placed[par]] if len(par) else par
             if len(pl):
-                r = int(self.placed_end[pl].max())
-            else:
-                r = sp._min_start if sp._min_start is not None else 0
-            key = (int(dag.stage_of[t]), float(r), dag.demand[t].tobytes())
-            m, t0 = sp.earliest_fit(dag.demand[t], self.k[t], r, hint.get(key))
-            self._commit(t, m, t0)
-            hint[key] = (m, t0)
-            remaining -= 1
-            newly = []
-            for c in dag.children[t]:
-                if in_subset[c]:
-                    pending_parents[c] -= 1
-                    if pending_parents[c] == 0:
-                        newly.append(int(c))
-            if newly:
-                ready.extend(newly)
-                ready.sort(key=key_fn)
-        return True
+                return int(self.placed_end[pl].max())
+            return sp._min_start if sp._min_start is not None else 0
+        ch = dag.children[t]
+        pl = ch[self.is_placed[ch]] if len(ch) else ch
+        if len(pl):
+            return int(self.placed_start[pl].min())
+        if sp._max_end is not None:
+            # unanchored task: pack against the occupied region instead of
+            # drifting to the far end of the grid.
+            return int(sp._max_end)
+        return sp.grid_end  # logical end of the empty grid
 
-    def place_backward(self, ids: np.ndarray) -> bool:
-        """PlaceTasksB: mirror image — children first, latest feasible slot."""
+    def place_pass(self, ids: np.ndarray, direction: str,
+                   limit: int | None = None) -> bool:
+        """PlaceTasksF / PlaceTasksB: dependency order within the subset,
+        longest task first, each task at its extreme feasible slot.
+
+        ``limit`` prunes exactly: the occupied span only ever grows, so
+        once it reaches the incumbent best the variant can never win and
+        the pass aborts (the caller rolls the space back either way).  The
+        derived per-placement ``cap`` lets a session stop searching early
+        once every admissible slot is provably past the bound (see
+        PlacementSession.place).
+        """
         dag, sp = self.dag, self.space
+        forward = direction == FORWARD
         in_subset = np.zeros(dag.n, dtype=bool)
         in_subset[ids] = True
-        pending_children = np.array(
-            [int(in_subset[dag.children[i]].sum()) for i in range(dag.n)]
-        )
-        key_fn = lambda i: (-dag.duration[i], -len(dag.parents[i]), i)
-        ready = [i for i in ids if pending_children[i] == 0]
-        ready.sort(key=key_fn)
+        adj_gate = dag.parents if forward else dag.children
+        adj_open = dag.children if forward else dag.parents
+        pending = np.array([int(in_subset[adj_gate[i]].sum()) for i in range(dag.n)])
+        tie = self.n_desc if forward else self.n_par
+        dur = dag.duration
+        # min-heap pops in the same (-duration, -tie, id) order the sorted
+        # ready list did
+        heap = [(-dur[i], -tie[i], int(i)) for i in ids if pending[i] == 0]
+        heapq.heapify(heap)
         remaining = len(ids)
-        hint: dict[tuple[int, float, bytes], tuple[int, int]] = {}
+        sess = self.backend.session(sp, direction)
+        demand = self.demand32 if sess.wants_f32 else dag.demand
+        peers_fn = None
+        est: dict[int, int] = {}
+        if sess.wants_peers:
+            # estimated anchors for prefetch (exact for anchored tasks; the
+            # session re-clips against the real pop-time anchor regardless)
+            est = {e[2]: self._anchor(e[2], forward) for e in heap}
+
+            def peers_fn():
+                return [PeerTask(e[2], est[e[2]], demand[e[2]], int(self.k[e[2]]))
+                        for e in heap[:24]]
         while remaining:
-            if not ready:
-                return False
-            t = ready.pop(0)
-            ch = dag.children[t]
-            pl = ch[self.is_placed[ch]] if len(ch) else ch
-            if len(pl):
-                deadline = int(self.placed_start[pl].min())
-            elif sp._max_end is not None:
-                # unanchored task: pack against the occupied region instead of
-                # drifting to the far end of the grid.
-                deadline = int(sp._max_end)
-            else:
-                deadline = sp.T - sp.off  # logical end of the empty grid
-            key = (int(dag.stage_of[t]), float(deadline), dag.demand[t].tobytes())
-            m, t0 = sp.latest_fit(dag.demand[t], self.k[t], deadline, hint.get(key))
+            if not heap:
+                return False  # cycle — cannot happen on a valid DAG
+            t = heapq.heappop(heap)[2]
+            anchor = self._anchor(t, forward)
+            key = (int(dag.stage_of[t]), float(anchor), dag.demand[t].tobytes())
+            k = int(self.k[t])
+            cap = None
+            if limit is not None:
+                # the exact start bound past which the new span >= limit
+                if forward and sp._min_start is not None:
+                    cap = limit + sp._min_start - k
+                elif not forward and sp._max_end is not None:
+                    cap = sp._max_end - limit
+            m, t0 = sess.place(t, demand[t], k, anchor, key, peers_fn, cap)
+            if m < 0:
+                return False  # session proved the variant cannot win
             self._commit(t, m, t0)
-            hint[key] = (m, t0)
+            if limit is not None and sp.makespan_ticks >= limit:
+                return False  # span is monotone: this variant cannot win
             remaining -= 1
-            newly = []
-            for p in dag.parents[t]:
-                if in_subset[p]:
-                    pending_children[p] -= 1
-                    if pending_children[p] == 0:
-                        newly.append(int(p))
-            if newly:
-                ready.extend(newly)
-                ready.sort(key=key_fn)
+            for c in adj_open[t]:
+                if in_subset[c]:
+                    pending[c] -= 1
+                    if pending[c] == 0:
+                        c = int(c)
+                        if sess.wants_peers:
+                            est[c] = self._anchor(c, forward)
+                        heapq.heappush(heap, (-dur[c], -tie[c], c))
         return True
 
-    def place_best(self, ids: np.ndarray) -> "_Placer":
-        """PlaceTasks: min(forward, backward) by resulting span (Fig. 7 l.13)."""
+    # kept as thin aliases for readability at call sites / tests
+    def place_forward(self, ids: np.ndarray, limit: int | None = None) -> bool:
+        return self.place_pass(ids, FORWARD, limit)
+
+    def place_backward(self, ids: np.ndarray, limit: int | None = None) -> bool:
+        return self.place_pass(ids, BACKWARD, limit)
+
+    def place_best(self, ids: np.ndarray, limit: int | None = None) -> bool:
+        """PlaceTasks: min(forward, backward) by resulting span (Fig. 7 l.13).
+
+        Tries both directions against the shared space (rolling back in
+        between) and replays the winner's commits — no grid clone.  An
+        aborted direction's true span provably exceeds ``limit``, so a
+        completed direction always beats it and pruning stays exact.
+        """
         if len(ids) == 0:
-            return self
-        fwd = self.clone(self.space.clone())
-        okf = fwd.place_forward(ids)
-        bwd = self.clone(self.space.clone())
-        okb = bwd.place_backward(ids)
-        if okf and (not okb or fwd.space.makespan_ticks <= bwd.space.makespan_ticks):
-            return fwd
-        return bwd
+            return True
+        sp = self.space
+        snap = sp.snapshot()
+        saved = self._save()
+        okf = self.place_forward(ids, limit)
+        span_f = sp.makespan_ticks
+        plan_f = [(p.task, p.machine, p.start)
+                  for p in sp.placements[snap.n_placed:]] if okf else []
+        # keep any growth: the forward plan may be replayed into it below
+        sp.restore(snap, keep_extent=True)
+        self._load(saved)
+        okb = self.place_backward(ids, limit)
+        if okf and (not okb or span_f <= sp.makespan_ticks):
+            sp.restore(snap, keep_extent=True)
+            self._load(saved)
+            for t, m, t0 in plan_f:  # replay is commit-only: no searches
+                self._commit(t, m, t0)
+            return True
+        return okb
 
 
 # ----------------------------------------------------------------------
@@ -281,18 +337,26 @@ def build_schedule(
     n_frag: int = 6,
     max_candidates: int = 24,
     use_partitions: bool = True,
+    backend: str | PlacementBackend | None = None,
 ) -> Schedule:
-    """Construct DAGPS's preferred schedule for one DAG on m machines."""
+    """Construct DAGPS's preferred schedule for one DAG on m machines.
+
+    `backend` selects the placement engine ("reference" | "batched" |
+    "jit"); None resolves REPRO_PLACEMENT_BACKEND, defaulting to "batched".
+    All backends produce tick-identical schedules.
+    """
     if dag.n == 0:
         return Schedule(dag, np.empty(0, np.int64), np.empty(0), np.empty(0, np.int64), 0.0, 1.0)
+    be = get_backend(backend)
     if use_partitions:
         parts = partition_totally_ordered(dag)
         if len(parts) > 1:
-            return _concat_partition_schedules(dag, parts, m, ticks, n_long, n_frag, max_candidates)
-    return _build_one(dag, m, ticks, n_long, n_frag, max_candidates)
+            return _concat_partition_schedules(dag, parts, m, ticks, n_long,
+                                               n_frag, max_candidates, be)
+    return _build_one(dag, m, ticks, n_long, n_frag, max_candidates, be)
 
 
-def _build_one(dag, m, ticks, n_long, n_frag, max_candidates) -> Schedule:
+def _build_one(dag, m, ticks, n_long, n_frag, max_candidates, backend) -> Schedule:
     from .bounds import cp_length, t_work  # local import, no cycle at module load
 
     horizon = max(cp_length(dag), t_work(dag, m))
@@ -301,57 +365,99 @@ def _build_one(dag, m, ticks, n_long, n_frag, max_candidates) -> Schedule:
     grid = int(dur_ticks.sum() / max(m, 1) + dur_ticks.max()) + 4
     grid = max(grid, int(1.25 * horizon / tick) + 4)
 
-    best: tuple[int, _Placer] | None = None
+    # one shared space for every candidate variant: each (T-set, order,
+    # direction) evaluation runs against a snapshot and is rolled back,
+    # so variant cost is O(cells written), never O(grid) cloning.
+    space = Space(m, dag.d, grid, tick)
+    best_span: int | None = None
+    best_state: tuple[np.ndarray, np.ndarray] | None = None
     best_mask: np.ndarray | None = None
     for t_mask in candidate_troublesome(dag, m, n_long, n_frag, max_candidates):
         t_mask, o_mask, p_mask, c_mask = dag.split_subsets(t_mask)
         t_ids, o_ids = np.nonzero(t_mask)[0], np.nonzero(o_mask)[0]
         p_ids, c_ids = np.nonzero(p_mask)[0], np.nonzero(c_mask)[0]
 
-        base = _Placer(dag, Space(m, dag.d, grid, tick), dur_ticks)
-        base = base.place_best(t_ids)  # trouble goes first (Fig. 5 l.7)
+        snap_cand = space.snapshot()
+        base = _Placer(dag, space, dur_ticks, backend)
+        if base.place_best(t_ids, best_span):  # trouble goes first (Fig. 5 l.7)
+            best_span, best_state, best_mask = _try_orders(
+                space, base, o_ids, p_ids, c_ids, t_mask,
+                best_span, best_state, best_mask)
+        space.restore(snap_cand)
+    assert best_state is not None
+    return _to_schedule(dag, best_state[0], best_state[1], tick, best_mask,
+                        label="dagps")
 
-        for order_fn in (_order_opc, _order_ocp, _order_cop, _order_poc):
-            pl = base.clone(base.space.clone())
-            if not order_fn(pl, o_ids, p_ids, c_ids):
-                continue
-            span = pl.space.makespan_ticks
-            if best is None or span < best[0]:
-                best = (span, pl)
+
+def _try_orders(space, base, o_ids, p_ids, c_ids, t_mask,
+                best_span, best_state, best_mask):
+    """TrySubsetOrders (Fig. 7 l.19-23) around a placed T.
+
+    Exact-outcome reductions on the original four orders:
+      * T-OPC and T-OCP share the identical place_best(O) prefix (same
+        pre-state => same placements), computed once; when P or C is empty
+        their tails coincide and only one runs.
+      * With P and C both empty every order degenerates to placing O, and
+        place_best(O) already covers both directions — COP/POC are skipped.
+      * Every pass prunes against the incumbent best span (see place_pass).
+    """
+    def consider(pl, ok):
+        nonlocal best_span, best_state, best_mask
+        if ok:
+            span = space.makespan_ticks
+            if best_span is None or span < best_span:
+                best_span = span
+                best_state = (pl.placed_start.copy(), pl.machine.copy())
                 best_mask = t_mask
-    assert best is not None
-    return _to_schedule(dag, best[1], best_mask, label="dagps")
+    snap_t = space.snapshot()
+    pl_o = base.branch()
+    if pl_o.place_best(o_ids, best_span):        # shared T-O... prefix
+        tails = (_tail_pc,) if (len(p_ids) == 0 or len(c_ids) == 0) \
+            else (_tail_pc, _tail_cp)
+        for tail in tails:
+            snap_o = space.snapshot()
+            pl = pl_o.branch()
+            consider(pl, tail(pl, p_ids, c_ids, best_span))
+            space.restore(snap_o)
+    space.restore(snap_t)
+    if len(p_ids) == 0 and len(c_ids) == 0:
+        return best_span, best_state, best_mask
+    for order_fn in (_order_cop, _order_poc):
+        snap_order = space.snapshot()
+        pl = base.branch()
+        consider(pl, order_fn(pl, o_ids, p_ids, c_ids, best_span))
+        space.restore(snap_order)
+    return best_span, best_state, best_mask
 
 
-def _order_opc(pl: _Placer, o, p, c) -> bool:   # T OPC (Fig. 7 l.20)
-    pl2 = pl.place_best(o)
-    pl.__dict__.update(pl2.__dict__)
-    return pl.place_backward(p) and pl.place_forward(c)
+def _tail_pc(pl: _Placer, p, c, lim) -> bool:        # T OPC (Fig. 7 l.20)
+    return pl.place_backward(p, lim) and pl.place_forward(c, lim)
 
 
-def _order_ocp(pl: _Placer, o, p, c) -> bool:   # T OCP (l.21)
-    pl2 = pl.place_best(o)
-    pl.__dict__.update(pl2.__dict__)
-    return pl.place_forward(c) and pl.place_backward(p)
+def _tail_cp(pl: _Placer, p, c, lim) -> bool:        # T OCP (l.21)
+    return pl.place_forward(c, lim) and pl.place_backward(p, lim)
 
 
-def _order_cop(pl: _Placer, o, p, c) -> bool:   # T COP (l.22)
-    return pl.place_forward(c) and pl.place_backward(o) and pl.place_backward(p)
+def _order_cop(pl: _Placer, o, p, c, lim) -> bool:   # T COP (l.22)
+    return (pl.place_forward(c, lim) and pl.place_backward(o, lim)
+            and pl.place_backward(p, lim))
 
 
-def _order_poc(pl: _Placer, o, p, c) -> bool:   # T POC (l.23)
-    return pl.place_backward(p) and pl.place_forward(o) and pl.place_forward(c)
+def _order_poc(pl: _Placer, o, p, c, lim) -> bool:   # T POC (l.23)
+    return (pl.place_backward(p, lim) and pl.place_forward(o, lim)
+            and pl.place_forward(c, lim))
 
 
-def _to_schedule(dag: DAG, pl: _Placer, t_mask, label: str) -> Schedule:
-    start_ticks = pl.placed_start.astype(np.float64)
+def _to_schedule(dag: DAG, placed_start: np.ndarray, machine: np.ndarray,
+                 tick: float, t_mask, label: str) -> Schedule:
+    start_ticks = placed_start.astype(np.float64)
     start_ticks -= start_ticks.min()
-    start = start_ticks * pl.space.tick
+    start = start_ticks * tick
     order = np.lexsort((np.arange(dag.n), start))
     makespan = float((start + dag.duration).max() - start.min())
     return Schedule(
-        dag=dag, order=order, start=start, machine=pl.machine,
-        makespan=makespan, tick=pl.space.tick, trouble_mask=t_mask, label=label,
+        dag=dag, order=order, start=start, machine=machine,
+        makespan=makespan, tick=tick, trouble_mask=t_mask, label=label,
     )
 
 
@@ -385,7 +491,8 @@ def partition_totally_ordered(dag: DAG) -> list[np.ndarray]:
     return parts
 
 
-def _concat_partition_schedules(dag, parts, m, ticks, n_long, n_frag, max_candidates) -> Schedule:
+def _concat_partition_schedules(dag, parts, m, ticks, n_long, n_frag,
+                                max_candidates, backend) -> Schedule:
     start = np.zeros(dag.n, dtype=np.float64)
     machine = np.zeros(dag.n, dtype=np.int64)
     offset = 0.0
@@ -393,7 +500,7 @@ def _concat_partition_schedules(dag, parts, m, ticks, n_long, n_frag, max_candid
     tmask = np.zeros(dag.n, dtype=bool)
     for ids in parts:
         sub = _subdag(dag, ids)
-        sched = _build_one(sub, m, ticks, n_long, n_frag, max_candidates)
+        sched = _build_one(sub, m, ticks, n_long, n_frag, max_candidates, backend)
         start[ids] = sched.start + offset
         machine[ids] = sched.machine
         if sched.trouble_mask is not None:

@@ -1,0 +1,27 @@
+"""Placement engine: backend-abstracted, candidate-parallel placement core.
+
+Layers:
+  base      — PlacementBackend/PlacementSession protocol + registry
+  reference — per-task numpy grid search (the semantic oracle)
+  batched   — windowed ready-set feasibility scan, (n_tasks, m, W) lift
+  jit       — the same scan as a jax.jit-compiled kernel (flag-gated)
+  packing   — shared fit/score kernels for the online layers
+
+Select with ``build_schedule(..., backend="batched")`` or the
+``REPRO_PLACEMENT_BACKEND`` env var.  See docs/architecture.md.
+"""
+
+from .base import (BACKEND_ENV, BACKWARD, DEFAULT_BACKEND, FORWARD, PeerTask,
+                   PlacementBackend, PlacementSession, available_backends,
+                   get_backend, register_backend)
+from .reference import ReferenceBackend
+from .batched import BatchedBackend, scan_starts
+from .jit import JitBackend
+from . import packing
+
+__all__ = [
+    "BACKEND_ENV", "BACKWARD", "DEFAULT_BACKEND", "FORWARD", "PeerTask",
+    "PlacementBackend", "PlacementSession", "available_backends",
+    "get_backend", "register_backend", "ReferenceBackend", "BatchedBackend",
+    "JitBackend", "scan_starts", "packing",
+]

@@ -1,0 +1,370 @@
+"""Batched placement backend: candidate-parallel windowed feasibility.
+
+Instead of rescanning the grid per task, a pass-scoped session answers a
+whole ready-set at once: one `scan_starts` call lifts the cumsum
+run-length trick from (m, T) to (n_tasks, m, W) over an adaptive window
+and yields, per task, the bitmap of (start, machine) slots where it fits.
+
+Exactness argument.  Capacity only decreases within a placement pass
+(commits subtract; rollbacks happen only between passes), so a bitmap
+scanned at grid version V is a sound *superset* of live feasibility at
+any later version: a clear bit can never become placeable again.  The
+walk therefore:
+
+  * trusts the bitmap outright while the grid version still matches
+    (bits are exact — nothing committed since the scan);
+  * otherwise verifies the first candidate bit with one O(dur * d) live
+    recheck, and on a stale hit settles the whole window with a single
+    live (m, W) mini-scan — sound because everything lexicographically
+    before that bit was already clear in the superset.
+
+Walking bits in (start, machine) lexicographic order — mirrored for
+backward passes — thus reproduces the reference backend's
+earliest/latest-fit results tick-for-tick, including the hint fast path,
+while doing ~one tensor scan per ready-set instead of one full-grid scan
+per task.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import numpy as np
+
+from ..space import runs_of_k
+from .base import (BACKWARD, FORWARD, HintKey, PeerTask, PlacementBackend,
+                   PlacementSession, ceil32, register_backend)
+
+#: first window size in ticks (doubles on every extension)
+WINDOW0 = 96
+#: max ready-set peers prefetched into one scan
+MAX_BATCH = 24
+#: durations above this skip the bitmap machinery: a long task's window is
+#: duration-dominated, so batching it multiplies large scans that a couple
+#: of chunked live probes (Space.fit_first) answer outright.  Long stages
+#: are also narrow (few tasks), so there is no cohort to amortize over.
+LONG_K = 128
+
+
+def scan_starts(
+    avail: np.ndarray,
+    Vs: np.ndarray,
+    ks: np.ndarray,
+    plo: int,
+    phi: int,
+    reverse: bool = False,
+) -> np.ndarray:
+    """Feasible-start bitmaps for a batch of tasks over one window.
+
+    For each task g (demand ``Vs[g]``, duration ``ks[g]`` ticks) and each
+    physical start t in [plo, phi), bit (g, t, machine) says whether the
+    whole run [t, t + ks[g]) fits on that machine inside the grid.
+
+    Returns bool (g, (phi - plo) * m): rows are flattened over
+    (start, machine) with starts ascending, or descending when
+    ``reverse`` (the backward-pass walk order).
+    """
+    m, T, _d = avail.shape
+    g = len(ks)
+    W = phi - plo
+    kmax = int(ks.max())
+    hi_read = min(T, phi + kmax - 1)
+    win = avail[:, plo:hi_read, :]                              # (m, L, d)
+    L = hi_read - plo
+    if g == 1:  # window extensions: skip the batched gather machinery
+        k = int(ks[0])
+        ok = (win >= Vs[0]).all(axis=2)                         # (m, L)
+        good = runs_of_k(ok, k)
+        full = np.zeros((W, m), dtype=bool)
+        n = min(W, good.shape[1])
+        full[:n] = good[:, :n].T
+        if reverse:
+            full = full[::-1]
+        return np.ascontiguousarray(full).reshape(1, W * m)
+    ok = (win[None, :, :, :] >= Vs[:, None, None, :]).all(axis=3)  # (g, m, L)
+    cz = np.zeros((g, m, L + 1), dtype=np.int32)
+    np.cumsum(ok, axis=2, out=cz[:, :, 1:])
+    ends = np.minimum(np.arange(W, dtype=np.int64)[None, :] + ks[:, None], L)
+    idx = np.broadcast_to(ends[:, None, :], (g, m, W))
+    run = np.take_along_axis(cz, idx, axis=2) - cz[:, :, :W]
+    # a run truncated by the grid edge counts < k and is correctly excluded
+    good = run == ks[:, None, None]                             # (g, m, W)
+    good = np.ascontiguousarray(np.swapaxes(good, 1, 2))        # (g, W, m)
+    if reverse:
+        good = good[:, ::-1, :]
+    return good.reshape(g, W * m)
+
+
+class _Cand:
+    """One scanned window's bitmap for one task."""
+
+    __slots__ = ("wlo", "whi", "flat", "reverse", "version", "edge")
+
+    def __init__(self, wlo: int, whi: int, flat: np.ndarray, reverse: bool,
+                 version: int, edge: int):
+        self.wlo = wlo          # lowest logical start covered
+        self.whi = whi          # highest logical start covered (inclusive)
+        self.flat = flat        # (W * m,) bool in walk order
+        self.reverse = reverse
+        self.version = version  # grid version at scan time
+        # logical grid_end at scan time: starts above edge - dur had their
+        # runs truncated by the grid boundary and were cleared UNSOUNDLY
+        # with respect to later growth — they are NOT settled by this
+        # bitmap and must be rescanned once the grid grows
+        self.edge = edge
+
+    def next_bit(self, m: int, bound: int):
+        """First set bit in walk order at/after ``bound`` → (machine, t)."""
+        j0 = ((self.whi - bound) if self.reverse else (bound - self.wlo)) * m
+        flat = self.flat
+        if j0 < 0:
+            j0 = 0
+        elif j0 >= flat.size:
+            return None
+        j = j0 + int(np.argmax(flat[j0:]))
+        if not flat[j]:
+            return None
+        t = (self.whi - j // m) if self.reverse else (self.wlo + j // m)
+        return j % m, t
+
+
+#: sentinel start returned when every admissible slot is past the prune cap
+PRUNED = -1
+
+
+class BatchedSession(PlacementSession):
+    wants_peers = True
+    wants_f32 = True
+
+    def __init__(self, space, direction: str, backend: "BatchedBackend"):
+        super().__init__(space, direction)
+        self._backend = backend
+        self._cands: dict[int, _Cand] = {}
+
+    # ------------------------------------------------------------------
+    def place(
+        self,
+        tid: int,
+        v: np.ndarray,
+        k: int,
+        anchor: int,
+        key: HintKey,
+        peers_fn: Callable[[], Sequence[PeerTask]] | None = None,
+        cap: int | None = None,
+    ) -> tuple[int, int]:
+        sp = self.space
+        h = self.hint.get(key)
+        # compare in pure float32 (no grid-slice promotion); ceil32 keeps
+        # every comparison bit-identical to the reference float64 one
+        v = ceil32(v)
+        if self.direction == FORWARD:
+            lo = int(anchor)
+            if cap is not None and lo >= cap:
+                return PRUNED, cap  # even the anchor is past the prune bound
+            if h is not None and h[1] >= anchor:
+                if cap is not None and h[1] >= cap:
+                    return PRUNED, cap
+                lo = max(lo, h[1])
+                mm = sp.check_fit_at(v, k, h[1])
+                if mm >= 0:
+                    self.hint[key] = (mm, h[1])
+                    return mm, h[1]
+            # mirror the reference pre-scan growth so grid extents (and the
+            # deadline of later unanchored backward tasks) stay identical
+            while lo < sp.grid_start:
+                sp._grow_front()
+            res = self._resolve_fwd(tid, v, k, lo, peers_fn, cap)
+        else:
+            deadline = int(anchor)
+            while deadline > sp.grid_end:
+                sp._grow_back()
+            hi = deadline
+            if cap is not None and hi - k <= cap:
+                return PRUNED, cap  # even the deadline slot is past the bound
+            if h is not None and h[1] + k <= deadline:
+                if cap is not None and h[1] <= cap:
+                    return PRUNED, cap
+                hi = min(hi, h[1] + k)
+                mm = sp.check_fit_at(v, k, h[1])
+                if mm >= 0:
+                    self.hint[key] = (mm, h[1])
+                    return mm, h[1]
+            res = self._resolve_bwd(tid, v, k, hi - k, peers_fn, cap)
+        if res[0] >= 0:
+            self.hint[key] = res
+        return res
+
+    # ------------------------------------------------------------------
+    def _consume(self, cand: _Cand, v, k, bound):
+        """Extreme live slot inside one window, or None if the window is dry.
+
+        ``bound`` clips the walk (lowest admissible start forward, highest
+        backward).  At most one live mini-scan per call: the grid is frozen
+        during a `place`, so its result is definitive for the window.
+        """
+        sp = self.space
+        nxt = cand.next_bit(sp.m, bound)
+        if nxt is None:
+            return None
+        mm, t = nxt
+        if cand.version == sp.version or sp.check_fit_exact(mm, t, k, v):
+            return mm, t
+        # stale hit: everything in walk order before (t, mm) was clear even
+        # in the superset, so one live scan of [t .. window edge] decides.
+        if cand.reverse:
+            return sp.fit_first(v, k, cand.wlo, t, latest=True)
+        return sp.fit_first(v, k, t, cand.whi, latest=False)
+
+    def _resolve_fwd(self, tid, v, k, lo, peers_fn, cap=None):
+        sp = self.space
+        hi_cap = None if cap is None else cap - 1   # highest admissible start
+        if k > LONG_K:
+            cur = lo
+            while True:
+                top = sp.grid_end - k
+                if hi_cap is not None:
+                    top = min(top, hi_cap)
+                res = sp.fit_first(v, k, cur, top)
+                if res is not None:
+                    return res
+                if hi_cap is not None and top >= hi_cap:
+                    return PRUNED, cap   # every admissible start proven dry
+                nxt = sp.grid_end - k + 1  # everything below is now dry
+                sp._grow_back()
+                cur = max(lo, nxt)
+        cur = lo
+        cand = self._cands.pop(tid, None)
+        if cand is not None and cand.wlo <= lo:
+            res = self._consume(cand, v, k, lo)
+            if res is not None:
+                # this IS the earliest fit; past the cap it only proves
+                # the pass is doomed
+                if hi_cap is not None and res[1] > hi_cap:
+                    return PRUNED, cap
+                return res
+            # starts above cand.edge - k had their runs truncated by the
+            # then-grid boundary: not settled, resume from there
+            cur = max(lo, min(cand.whi, cand.edge - k) + 1)
+        W = max(WINDOW0, 2 * k)
+        while True:
+            if hi_cap is not None and cur > hi_cap:
+                return PRUNED, cap
+            if cur > sp.grid_end - k:
+                sp._grow_back()
+            whi = min(cur + W - 1, sp.grid_end - 1)
+            if hi_cap is not None:
+                whi = min(whi, hi_cap)
+            if whi < cur:
+                sp._grow_back()
+                continue
+            cand = self._scan(tid, v, k, cur, whi, peers_fn)
+            res = self._consume(cand, v, k, cur)  # fresh scan: bits exact
+            if res is not None:
+                return res
+            # same truncation rule for the window just scanned: anything in
+            # (grid_end - k, whi] is only proven dry for the CURRENT grid
+            cur = min(whi, sp.grid_end - k) + 1
+            W *= 2
+            peers_fn = None  # prefetch only on the first window of a call
+
+    def _resolve_bwd(self, tid, v, k, hi_start, peers_fn, cap=None):
+        sp = self.space
+        lo_cap = None if cap is None else cap + 1   # lowest admissible start
+        if k > LONG_K:
+            cur = hi_start
+            while True:
+                bot = sp.grid_start
+                if lo_cap is not None:
+                    bot = max(bot, lo_cap)
+                res = sp.fit_first(v, k, bot, cur, latest=True)
+                if res is not None:
+                    return res
+                if lo_cap is not None and bot <= lo_cap:
+                    return PRUNED, cap
+                nxt = sp.grid_start - 1
+                sp._grow_front()
+                cur = min(hi_start, nxt)
+        cur = hi_start
+        cand = self._cands.pop(tid, None)
+        if cand is not None and cand.whi >= hi_start:
+            res = self._consume(cand, v, k, hi_start)
+            if res is not None:
+                if lo_cap is not None and res[1] < lo_cap:
+                    return PRUNED, cap
+                return res
+            cur = min(hi_start, cand.wlo - 1)
+        W = max(WINDOW0, 2 * k)
+        while True:
+            if lo_cap is not None and cur < lo_cap:
+                return PRUNED, cap
+            while cur < sp.grid_start:
+                sp._grow_front()
+            wlo = max(cur - W + 1, sp.grid_start)
+            if lo_cap is not None:
+                wlo = max(wlo, lo_cap)
+            cand = self._scan(tid, v, k, wlo, cur, peers_fn)
+            res = self._consume(cand, v, k, cur)
+            if res is not None:
+                return res
+            if lo_cap is not None and wlo <= lo_cap:
+                return PRUNED, cap
+            if wlo <= sp.grid_start:
+                # the whole grid below the deadline is dry — like
+                # latest_fit, expose free space before the origin
+                sp._grow_front()
+            cur = wlo - 1
+            W *= 2
+            peers_fn = None
+
+    # ------------------------------------------------------------------
+    def _scan(self, tid, v, k, wlo, whi, peers_fn) -> _Cand:
+        """Scan starts [wlo, whi] for ``tid`` plus prefetchable peers."""
+        sp = self.space
+        reverse = self.direction == BACKWARD
+        batch = [(tid, v, k)]
+        if peers_fn is not None:
+            for p in peers_fn():
+                if len(batch) > MAX_BATCH:
+                    break
+                if p.tid == tid or p.tid in self._cands or p.dur_ticks > LONG_K:
+                    continue
+                # only worth caching when the peer's own walk would start
+                # inside this window — a cache that misses the peer's first
+                # admissible start is discarded at use (estimates are hints;
+                # the walk re-clips against the real pop-time anchor)
+                if reverse:
+                    start = p.anchor - p.dur_ticks   # highest admissible start
+                    usable = wlo <= start <= whi
+                else:
+                    usable = wlo <= p.anchor <= whi
+                if usable:
+                    batch.append((p.tid, p.demand, p.dur_ticks))
+        Vs = ceil32(np.stack([b[1] for b in batch]))
+        ks = np.array([b[2] for b in batch], dtype=np.int64)
+        plo, phi = wlo + sp.off, whi + 1 + sp.off
+        goods = self._backend.scan_kernel(sp.avail, Vs, ks, plo, phi, reverse)
+        out: _Cand | None = None
+        ver, edge = sp.version, sp.grid_end
+        for row, (btid, _bv, _bk) in zip(goods, batch):
+            c = _Cand(wlo, whi, np.ascontiguousarray(row), reverse, ver, edge)
+            if btid == tid:
+                out = c
+            else:
+                self._cands[btid] = c
+        assert out is not None
+        return out
+
+
+class BatchedBackend(PlacementBackend):
+    name = "batched"
+
+    #: the feasibility-scan kernel; subclasses (jit) override this
+    @staticmethod
+    def scan_kernel(avail, Vs, ks, plo, phi, reverse):
+        return scan_starts(avail, Vs, ks, plo, phi, reverse)
+
+    def session(self, space, direction: str) -> BatchedSession:
+        return BatchedSession(space, direction, self)
+
+
+register_backend("batched", BatchedBackend)

@@ -1,0 +1,106 @@
+"""jax.jit-compiled feasibility scan behind the ``jit`` backend flag.
+
+Same placement semantics as the batched backend — only the window scan
+kernel runs as a compiled XLA program.  Shapes are padded to coarse
+buckets so the kernel retraces a handful of times per process instead of
+once per window.
+
+Exactness note: the grid is float32 while demands are float64, and the
+reference scan compares them in float64.  XLA (without global x64) would
+silently downcast the demand, which can flip boundary comparisons.  We
+instead pre-round each demand *up* to the nearest float32
+(``ceil32``): for float32 a and float64 v, ``a >= v`` iff
+``a >= ceil32(v)``, so the all-float32 kernel is bit-identical to the
+float64 comparison.
+
+jax is a hard dependency of the wider repo but this module degrades
+gracefully: ``JitBackend.available()`` is False when jax cannot be
+imported, and ``get_backend("jit")`` then raises at session time.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from .base import ceil32, register_backend
+from .batched import BatchedBackend, BatchedSession
+
+try:  # gate the dependency: the numpy backends must work without jax
+    import jax
+    import jax.numpy as jnp
+
+    _HAVE_JAX = True
+except Exception:  # pragma: no cover - exercised only on jax-less installs
+    jax, jnp = None, None
+    _HAVE_JAX = False
+
+
+def _pad_to(x: int, step: int) -> int:
+    return ((x + step - 1) // step) * step
+
+
+@functools.lru_cache(maxsize=None)
+def _kernel():
+    """The jitted scan: all-float32, shapes fixed per (g, m, L, W) bucket."""
+
+    def scan(win, Vs, ks, W: int):
+        # win (m, L, d) f32, Vs (g, d) f32, ks (g,) i32
+        ok = (win[None, :, :, :] >= Vs[:, None, None, :]).all(axis=3)
+        c = jnp.cumsum(ok.astype(jnp.int32), axis=2)
+        cz = jnp.pad(c, ((0, 0), (0, 0), (1, 0)))
+        L = win.shape[1]
+        ends = jnp.minimum(jnp.arange(W)[None, :] + ks[:, None], L)
+        idx = jnp.broadcast_to(ends[:, None, :], (Vs.shape[0], win.shape[0], W))
+        run = jnp.take_along_axis(cz, idx, axis=2) - cz[:, :, :W]
+        good = run == ks[:, None, None]          # (g, m, W)
+        return jnp.swapaxes(good, 1, 2)          # (g, W, m)
+
+    return jax.jit(scan, static_argnames=("W",))
+
+
+class JitBackend(BatchedBackend):
+    name = "jit"
+
+    @classmethod
+    def available(cls) -> bool:
+        return _HAVE_JAX
+
+    @staticmethod
+    def scan_kernel(avail, Vs, ks, plo, phi, reverse):
+        if not _HAVE_JAX:  # pragma: no cover
+            raise RuntimeError("placement backend 'jit' requires jax")
+        m, T, d = avail.shape
+        g = len(ks)
+        W = phi - plo
+        kmax = int(ks.max())
+        hi_read = min(T, phi + kmax - 1)
+        win = avail[:, plo:hi_read, :]
+        # pad to buckets: L/W up to the next power of two, g to multiples
+        # of 8.  Pad rows never fit (demand 2 > capacity 1) and pad ticks
+        # never satisfy a run (avail -1), so they only produce False bits
+        # that are sliced away below.
+        Lp = max(16, 1 << int(np.ceil(np.log2(max(win.shape[1], 2)))))
+        Wp = min(Lp, max(16, 1 << int(np.ceil(np.log2(max(W, 2))))))
+        gp = _pad_to(g, 8)
+        win_p = np.full((m, Lp, d), -1.0, dtype=np.float32)
+        win_p[:, : win.shape[1], :] = win
+        Vs_p = np.full((gp, d), 2.0, dtype=np.float32)
+        Vs_p[:g] = ceil32(np.asarray(Vs))
+        ks_p = np.ones(gp, dtype=np.int32)
+        ks_p[:g] = ks
+        good = np.asarray(_kernel()(win_p, Vs_p, ks_p, Wp))     # (gp, Wp, m)
+        good = good[:g, :W, :]
+        if reverse:
+            good = good[:, ::-1, :]
+        return np.ascontiguousarray(good).reshape(g, W * m)
+
+    def session(self, space, direction: str) -> BatchedSession:
+        if not _HAVE_JAX:
+            raise RuntimeError("placement backend 'jit' requires jax; "
+                               "use 'batched' or 'reference' instead")
+        return BatchedSession(space, direction, self)
+
+
+register_backend("jit", JitBackend)

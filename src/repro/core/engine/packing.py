@@ -1,0 +1,91 @@
+"""Shared multi-resource fit/score kernels (the online placement core).
+
+The offline builder places tasks into the virtual resource-time space; the
+work-conserving executor (`core.baselines.simulate_execution`), the online
+matcher (`core.online.Matcher`) and the cluster simulator
+(`sim.cluster.ClusterSim`) all answer the same two questions about *now*:
+
+  * which candidate tasks fit into a machine's remaining capacity, and
+  * how well does a task pack there (Tetris dot-product score §5).
+
+These kernels are that shared core, so every layer uses identical epsilon
+and dimension-subset semantics.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+EPS = 1e-9
+
+
+def fits_mask(
+    avail: np.ndarray,
+    demand: np.ndarray,
+    dims: Sequence[int] | np.ndarray | None = None,
+    slack: float = 0.0,
+    eps: float = EPS,
+) -> np.ndarray:
+    """Boolean fit test, broadcasting over machines and/or candidates.
+
+    avail  — (d,) one machine, or (m, d) many machines
+    demand — (d,) one task, or (n, d) many tasks
+    dims   — resource dims the scheduler checks (None = all)
+    slack  — extra headroom per checked dim (overbooking allowance)
+
+    Returns the broadcast ``.all``-over-dims result: (), (m,), (n,), or
+    (n, m) depending on the inputs.
+    """
+    avail = np.asarray(avail)
+    demand = np.asarray(demand)
+    if dims is not None:
+        dims = np.asarray(dims, dtype=np.int64)
+        if len(dims) == 0:
+            shape = np.broadcast_shapes(avail.shape[:-1], demand.shape[:-1])
+            return np.ones(shape, dtype=bool)
+        avail = avail[..., dims]
+        demand = demand[..., dims]
+    if avail.ndim == 2 and demand.ndim == 2:
+        return (demand[:, None, :] <= avail[None, :, :] + slack + eps).all(axis=2)
+    return (demand <= avail + slack + eps).all(axis=-1)
+
+
+def pack_score(
+    avail: np.ndarray,
+    demand: np.ndarray,
+    clip: bool = False,
+) -> np.ndarray:
+    """Tetris packing score: dot(demand, available) (§5 pScore).
+
+    avail (d,) or (m, d); demand (d,) or (n, d).  Returns (), (m,), (n,)
+    or (n, m).  ``clip`` floors availability at 0 first (overbooked
+    machines report negative headroom).
+    """
+    avail = np.asarray(avail, dtype=np.float64)
+    if clip:
+        avail = np.clip(avail, 0.0, None)
+    demand = np.asarray(demand)
+    if avail.ndim == 2 and demand.ndim == 2:
+        return demand @ avail.T
+    return demand @ np.swapaxes(np.atleast_2d(avail), -1, -2).squeeze()
+
+
+def best_fit_machines(
+    avail: np.ndarray,
+    demands: np.ndarray,
+    dims: Sequence[int] | np.ndarray | None = None,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-candidate best machine by packing score among fitting machines.
+
+    avail (m, d), demands (n, d).  Returns (ok (n, m), best_m (n,),
+    best_score (n,)); best entries are -inf where nothing fits.
+    """
+    dsel = demands if dims is None else demands[:, np.asarray(dims)]
+    asel = avail if dims is None else avail[:, np.asarray(dims)]
+    ok = (asel[None, :, :] >= dsel[:, None, :] - EPS).all(axis=2)   # (n, m)
+    scores = np.where(ok, dsel @ asel.T, -np.inf)
+    best_m = np.argmax(scores, axis=1)
+    best_s = scores[np.arange(len(demands)), best_m]
+    return ok, best_m, best_s

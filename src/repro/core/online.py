@@ -21,6 +21,8 @@ from typing import Callable, Iterable, Sequence
 
 import numpy as np
 
+from .engine import packing
+
 # resource dims (cores, memory, network, disk); network+disk are fungible —
 # they can be overbooked at the price of slowdown, cores/memory cannot.
 FUNGIBLE = (2, 3)
@@ -168,13 +170,14 @@ class Matcher:
         taken = np.zeros(len(tasks), dtype=bool)
         picked: list[tuple[PendingTask, bool]] = []
         while len(picked) < cfg.bundle_limit:
-            fits = (dem[:, fd] <= avail[fd] + 1e-9).all(axis=1)
+            fits = packing.fits_mask(avail, dem, dims=fd)
             if cfg.use_overbooking:
+                # rigid dims must really fit; fungible dims may overshoot by
+                # the bounded overbooking allowance
                 over = (~fits
-                        & ((dem[:, rigid] <= avail[rigid] + 1e-9).all(axis=1)
-                           if len(rigid) else True)
-                        & ((dem[:, fung] <= avail[fung] + (cfg.max_overbook - 1.0) + 1e-9)
-                           .all(axis=1) if len(fung) else True))
+                        & packing.fits_mask(avail, dem, dims=rigid)
+                        & packing.fits_mask(avail, dem, dims=fung,
+                                            slack=cfg.max_overbook - 1.0))
             else:
                 over = np.zeros(len(tasks), dtype=bool)
             eligible = (fits | over) & ~taken
@@ -184,7 +187,7 @@ class Matcher:
             if not eligible.any():
                 break
             if cfg.use_packing:
-                dot = dem @ np.clip(avail, 0.0, None) * rp
+                dot = packing.pack_score(avail, dem, clip=True) * rp
             else:
                 dot = rp.copy()
             if len(fung):

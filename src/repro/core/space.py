@@ -19,6 +19,11 @@ Both use a cumulative-sum trick to find runs of >=k feasible ticks in
 O(m*T) numpy work.  The `hint` of a previous placement of an identical task
 is a sound floor/ceiling for the search (the space only fills up within a
 pass), which makes placing a whole stage ~O(T) amortized.
+
+The engine layer (core/engine/) supplies alternative search strategies
+over this grid; `snapshot`/`restore` give the builder copy-on-write-style
+variant evaluation: a snapshot costs O(1), a restore costs O(cells
+written since), never O(grid).
 """
 
 from __future__ import annotations
@@ -28,12 +33,39 @@ import dataclasses
 import numpy as np
 
 
+def runs_of_k(ok: np.ndarray, k: int) -> np.ndarray:
+    """Per row of boolean `ok` (m, L): positions starting a run of >= k Trues.
+
+    Returns (m, L - k + 1) for k > 1 (positions whose run would overflow L
+    are dropped), `ok` itself for k == 1.  The cumulative-sum trick shared
+    by every feasibility scan in the repo — reference, chunked, batched.
+    """
+    if k <= 1:
+        return ok
+    c = np.cumsum(ok, axis=1, dtype=np.int32)
+    runs = c[:, k - 1 :].copy()
+    runs[:, 1:] -= c[:, : runs.shape[1] - 1]
+    return runs == k
+
+
 @dataclasses.dataclass
 class Placement:
     task: int
     machine: int
     start: int   # logical tick
     end: int     # logical tick (exclusive)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpaceSnapshot:
+    """O(1) checkpoint of a Space; see Space.snapshot/restore."""
+
+    n_undo: int
+    n_placed: int
+    min_start: int | None
+    max_end: int | None
+    T: int
+    off: int
 
 
 class Space:
@@ -47,16 +79,66 @@ class Space:
         self.placements: list[Placement] = []
         self._min_start: int | None = None   # logical
         self._max_end: int | None = None     # logical
+        # bumped whenever capacity changes; engine sessions use it to decide
+        # whether a cached feasibility bitmap is still exact or merely a
+        # sound upper bound needing a live recheck.
+        self.version = 0
+        # undo log for snapshot/restore: (machine, logical start, pre-commit
+        # copy of the overwritten cells) — restoring copies the exact bits
+        # back, so rollback is float-exact (no subtract/re-add drift).
+        self._undo: list[tuple[int, int, np.ndarray]] = []
 
     # ------------------------------------------------------------------
     def clone(self) -> "Space":
         s = Space.__new__(Space)
+        s.version = self.version
         s.m, s.d, s.tick, s.T, s.off = self.m, self.d, self.tick, self.T, self.off
         s.avail = self.avail.copy()
         s.placements = list(self.placements)
         s._min_start = self._min_start
         s._max_end = self._max_end
+        s._undo = list(self._undo)
         return s
+
+    # -- logical extent --------------------------------------------------
+    @property
+    def grid_start(self) -> int:
+        """Lowest logical tick inside the physical grid."""
+        return -self.off
+
+    @property
+    def grid_end(self) -> int:
+        """One past the highest logical tick inside the physical grid."""
+        return self.T - self.off
+
+    # -- copy-on-write-style variant evaluation --------------------------
+    def snapshot(self) -> SpaceSnapshot:
+        """O(1) checkpoint; restore() rolls back everything committed since."""
+        return SpaceSnapshot(len(self._undo), len(self.placements),
+                             self._min_start, self._max_end, self.T, self.off)
+
+    def restore(self, snap: SpaceSnapshot, keep_extent: bool = False) -> None:
+        """Roll back to `snap`: O(cells written since), plus one grid slice
+        if the grid grew (what a clone would have paid anyway).
+
+        Shrinking back matters: a kept-grown grid would push the empty-grid
+        backward deadline (grid_end) further out on every candidate variant,
+        snowballing the grid and the scans over it.  ``keep_extent`` skips
+        the shrink — needed when commits recorded after the snapshot will be
+        replayed into the (possibly grown) region right away.
+        """
+        for machine, start, vals in reversed(self._undo[snap.n_undo:]):
+            ps = start + self.off
+            self.avail[machine, ps : ps + len(vals), :] = vals
+        del self._undo[snap.n_undo:]
+        del self.placements[snap.n_placed:]
+        self.version += 1
+        if not keep_extent and (self.T != snap.T or self.off != snap.off):
+            lo = self.off - snap.off   # growth only ever extends, off >= snap.off
+            self.avail = np.ascontiguousarray(self.avail[:, lo : lo + snap.T, :])
+            self.T, self.off = snap.T, snap.off
+        self._min_start = snap.min_start
+        self._max_end = snap.max_end
 
     def _grow_back(self) -> None:
         extra = np.ones((self.m, self.T, self.d), dtype=np.float32)
@@ -78,23 +160,69 @@ class Space:
         """
         plo, phi = lo + self.off, hi + self.off
         ok = (self.avail[:, plo:phi, :] >= v).all(axis=2)  # (m, phi-plo)
-        if k > 1:
-            c = np.cumsum(ok, axis=1, dtype=np.int32)
-            runs = c[:, k - 1 :].copy()
-            runs[:, 1:] -= c[:, : runs.shape[1] - 1]
-            good = runs == k
-        else:
-            good = ok
-        ms, ts = np.nonzero(good)
+        ms, ts = np.nonzero(runs_of_k(ok, k))
         return ms, ts + lo
 
-    def _check_at(self, v: np.ndarray, k: int, t: int) -> int:
-        """Any machine fitting v at logical t, else -1."""
+    def fit_first(self, v: np.ndarray, k: int, lo: int, hi: int,
+                  latest: bool = False) -> tuple[int, int] | None:
+        """Extreme (machine, t) fitting v over [t, t+k) with lo <= t <= hi.
+
+        Like one `_fit_starts` query restricted to starts in [lo, hi], but
+        scanned in chunks from the near end with early exit — the engine's
+        live searches almost always hit within the first chunk.  Returns
+        the lexicographic extreme the full scan would return: (min t, min
+        machine), or (max t, min machine) when ``latest``.
+        """
+        if hi < lo:
+            return None
+        chunk = max(64, k)
+
+        def _scan_chunk(c0: int, c1: int):
+            # starts c0..c1 need avail rows [c0, c1 + k); slicing clips at
+            # the grid edge, which correctly truncates (and excludes) runs
+            # that would overflow it
+            ok = (self.avail[:, c0 + self.off : c1 + k + self.off, :] >= v).all(axis=2)
+            good = runs_of_k(ok, k)[:, : c1 - c0 + 1]
+            if not good.any():
+                return None
+            ms, ts = np.nonzero(good)
+            tx = int(ts.max()) if latest else int(ts.min())
+            return int(ms[ts == tx].min()), tx + c0
+
+        if latest:
+            c1 = hi
+            while c1 >= lo:
+                c0 = max(lo, c1 - chunk + 1)
+                res = _scan_chunk(c0, c1)
+                if res is not None:
+                    return res
+                c1 = c0 - 1
+        else:
+            c0 = lo
+            while c0 <= hi:
+                c1 = min(hi, c0 + chunk - 1)
+                res = _scan_chunk(c0, c1)
+                if res is not None:
+                    return res
+                c0 = c1 + 1
+        return None
+
+    def check_fit_at(self, v: np.ndarray, k: int, t: int) -> int:
+        """Lowest machine fitting v over [t, t+k) at logical t, else -1."""
         pt = t + self.off
         if pt < 0 or pt + k > self.T:
             return -1
         ok = (self.avail[:, pt : pt + k, :] >= v).all(axis=(1, 2))
         return int(np.argmax(ok)) if ok.any() else -1
+
+    _check_at = check_fit_at
+
+    def check_fit_exact(self, machine: int, t: int, k: int, v: np.ndarray) -> bool:
+        """Does v fit on `machine` over logical [t, t+k) right now?"""
+        pt = t + self.off
+        if pt < 0 or pt + k > self.T:
+            return False
+        return bool((self.avail[machine, pt : pt + k, :] >= v).all())
 
     def earliest_fit(self, v: np.ndarray, k: int, ready: int,
                      hint: tuple[int, int] | None = None) -> tuple[int, int]:
@@ -149,7 +277,9 @@ class Space:
         k = max(int(k), 1)
         ps = start + self.off
         assert 0 <= ps and ps + k <= self.T, "commit outside grid"
+        self._undo.append((machine, start, self.avail[machine, ps : ps + k, :].copy()))
         self.avail[machine, ps : ps + k, :] -= v
+        self.version += 1
         if (self.avail[machine, ps : ps + k, :] < -1e-5).any():
             raise RuntimeError("over-committed space")
         p = Placement(task, machine, start, start + k)

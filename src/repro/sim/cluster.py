@@ -27,6 +27,7 @@ import numpy as np
 from ..core.builder import build_schedule
 from ..core.baselines import bfs_order, cp_order, random_order
 from ..core.dag import DAG
+from ..core.engine import packing
 from ..core.online import (
     JobView,
     Matcher,
@@ -99,6 +100,7 @@ class SimConfig:
     failure_rate: float = 0.0      # machine-failures per simulated second
     repair_time: float = 120.0
     record_usage: bool = False
+    placement_backend: str | None = None  # engine backend for offline builds
 
 
 @dataclasses.dataclass
@@ -204,7 +206,7 @@ class ClusterSim:
         kind = self.spec.order_fn
         if kind == "dagps":
             m = self.cfg.build_machines or max(self.cfg.n_machines // 10, 4)
-            return build_schedule(dag, m).pri_score
+            return build_schedule(dag, m, backend=self.cfg.placement_backend).pri_score
         if kind == "bfs":
             order = bfs_order(dag)
         elif kind == "cp":
@@ -322,7 +324,8 @@ class ClusterSim:
                 # below the per-dim minimum demand of all remaining candidates
                 min_dem = np.min([t.demand for t in cands], axis=0)
                 fd = list(self.spec.matcher.fit_dims)
-                if (avail[m][fd] + 1e-9 < min_dem[fd]).any() and not self.spec.matcher.use_overbooking:
+                if (not packing.fits_mask(avail[m], min_dem, dims=fd)
+                        and not self.spec.matcher.use_overbooking):
                     continue
                 picks = matcher.find_tasks_for_machine(m, avail[m], cands, views)
                 started_ids = set()
@@ -386,7 +389,7 @@ class ClusterSim:
                 tid = info["task"]
                 # only speculate if some machine can host a copy right now
                 dem = job.dag.demand[tid]
-                fit = np.nonzero(alive & (avail >= dem - 1e-9).all(axis=1))[0]
+                fit = np.nonzero(alive & packing.fits_mask(avail, dem))[0]
                 if len(fit):
                     start_task(job, tid, int(fit[0]), t_now, speculative=True)
             elif kind == "fail":

@@ -1,0 +1,236 @@
+"""Engine-layer tests: backend parity, Space edge cases, snapshot/restore.
+
+The headline invariant of the placement engine: every backend produces
+tick-identical schedules.  The parity tests build the same DAGs through the
+reference backend (per-task grid rescans — the semantic oracle) and the
+batched backend (windowed ready-set scans) and require bit-equal
+(machine, start) placements.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (DAG, Space, available_backends, build_schedule,
+                        get_backend)
+from repro.core.builder import partition_totally_ordered
+from repro.core.engine import JitBackend, scan_starts
+from repro.core.engine.base import ceil32
+from repro.sim.workload import production_dag, query_dag
+
+
+def _assert_same_schedule(a, b, ctx=""):
+    assert a.makespan == b.makespan, f"makespan differs {ctx}"
+    assert np.array_equal(a.start, b.start), f"starts differ {ctx}"
+    assert np.array_equal(a.machine, b.machine), f"machines differ {ctx}"
+    assert np.array_equal(a.order, b.order), f"order differs {ctx}"
+
+
+class TestBackendParity:
+    def test_production_dags_tick_identical(self):
+        """>= 20 seeded production DAGs: batched == reference, bit for bit."""
+        for seed in range(20):
+            dag = production_dag(np.random.default_rng(seed), scale=0.35, share=3)
+            ref = build_schedule(dag, 3, ticks=96, backend="reference")
+            bat = build_schedule(dag, 3, ticks=96, backend="batched")
+            _assert_same_schedule(ref, bat, f"(production seed={seed})")
+
+    def test_tpcds_dags_tick_identical(self):
+        """TPC-DS style DAGs have low-jitter stages: exercises the hint path."""
+        for seed in range(4):
+            dag = query_dag(np.random.default_rng(seed), preset="tpcds")
+            ref = build_schedule(dag, 4, ticks=128, backend="reference")
+            bat = build_schedule(dag, 4, ticks=128, backend="batched")
+            _assert_same_schedule(ref, bat, f"(tpcds seed={seed})")
+
+    @pytest.mark.skipif(not JitBackend.available(), reason="jax unavailable")
+    def test_jit_backend_tick_identical(self):
+        for seed in (0, 7):
+            dag = production_dag(np.random.default_rng(seed), scale=0.35, share=3)
+            bat = build_schedule(dag, 3, ticks=96, backend="batched")
+            jit = build_schedule(dag, 3, ticks=96, backend="jit")
+            _assert_same_schedule(bat, jit, f"(jit seed={seed})")
+
+    def test_grid_edge_growth_rescan(self):
+        """Starts whose run straddles the grid edge are cleared in the
+        window bitmap (truncated run); after growth they must be rescanned,
+        not skipped — regression for a batched/reference divergence."""
+        from repro.core.engine import FORWARD, BACKWARD
+
+        results = {}
+        for name in ("reference", "batched"):
+            s = Space(m=1, d=1, horizon=10)
+            s.commit(0, 0, 0, 9, np.array([1.0]))  # cells 0-8 fully busy
+            sess = get_backend(name).session(s, FORWARD)
+            results[name] = sess.place(1, np.array([0.5]), 2, 0, (0, 0.0, b"x"))
+        assert results["batched"] == results["reference"] == (0, 9)
+
+    def test_registry(self):
+        names = available_backends()
+        assert {"reference", "batched", "jit"} <= set(names)
+        assert get_backend("batched").name == "batched"
+        with pytest.raises(ValueError):
+            get_backend("no-such-backend")
+
+
+class TestScanKernel:
+    def test_matches_fit_starts(self):
+        """The batched bitmap over a window == the reference scan's fits."""
+        rng = np.random.default_rng(3)
+        s = Space(m=3, d=2, horizon=64)
+        for t in range(25):  # clutter the grid
+            v = rng.uniform(0.1, 0.6, 2)
+            m, t0 = s.earliest_fit(v, int(rng.integers(1, 6)), int(rng.integers(0, 40)))
+            s.commit(t, m, t0, 3, v)
+        Vs = rng.uniform(0.2, 0.7, (5, 2))
+        ks = rng.integers(1, 9, 5)
+        goods = scan_starts(s.avail, Vs, ks, 0, s.T)
+        for g in range(5):
+            ms, ts = s._fit_starts(Vs[g], int(ks[g]), -s.off, s.T - s.off)
+            expect = np.zeros((s.T, s.m), dtype=bool)
+            expect[ts + s.off, ms] = True
+            assert np.array_equal(goods[g].reshape(s.T, s.m), expect)
+
+    def test_reverse_layout(self):
+        s = Space(m=2, d=1, horizon=16)
+        s.commit(0, 0, 0, 16, np.array([1.0]))  # machine 0 fully busy
+        good = scan_starts(s.avail, np.array([[0.5]]), np.array([4]), 0, 13,
+                           reverse=True)
+        grid = good.reshape(13, 2)
+        # row j is start t = 12 - j; machine 1 free everywhere, machine 0 never
+        assert grid[:, 1].all() and not grid[:, 0].any()
+
+    def test_ceil32_equivalence(self):
+        rng = np.random.default_rng(0)
+        a = rng.uniform(0, 1, 4096).astype(np.float32)
+        v = rng.uniform(0, 1, 4096)
+        assert np.array_equal(a >= v, a >= ceil32(v))
+        assert ceil32(a) is a  # float32 passes through untouched
+
+
+class TestSpaceEdgeCases:
+    def test_grow_front_offset_bookkeeping(self):
+        s = Space(m=1, d=1, horizon=8)
+        s.commit(0, 0, 2, 3, np.array([0.5]))
+        before = s.avail[0, :, 0].copy()
+        off0 = s.off
+        s._grow_front()
+        assert s.off == off0 + 8 and s.T == 16
+        # logical content preserved: old cells shifted by the growth
+        assert np.array_equal(s.avail[0, 8:, 0], before)
+        assert (s.avail[0, :8, 0] == 1.0).all()
+        # committed region still visible at the same logical coords
+        assert not s.check_fit_exact(0, 2, 3, np.array([0.6]))
+        assert s.check_fit_exact(0, 2, 3, np.array([0.5]))
+
+    def test_grow_back_keeps_logical_coords(self):
+        s = Space(m=1, d=1, horizon=8)
+        s.commit(0, 0, 0, 4, np.array([0.9]))
+        s._grow_back()
+        assert s.T == 16 and s.off == 0
+        assert s.check_fit_exact(0, 4, 12, np.array([0.9]))
+        assert not s.check_fit_exact(0, 0, 4, np.array([0.2]))
+
+    def test_hint_soundness_earliest(self):
+        """A prior identical placement is a sound floor: with or without the
+        hint, earliest_fit returns the same slot (the space only fills up)."""
+        rng = np.random.default_rng(1)
+        s = Space(m=3, d=2, horizon=64)
+        v = np.array([0.55, 0.35])
+        hint = None
+        for t in range(12):
+            plain = s.clone().earliest_fit(v, 4, 2)
+            hinted = s.earliest_fit(v, 4, 2, hint)
+            assert plain == hinted
+            s.commit(t, *hinted, 4, v)
+            hint = hinted
+            if rng.random() < 0.5:  # unrelated clutter never breaks soundness
+                w = rng.uniform(0.05, 0.3, 2)
+                m2, t2 = s.earliest_fit(w, 2, 0)
+                s.commit(100 + t, m2, t2, 2, w)
+
+    def test_hint_soundness_latest(self):
+        s = Space(m=2, d=1, horizon=40)
+        v = np.array([0.7])
+        hint = None
+        for t in range(6):
+            plain = s.clone().latest_fit(v, 3, 30)
+            hinted = s.latest_fit(v, 3, 30, hint)
+            assert plain == hinted
+            s.commit(t, *hinted, 3, v)
+            hint = hinted
+
+    def test_fit_first_matches_full_scan(self):
+        rng = np.random.default_rng(5)
+        s = Space(m=2, d=2, horizon=48)
+        for t in range(30):
+            v = rng.uniform(0.2, 0.8, 2)
+            k = int(rng.integers(1, 5))
+            m, t0 = s.earliest_fit(v, k, 0)
+            s.commit(t, m, t0, k, v)
+        for _ in range(40):
+            v = rng.uniform(0.2, 0.9, 2)
+            k = int(rng.integers(1, 7))
+            lo, hi = 0, s.T - s.off - k
+            ms, ts = s._fit_starts(v, k, lo, hi + k)
+            first = s.fit_first(v, k, lo, hi)
+            latest = s.fit_first(v, k, lo, hi, latest=True)
+            if len(ts) == 0:
+                assert first is None and latest is None
+            else:
+                tmin, tmax = int(ts.min()), int(ts.max())
+                assert first == (int(ms[ts == tmin].min()), tmin)
+                assert latest == (int(ms[ts == tmax].min()), tmax)
+
+    def test_snapshot_restore_exact(self):
+        rng = np.random.default_rng(9)
+        s = Space(m=2, d=2, horizon=16)
+        s.commit(0, 0, 0, 4, np.array([0.3, 0.4]))
+        snap = s.snapshot()
+        grid0 = s.avail.copy()
+        # commits, growth in both directions, nested snapshot/rollback
+        s.commit(1, 1, 2, 5, np.array([0.6, 0.1]))
+        s.latest_fit(np.array([0.5, 0.5]), 40, 8)     # forces front growth
+        inner = s.snapshot()
+        s.commit(2, 0, -3, 2, np.array([0.2, 0.2]))
+        s.restore(inner)
+        s._grow_back()
+        s.commit(3, 1, 30, 4, np.array([0.9, 0.9]))   # in back-grown region
+        s.restore(snap)
+        assert s.T == grid0.shape[1] and len(s.placements) == 1
+        assert np.array_equal(s.avail, grid0)
+        assert s.makespan_ticks == 4
+
+    def test_restore_keep_extent(self):
+        s = Space(m=1, d=1, horizon=8)
+        snap = s.snapshot()
+        s._grow_back()
+        s.commit(0, 0, 10, 2, np.array([0.5]))
+        s.restore(snap, keep_extent=True)
+        assert s.T == 16 and len(s.placements) == 0
+        assert (s.avail == 1.0).all()
+
+
+class TestPartitionEdgeCases:
+    def test_single_task(self):
+        d = DAG(duration=np.array([2.0]), demand=np.array([[0.5, 0.5]]),
+                stage_of=np.array([0]), parents=[np.array([], int)])
+        parts = partition_totally_ordered(d)
+        assert len(parts) == 1 and list(parts[0]) == [0]
+        sched = build_schedule(d, 2)
+        assert sched.makespan == pytest.approx(2.0)
+
+    def test_fully_parallel(self):
+        n = 6
+        d = DAG(duration=np.full(n, 1.0), demand=np.full((n, 2), 0.4),
+                stage_of=np.zeros(n, int),
+                parents=[np.array([], int) for _ in range(n)])
+        parts = partition_totally_ordered(d)
+        assert len(parts) == 1  # no barrier anywhere: nothing is ordered
+        sched = build_schedule(d, 3)
+        sched.validate()
+
+    def test_empty_dag(self):
+        d = DAG(duration=np.empty(0), demand=np.empty((0, 2)),
+                stage_of=np.empty(0, int), parents=[])
+        sched = build_schedule(d, 2)
+        assert sched.makespan == 0.0

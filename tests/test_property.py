@@ -1,6 +1,11 @@
 """Property-based tests (hypothesis) for system invariants."""
 
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install -e .[test])"
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import DAG, build_schedule, new_lb, simulate_execution
