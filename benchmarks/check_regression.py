@@ -1,0 +1,74 @@
+"""Compare a bench JSON against the committed baseline; fail on regressions.
+
+  python -m benchmarks.check_regression current.json benchmarks/baseline_quick.json
+
+Rows whose name starts with ``s<digit>`` carry scenario wall-clock in the
+``us_per_call`` column; any such row slower than ``--factor`` (default 2x)
+times its baseline fails the check.  Rows below ``--floor`` microseconds in
+the baseline are skipped (too noisy to gate on), as are rows present on
+only one side (new scenarios don't fail the job; removed ones are
+reported).  Exit code 1 on any regression so CI can gate on it.
+
+The committed baseline is machine-specific.  If the gate fails with no
+code change (e.g. CI runner hardware changed), refresh
+``benchmarks/baseline_quick.json`` from the ``bench-quick-json`` artifact
+of a known-good run instead of loosening ``--factor``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+_SCENARIO = re.compile(r"^s\d+_")
+
+
+def load_rows(path: str) -> dict[str, float]:
+    data = json.load(open(path))
+    return {r["name"]: float(r["us_per_call"]) for r in data["rows"]}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current")
+    ap.add_argument("baseline")
+    ap.add_argument("--factor", type=float, default=2.0,
+                    help="fail when current > factor * baseline")
+    ap.add_argument("--floor", type=float, default=1e4,
+                    help="ignore rows with baseline below this many us")
+    args = ap.parse_args()
+    cur = load_rows(args.current)
+    base = load_rows(args.baseline)
+    failures = []
+    for name, b_us in sorted(base.items()):
+        if not _SCENARIO.match(name):
+            continue
+        if "_phase_" in name:
+            continue        # per-phase rows are diagnostics, not gates
+        if name not in cur:
+            print(f"note: baseline row {name} missing from current run")
+            continue
+        if b_us < args.floor:
+            continue
+        c_us = cur[name]
+        ratio = c_us / max(b_us, 1e-9)
+        status = "FAIL" if ratio > args.factor else "ok"
+        print(f"{status:4s} {name}: {c_us / 1e6:.2f}s vs baseline "
+              f"{b_us / 1e6:.2f}s ({ratio:.2f}x)")
+        if ratio > args.factor:
+            failures.append(name)
+    new_rows = [n for n in cur if _SCENARIO.match(n) and n not in base]
+    for n in sorted(new_rows):
+        print(f"new  {n}: {cur[n] / 1e6:.2f}s (no baseline yet)")
+    if failures:
+        print(f"{len(failures)} scenario timing(s) regressed >"
+              f"{args.factor}x: {', '.join(failures)}")
+        return 1
+    print("no scenario timing regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,6 +22,11 @@ SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
 # smallest variant (e.g. construction runs only the small DAG).
 QUICK = False
 
+# --profile: benchmarks that run the cluster simulator also emit per-phase
+# rows (offline build vs matcher vs event loop) so regressions in the bench
+# JSON are attributable to a layer, not just a scenario.
+PROFILE = False
+
 
 def n_jobs(base: int) -> int:
     return max(int(base * SCALE), 2)
@@ -30,6 +35,31 @@ def n_jobs(base: int) -> int:
 def emit(name: str, us_per_call: float, derived) -> None:
     ROWS.append((name, us_per_call, str(derived)))
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def emit_phases(prefix: str, phase_times: dict[str, float] | None) -> None:
+    """Emit one row per simulator phase (build / match / event / total)."""
+    if not phase_times:
+        return
+    for phase, secs in phase_times.items():
+        emit(f"{prefix}_phase_{phase}", secs * 1e6, round(secs, 3))
+
+
+def write_json(path: str) -> None:
+    """Dump every emitted row as JSON (the CI artifact + regression gate)."""
+    import json
+
+    payload = {
+        "scale": SCALE,
+        "quick": QUICK,
+        "profile": PROFILE,
+        "rows": [
+            {"name": n, "us_per_call": us, "derived": d}
+            for (n, us, d) in ROWS
+        ],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
 
 
 @contextmanager

@@ -7,39 +7,68 @@ the paper's 20k-DAG populations correspond to SCALE ~ 800).
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run jct roofline
   PYTHONPATH=src python -m benchmarks.run --quick construction   # CI smoke
+  PYTHONPATH=src python -m benchmarks.run --backend jit construction
+  PYTHONPATH=src python -m benchmarks.run --quick --profile \
+      --json bench_quick.json construction online_large online_churn
+
+Flags:
+  --quick         smoke mode (smallest variants; used by CI)
+  --profile       emit per-phase rows (offline build / matcher / event loop)
+  --json PATH     also write all rows as JSON (CI artifact + regression gate)
+  --backend NAME  placement engine for every offline construction
+                  (reference | batched | jit; default $REPRO_PLACEMENT_BACKEND
+                  or batched)
 """
 
 from __future__ import annotations
 
-import sys
-
-from . import bench_scheduling, bench_systems, common
-
-GROUPS = {
-    "jct": [bench_scheduling.bench_jct],
-    "makespan": [bench_scheduling.bench_makespan],
-    "fairness": [bench_scheduling.bench_fairness],
-    "alternatives": [bench_scheduling.bench_alternatives],
-    "lowerbound": [bench_scheduling.bench_lowerbound],
-    "sensitivity": [bench_scheduling.bench_sensitivity],
-    "domains": [bench_scheduling.bench_domains],
-    "construction": [bench_scheduling.bench_construction],
-    "pipeline": [bench_systems.bench_pipeline],
-    "roofline": [bench_systems.bench_roofline],
-    "kernels": [bench_systems.bench_kernels],
-}
+import argparse
+import os
 
 
 def main() -> None:
-    args = sys.argv[1:]
-    if "--quick" in args:
-        args = [a for a in args if a != "--quick"]
-        common.QUICK = True
-    names = args if args else list(GROUPS)
+    ap = argparse.ArgumentParser(description="paper benchmark driver")
+    ap.add_argument("groups", nargs="*", help="bench groups (default: all)")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--profile", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    ap.add_argument("--backend", default=None,
+                    help="placement backend for offline builds")
+    args = ap.parse_args()
+    if args.backend:
+        # resolved by build_schedule everywhere a bench constructs schedules
+        os.environ["REPRO_PLACEMENT_BACKEND"] = args.backend
+
+    # import after the env var is pinned so every bench sees the backend
+    from . import bench_scheduling, bench_systems, common
+
+    groups = {
+        "jct": [bench_scheduling.bench_jct],
+        "makespan": [bench_scheduling.bench_makespan],
+        "fairness": [bench_scheduling.bench_fairness],
+        "alternatives": [bench_scheduling.bench_alternatives],
+        "lowerbound": [bench_scheduling.bench_lowerbound],
+        "sensitivity": [bench_scheduling.bench_sensitivity],
+        "domains": [bench_scheduling.bench_domains],
+        "construction": [bench_scheduling.bench_construction],
+        "online_large": [bench_scheduling.bench_online_large],
+        "online_churn": [bench_scheduling.bench_online_churn],
+        "pipeline": [bench_systems.bench_pipeline],
+        "roofline": [bench_systems.bench_roofline],
+        "kernels": [bench_systems.bench_kernels],
+    }
+    common.QUICK = args.quick
+    common.PROFILE = args.profile
+    names = args.groups if args.groups else list(groups)
+    unknown = [n for n in names if n not in groups]
+    if unknown:
+        ap.error(f"unknown groups {unknown}; have {sorted(groups)}")
     print("name,us_per_call,derived")
     for name in names:
-        for fn in GROUPS[name]:
+        for fn in groups[name]:
             fn()
+    if args.json:
+        common.write_json(args.json)
 
 
 if __name__ == "__main__":

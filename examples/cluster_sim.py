@@ -1,29 +1,61 @@
 """Cluster-scale scenario: a day of training/serving jobs gang-scheduled
-onto 32 pod slices with DAGPS vs Tez-style FIFO — the L2 adaptation, with
+onto pod slices with DAGPS vs Tez-style FIFO — the L2 adaptation, with
 stage profiles pulled from the dry-run roofline artifacts when available.
 
+All engine backends and scheme presets are reachable from the CLI:
+
   PYTHONPATH=src python examples/cluster_sim.py
+  PYTHONPATH=src python examples/cluster_sim.py --backend jit --profile
+  PYTHONPATH=src python examples/cluster_sim.py --schemes tez,tez+tetris,dagps \
+      --slices 64 --jobs 30
 """
+
+import argparse
 
 import numpy as np
 
+from repro.core import available_backends
 from repro.launch.cluster import TPUJob, job_from_roofline, schedule_cluster
 
 
 def main():
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--backend", default=None, choices=available_backends(),
+                    help="placement engine for offline construction "
+                         "(default: batched, or $REPRO_PLACEMENT_BACKEND)")
+    ap.add_argument("--schemes", default="tez,dagps",
+                    help="comma-separated scheme presets to compare "
+                         "(tez, tez+cp, tez+tetris, tez+drf, random, dagps, "
+                         "dagps-noob)")
+    ap.add_argument("--slices", type=int, default=32, help="pod slices")
+    ap.add_argument("--jobs", type=int, default=15, help="jobs to schedule")
+    ap.add_argument("--interarrival", type=float, default=30.0,
+                    help="mean Poisson interarrival seconds")
+    ap.add_argument("--profile", action="store_true",
+                    help="print per-phase wall-clock timings")
+    args = ap.parse_args()
+
     archs = ["granite3_8b", "gemma2_2b", "mixtral_8x7b", "rwkv6_7b",
              "phi4_mini_3_8b"]
     jobs = []
-    for i in range(15):
+    for i in range(args.jobs):
         arch = archs[i % len(archs)]
         jobs.append(job_from_roofline(f"job-{i}-{arch}", arch,
                                       "artifacts/dryrun", steps=50 + 20 * (i % 4),
                                       group=i % 2))
-    for policy in ("tez", "dagps"):
-        res = schedule_cluster(jobs, n_slices=32, interarrival=30.0, policy=policy)
+    for policy in args.schemes.split(","):
+        res = schedule_cluster(jobs, n_slices=args.slices,
+                               interarrival=args.interarrival, policy=policy,
+                               placement_backend=args.backend,
+                               profile=args.profile)
         jcts = res.jcts()
-        print(f"{policy:6s}: median JCT {np.median(jcts):8.1f}s  "
+        print(f"{policy:10s}: median JCT {np.median(jcts):8.1f}s  "
               f"p75 {np.percentile(jcts, 75):8.1f}s  makespan {res.makespan:8.1f}s")
+        if args.profile and res.phase_times:
+            pt = res.phase_times
+            print(f"{'':10s}  phases: build {pt['build']:.2f}s  "
+                  f"match {pt['match']:.2f}s  event {pt['event']:.2f}s  "
+                  f"total {pt['total']:.2f}s")
 
 
 if __name__ == "__main__":

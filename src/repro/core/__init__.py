@@ -10,6 +10,6 @@ from .baselines import (
     simulate_execution, strip_levels,
 )
 from .online import (
-    DeficitCounters, JobView, Matcher, MatcherConfig, PendingTask,
-    drf_fairness, slot_fairness,
+    CandidateBatch, DeficitCounters, JobView, Matcher, MatcherConfig,
+    PendingTask, TaskPool, drf_fairness, slot_fairness,
 )

@@ -287,11 +287,23 @@ class BatchedSession(PlacementSession):
         cur = hi_start
         cand = self._cands.pop(tid, None)
         if cand is not None and cand.whi >= hi_start:
-            res = self._consume(cand, v, k, hi_start)
-            if res is not None:
-                if lo_cap is not None and res[1] < lo_cap:
-                    return PRUNED, cap
-                return res
+            # starts above cand.edge - k had their runs truncated by the
+            # then-grid boundary, so their cleared bits are unsound once the
+            # deadline has grown the grid (mirror of the forward resume
+            # rule): settle that top region with a live scan first
+            safe_hi = min(hi_start, cand.edge - k)
+            if safe_hi < hi_start:
+                res = sp.fit_first(v, k, safe_hi + 1, hi_start, latest=True)
+                if res is not None:
+                    if lo_cap is not None and res[1] < lo_cap:
+                        return PRUNED, cap
+                    return res
+            if safe_hi >= cand.wlo:
+                res = self._consume(cand, v, k, safe_hi)
+                if res is not None:
+                    if lo_cap is not None and res[1] < lo_cap:
+                        return PRUNED, cap
+                    return res
             cur = min(hi_start, cand.wlo - 1)
         W = max(WINDOW0, 2 * k)
         while True:

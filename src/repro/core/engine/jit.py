@@ -63,9 +63,30 @@ def _kernel():
 class JitBackend(BatchedBackend):
     name = "jit"
 
+    #: (m, d) pairs whose base kernel bucket has been compiled this process
+    _prewarmed: set[tuple[int, int]] = set()
+
     @classmethod
     def available(cls) -> bool:
         return _HAVE_JAX
+
+    @classmethod
+    def prewarm(cls, m: int, d: int) -> None:
+        """Compile the smallest (g, m, L, W) kernel bucket ahead of use.
+
+        The scan shapes are padded to coarse buckets, so the very first
+        window of a session otherwise pays XLA compilation plus backend
+        dispatch warm-up inside the timed placement path.  Larger buckets
+        still compile on demand (they are cheap once the backend is warm);
+        this removes the multi-second first-dispatch hit at session start.
+        """
+        if not _HAVE_JAX or (m, d) in cls._prewarmed:
+            return
+        cls._prewarmed.add((m, d))
+        win = np.full((m, 16, d), -1.0, dtype=np.float32)
+        Vs = np.full((8, d), 2.0, dtype=np.float32)
+        ks = np.ones(8, dtype=np.int32)
+        np.asarray(_kernel()(win, Vs, ks, 16))
 
     @staticmethod
     def scan_kernel(avail, Vs, ks, plo, phi, reverse):
@@ -100,6 +121,7 @@ class JitBackend(BatchedBackend):
         if not _HAVE_JAX:
             raise RuntimeError("placement backend 'jit' requires jax; "
                                "use 'batched' or 'reference' instead")
+        self.prewarm(space.m, space.d)
         return BatchedSession(space, direction, self)
 
 

@@ -9,15 +9,19 @@ Reconciles discordant objectives when many jobs share the cluster:
   * bounded unfairness via deficit counters (kappa * C), pluggable fairness
     f() — slot fairness or DRF.
 
-`Matcher.find_tasks_for_machine` is FindAppropriateTasksForMachine with
-bundling: it returns a *set* of tasks to start on the machine in one
-heartbeat (§7.2).
+`Matcher.match_batch` is FindAppropriateTasksForMachine with bundling: it
+returns a *set* of tasks to start on the machine in one heartbeat (§7.2),
+scored over the structure-of-arrays `CandidateBatch` columns that the
+persistent `TaskPool` maintains incrementally (no per-heartbeat object
+rebuilds; see "online data path" in docs/architecture.md).
+`Matcher.find_tasks_for_machine` is the object-list compatibility wrapper
+over the same core.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Iterable, Sequence
+from typing import Callable, Sequence
 
 import numpy as np
 
@@ -45,6 +49,147 @@ class JobView:
     job_id: int
     group: int                 # jobgroup / queue for fairness
     srpt: float                # remaining work: sum duration * |demands|
+
+
+@dataclasses.dataclass
+class CandidateBatch:
+    """Structure-of-arrays view of one heartbeat's candidate tasks.
+
+    One row per candidate; the matcher scores whole columns at once instead
+    of walking lists of `PendingTask` objects.  `job`/`tid` map rows back to
+    (job_id, task_id) for whoever starts the picked tasks.
+    """
+
+    dem: np.ndarray    # (n, d) float64 demand
+    pri: np.ndarray    # (n,) preferred-schedule priScore
+    srpt: np.ndarray   # (n,) owning job's remaining work
+    grp: np.ndarray    # (n,) int fairness group of the owning job
+    loc: np.ndarray    # (n,) int preferred machine, -1 = none
+    job: np.ndarray    # (n,) int owning job id
+    tid: np.ndarray    # (n,) int task id within the job
+
+    def __len__(self) -> int:
+        return len(self.dem)
+
+    def take(self, idx: np.ndarray) -> "CandidateBatch":
+        """Compress to the given rows (contiguous copies, order preserved)."""
+        return CandidateBatch(self.dem[idx], self.pri[idx], self.srpt[idx],
+                              self.grp[idx], self.loc[idx], self.job[idx],
+                              self.tid[idx])
+
+
+class _PoolJob:
+    """Per-job slot of the task pool: cached exposure + demand/pri rows."""
+
+    __slots__ = ("job_id", "group", "demand", "pri", "runnable", "srpt",
+                 "dirty", "tids", "dem_rows", "pri_rows")
+
+    def __init__(self, job_id: int, group: int, demand: np.ndarray,
+                 pri: np.ndarray, runnable: set[int], srpt: float):
+        self.job_id = job_id
+        self.group = group
+        self.demand = np.asarray(demand)
+        self.pri = np.asarray(pri)
+        self.runnable = runnable      # live reference, mutated by the owner
+        self.srpt = srpt
+        self.dirty = True
+        self.tids = np.empty(0, dtype=np.int64)
+        self.dem_rows = np.empty((0, demand.shape[1]))
+        self.pri_rows = np.empty(0)
+
+
+class TaskPool:
+    """Persistent SoA pending-task pool shared by simulator and matcher.
+
+    Jobs register once (in arrival order — candidate ordering follows job
+    registration order, matching the former per-heartbeat rebuild of the
+    candidate list); afterwards the owner marks a job dirty whenever its
+    runnable set changes and pushes SRPT updates as tasks finish.  A
+    heartbeat then calls `refresh()`, which re-sorts only the dirty jobs'
+    exposure (top `expose` runnable tasks by priScore, ties in the runnable
+    set's iteration order — identical to sorting the set from scratch) and
+    reuses cached per-job demand/priority rows for everyone else.  The flat
+    (n, d)/(n,) arrays handed to the matcher are concatenations of those
+    cached rows: no `PendingTask` objects, no per-machine `np.stack`.
+    """
+
+    def __init__(self, d: int, expose: int = 8):
+        self.d = d
+        self.expose = expose
+        self._jobs: dict[int, _PoolJob] = {}
+        self._pool_jobs: list[_PoolJob] = []
+        self._any_dirty = True
+        self._srpt_dirty = True
+        self._batch: CandidateBatch | None = None
+
+    def add_job(self, job_id: int, group: int, demand: np.ndarray,
+                pri: np.ndarray, runnable: set[int], srpt: float) -> None:
+        self._jobs[job_id] = _PoolJob(job_id, group, demand, pri, runnable,
+                                      srpt)
+        self._any_dirty = True
+
+    def remove_job(self, job_id: int) -> None:
+        if self._jobs.pop(job_id, None) is not None:
+            self._any_dirty = True
+
+    def mark_dirty(self, job_id: int) -> None:
+        pj = self._jobs.get(job_id)
+        if pj is not None:
+            pj.dirty = True
+            self._any_dirty = True
+
+    def set_srpt(self, job_id: int, srpt: float) -> None:
+        pj = self._jobs.get(job_id)
+        if pj is not None:
+            pj.srpt = srpt
+            self._srpt_dirty = True
+
+    def refresh(self) -> CandidateBatch | None:
+        """Current candidate batch, rebuilding only what changed."""
+        if not self._any_dirty and not self._srpt_dirty:
+            return self._batch
+        if self._any_dirty:
+            per_job: list[_PoolJob] = []
+            for pj in self._jobs.values():
+                if pj.dirty:
+                    # identical to the former per-heartbeat rebuild: a set's
+                    # iteration order is stable between mutations, so sorting
+                    # only when the set changed yields the same exposure.
+                    top = sorted(pj.runnable,
+                                 key=lambda t: -pj.pri[t])[: self.expose]
+                    pj.tids = np.asarray(top, dtype=np.int64)
+                    pj.dem_rows = pj.demand[pj.tids]
+                    pj.pri_rows = pj.pri[pj.tids].astype(np.float64)
+                    pj.dirty = False
+                if len(pj.tids):
+                    per_job.append(pj)
+            if not per_job:
+                self._batch = None
+                self._any_dirty = self._srpt_dirty = False
+                return None
+            counts = [len(pj.tids) for pj in per_job]
+            self._batch = CandidateBatch(
+                dem=np.concatenate([pj.dem_rows for pj in per_job]),
+                pri=np.concatenate([pj.pri_rows for pj in per_job]),
+                srpt=np.repeat(np.asarray([pj.srpt for pj in per_job],
+                                          dtype=np.float64), counts),
+                grp=np.repeat(np.asarray([pj.group for pj in per_job],
+                                         dtype=np.int64), counts),
+                loc=np.full(sum(counts), -1, dtype=np.int64),
+                job=np.repeat(np.asarray([pj.job_id for pj in per_job],
+                                         dtype=np.int64), counts),
+                tid=np.concatenate([pj.tids for pj in per_job]),
+            )
+            self._pool_jobs = per_job
+        elif self._batch is not None:
+            # only SRPT moved: re-gather that one column over cached rows
+            counts = [len(pj.tids) for pj in self._pool_jobs]
+            self._batch = dataclasses.replace(
+                self._batch,
+                srpt=np.repeat(np.asarray([pj.srpt for pj in self._pool_jobs],
+                                          dtype=np.float64), counts))
+        self._any_dirty = self._srpt_dirty = False
+        return self._batch
 
 
 def slot_fairness(demand: np.ndarray) -> float:
@@ -127,6 +272,13 @@ class Matcher:
         self.deficits = DeficitCounters(shares, capacity, cfg.kappa)
         self._ema_score = 1.0
         self._ema_srpt = 1.0
+        # cfg.fit_dims is fixed for the matcher's lifetime; hoist the dim
+        # split out of the per-machine hot path
+        self._dim_split = (
+            np.asarray(cfg.fit_dims),
+            np.asarray([r for r in RIGID if r in cfg.fit_dims], dtype=int),
+            np.asarray([f for f in FUNGIBLE if f in cfg.fit_dims], dtype=int),
+        )
 
     @property
     def eta(self) -> float:
@@ -139,6 +291,10 @@ class Matcher:
         self._ema_score = (1 - a) * self._ema_score + a * score
         self._ema_srpt = (1 - a) * self._ema_srpt + a * max(srpt, 1e-12)
 
+    def fit_dim_split(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(fit, rigid, fungible) dim index arrays under this config."""
+        return self._dim_split
+
     def find_tasks_for_machine(
         self,
         machine_id: int,
@@ -148,38 +304,70 @@ class Matcher:
     ) -> list[tuple[PendingTask, bool]]:
         """Returns [(task, overbooked)] to start now on this machine.
 
-        Vectorized over candidates: each bundling iteration is a handful of
-        numpy ops on (n_tasks, d) arrays.
+        Object-list compatibility wrapper over `match_batch`: builds the
+        SoA columns exactly as the matcher always has and maps picked rows
+        back to the `PendingTask` objects.
         """
-        cfg = self.cfg
         if not tasks:
             return []
+        cand = CandidateBatch(
+            dem=np.stack([t.demand for t in tasks]),
+            pri=np.array([t.pri_score for t in tasks]),
+            srpt=np.array([jobs[t.job_id].srpt for t in tasks]),
+            grp=np.array([jobs[t.job_id].group for t in tasks]),
+            loc=np.array([t.locality for t in tasks], dtype=np.int64),
+            job=np.array([t.job_id for t in tasks], dtype=np.int64),
+            tid=np.array([t.task_id for t in tasks], dtype=np.int64),
+        )
+        return [(tasks[i], over)
+                for i, over in self.match_batch(machine_id, avail, cand)]
+
+    def match_batch(
+        self,
+        machine_id: int,
+        avail: np.ndarray,
+        cand: CandidateBatch,
+    ) -> list[tuple[int, bool]]:
+        """Returns [(candidate row, overbooked)] to start on this machine.
+
+        The sequential bundling/deficit loop over precomputed SoA columns:
+        each iteration is a handful of numpy ops on (n, d) arrays, and the
+        decisions (pick order, overbook flags, EMA observations, deficit
+        updates) are bit-identical to the historical object-list matcher.
+        """
+        cfg = self.cfg
+        n = len(cand)
+        if n == 0:
+            return []
         avail = avail.astype(np.float64).copy()
-        dem = np.stack([t.demand for t in tasks])           # (n, d)
-        pri = (np.array([t.pri_score for t in tasks])
-               if cfg.use_priority else np.ones(len(tasks)))
-        srpt = np.array([jobs[t.job_id].srpt for t in tasks])
-        grp = np.array([jobs[t.job_id].group for t in tasks])
-        rp = np.array([
-            cfg.remote_penalty if (t.locality >= 0 and t.locality != machine_id) else 1.0
-            for t in tasks
-        ])
-        fd = np.asarray(cfg.fit_dims)
-        rigid = np.asarray([r for r in RIGID if r in cfg.fit_dims], dtype=int)
-        fung = np.asarray([f for f in FUNGIBLE if f in cfg.fit_dims], dtype=int)
-        taken = np.zeros(len(tasks), dtype=bool)
-        picked: list[tuple[PendingTask, bool]] = []
+        dem = cand.dem                                      # (n, d)
+        pri = cand.pri if cfg.use_priority else np.ones(n)
+        srpt = cand.srpt
+        grp = cand.grp
+        rp = np.where((cand.loc >= 0) & (cand.loc != machine_id),
+                      cfg.remote_penalty, 1.0)
+        fd, rigid, fung = self.fit_dim_split()
+        # hoist the per-dim gathers: each bundling iteration then compares
+        # against the same `avail + slack + eps` sums the shared fits_mask
+        # kernel forms, just without re-slicing the demand matrix
+        dem_fd = dem[:, fd]
+        dem_rigid = dem[:, rigid]
+        dem_fung = dem[:, fung]
+        ob_slack = cfg.max_overbook - 1.0
+        no_over = np.zeros(n, dtype=bool)
+        no_shoot = np.zeros(n)
+        taken = np.zeros(n, dtype=bool)
+        picked: list[tuple[int, bool]] = []
         while len(picked) < cfg.bundle_limit:
-            fits = packing.fits_mask(avail, dem, dims=fd)
+            fits = (dem_fd <= avail[fd] + packing.EPS).all(axis=1)
             if cfg.use_overbooking:
                 # rigid dims must really fit; fungible dims may overshoot by
                 # the bounded overbooking allowance
                 over = (~fits
-                        & packing.fits_mask(avail, dem, dims=rigid)
-                        & packing.fits_mask(avail, dem, dims=fung,
-                                            slack=cfg.max_overbook - 1.0))
+                        & (dem_rigid <= avail[rigid] + packing.EPS).all(axis=1)
+                        & (dem_fung <= avail[fung] + ob_slack + packing.EPS).all(axis=1))
             else:
-                over = np.zeros(len(tasks), dtype=bool)
+                over = no_over
             eligible = (fits | over) & ~taken
             must_group = self.deficits.must_serve()
             if must_group is not None and (eligible & (grp == must_group)).any():
@@ -187,13 +375,13 @@ class Matcher:
             if not eligible.any():
                 break
             if cfg.use_packing:
-                dot = packing.pack_score(avail, dem, clip=True) * rp
+                dot = (dem @ np.clip(avail, 0.0, None)) * rp
             else:
                 dot = rp.copy()
             if len(fung):
-                overshoot = np.clip((dem[:, fung] - avail[fung]).max(axis=1), 0.0, None)
+                overshoot = np.clip((dem_fung - avail[fung]).max(axis=1), 0.0, None)
             else:
-                overshoot = np.zeros(len(tasks))
+                overshoot = no_shoot
             base = np.where(fits, dot, dot * np.maximum(1.0 - overshoot, 0.05))
             perf = pri * base - self.eta * srpt
             # lexicographic: any fitting task beats any overbooked one
@@ -202,11 +390,10 @@ class Matcher:
             i = int(np.argmax(score))
             if not np.isfinite(score[i]):
                 break
-            t = tasks[i]
             taken[i] = True
-            picked.append((t, bool(over[i])))
+            picked.append((i, bool(over[i])))
             self._observe(float(pri[i] * base[i]), float(srpt[i]))
-            avail -= t.demand
+            avail -= dem[i]
             np.clip(avail, 0.0, None, out=avail)
-            self.deficits.allocated(jobs[t.job_id].group, cfg.fairness(t.demand))
+            self.deficits.allocated(int(grp[i]), cfg.fairness(dem[i]))
         return picked

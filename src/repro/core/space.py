@@ -42,6 +42,8 @@ def runs_of_k(ok: np.ndarray, k: int) -> np.ndarray:
     """
     if k <= 1:
         return ok
+    if ok.shape[1] < k:     # window shorter than the run: nothing can start
+        return np.zeros((ok.shape[0], 0), dtype=bool)
     c = np.cumsum(ok, axis=1, dtype=np.int32)
     runs = c[:, k - 1 :].copy()
     runs[:, 1:] -= c[:, : runs.shape[1] - 1]

@@ -82,8 +82,16 @@ def job_from_roofline(name: str, arch: str, dryrun_dir: str,
 
 def schedule_cluster(jobs: list[TPUJob], n_slices: int = 32,
                      interarrival: float = 60.0, seed: int = 0,
-                     policy: str = "dagps"):
-    """Gang-schedule the jobs' stage DAGs onto pod slices with DAGPS."""
+                     policy: str = "dagps",
+                     placement_backend: str | None = None,
+                     profile: bool = False):
+    """Gang-schedule the jobs' stage DAGs onto pod slices with DAGPS.
+
+    ``placement_backend`` selects the offline construction engine
+    (reference / batched / jit) for the schemes that build preferred
+    schedules; ``profile`` collects per-phase wall-clock timings on the
+    returned result.
+    """
     rng = np.random.default_rng(seed)
     arrivals = []
     t = 0.0
@@ -91,5 +99,6 @@ def schedule_cluster(jobs: list[TPUJob], n_slices: int = 32,
         arrivals.append((t, j.to_dag(), j.group))
         t += float(rng.exponential(interarrival))
     cfg = SimConfig(n_machines=n_slices, seed=seed,
-                    build_machines=max(n_slices // 8, 2))
+                    build_machines=max(n_slices // 8, 2),
+                    placement_backend=placement_backend, profile=profile)
     return ClusterSim(cfg, scheme(policy)).run(arrivals)

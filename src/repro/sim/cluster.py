@@ -13,29 +13,104 @@ runtime artifacts the paper discusses:
     the Fig. 11 effect), and explicit bounded overbooking for DAGPS.
 
 Scheme presets mirror §8.1's compared schemes.
+
+The event loop runs on the vectorized online data path (see
+docs/architecture.md): a persistent `TaskPool` replaces per-heartbeat
+candidate rebuilds, `packing.machines_with_candidates` batches the
+machine-eligibility test for a whole heartbeat, run records live in a SoA
+`_RunTable` indexed by the heap's integer payloads, and offline builds are
+memoized by DAG content digest — all bit-identical to the object-list
+implementation this replaced (tests/test_online_parity.py,
+tests/data/golden_sim.json).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import heapq
 import itertools
-from typing import Callable, Sequence
+import time
+from typing import Sequence
 
 import numpy as np
 
 from ..core.builder import build_schedule
 from ..core.baselines import bfs_order, cp_order, random_order
 from ..core.dag import DAG
-from ..core.engine import packing
+from ..core.engine import get_backend, packing
 from ..core.online import (
-    JobView,
     Matcher,
     MatcherConfig,
-    PendingTask,
+    TaskPool,
     drf_fairness,
     slot_fairness,
 )
+
+# event codes (heap entries are (time, seq, code, int_arg) — payloads live in
+# side tables indexed by the int arg, never in per-event tuples/dicts)
+_ARRIVAL, _FINISH, _SPEC, _FAIL, _JOIN = range(5)
+
+
+class _RunTable:
+    """SoA records of every launched task copy, indexed by run id.
+
+    Replaces the per-run dict objects: `fail` events select a machine's
+    live runs with one vectorized mask instead of scanning a dict, and
+    `finish`/`spec` events index straight into the arrays.
+    """
+
+    def __init__(self, cap: int = 256):
+        self.job = np.empty(cap, dtype=np.int64)
+        self.task = np.empty(cap, dtype=np.int64)
+        self.machine = np.empty(cap, dtype=np.int64)
+        self.start = np.empty(cap, dtype=np.float64)
+        self.expected = np.empty(cap, dtype=np.float64)
+        self.dead = np.zeros(cap, dtype=bool)
+        self.n = 0
+
+    def append(self, job: int, task: int, machine: int, start: float,
+               expected: float) -> int:
+        if self.n == len(self.job):
+            for name in ("job", "task", "machine", "start", "expected", "dead"):
+                arr = getattr(self, name)
+                grown = np.zeros(2 * len(arr), dtype=arr.dtype)
+                grown[: len(arr)] = arr
+                setattr(self, name, grown)
+        rid = self.n
+        self.job[rid] = job
+        self.task[rid] = task
+        self.machine[rid] = machine
+        self.start[rid] = start
+        self.expected[rid] = expected
+        self.dead[rid] = False
+        self.n += 1
+        return rid
+
+    def live_on(self, machine: int) -> np.ndarray:
+        """Run ids alive on a machine, ascending (== launch order)."""
+        return np.flatnonzero(~self.dead[: self.n]
+                              & (self.machine[: self.n] == machine))
+
+
+# Exact memo of offline construction: build_schedule is deterministic, so
+# identical (DAG content, share, backend) triples yield identical priScore
+# vectors.  Benchmarks replay the same DAG population through several
+# schemes/configs; caching makes every dagps build after the first free
+# while leaving outputs bit-identical.
+_PRI_CACHE: dict[tuple, np.ndarray] = {}
+_PRI_CACHE_CAP = 1024
+
+
+def _dag_digest(dag: DAG) -> bytes:
+    h = hashlib.blake2b(digest_size=16)
+    h.update(dag.duration.tobytes())
+    h.update(dag.demand.tobytes())
+    h.update(np.asarray(dag.stage_of, dtype=np.int64).tobytes())
+    for p in dag.parents:
+        h.update(np.asarray(p, dtype=np.int64).tobytes())
+        h.update(b";")
+    return h.digest()
 
 
 @dataclasses.dataclass
@@ -101,6 +176,8 @@ class SimConfig:
     repair_time: float = 120.0
     record_usage: bool = False
     placement_backend: str | None = None  # engine backend for offline builds
+    schedule_cache: bool = True    # memoize identical offline builds (exact)
+    profile: bool = False          # collect per-phase wall-clock timings
 
 
 @dataclasses.dataclass
@@ -124,6 +201,9 @@ class SimResult:
     allocations: list[tuple[float, float, int, float]]  # start, end, group, weight
     speculative_launches: int = 0
     failed_tasks_requeued: int = 0
+    #: per-phase wall-clock seconds (build / match / event / total) when
+    #: SimConfig.profile is set, else None
+    phase_times: dict[str, float] | None = None
 
     def jcts(self) -> np.ndarray:
         return np.array([j.jct for j in self.jobs])
@@ -206,7 +286,19 @@ class ClusterSim:
         kind = self.spec.order_fn
         if kind == "dagps":
             m = self.cfg.build_machines or max(self.cfg.n_machines // 10, 4)
-            return build_schedule(dag, m, backend=self.cfg.placement_backend).pri_score
+            if not self.cfg.schedule_cache:
+                return build_schedule(
+                    dag, m, backend=self.cfg.placement_backend).pri_score
+            key = (_dag_digest(dag), m,
+                   get_backend(self.cfg.placement_backend).name)
+            pri = _PRI_CACHE.get(key)
+            if pri is None:
+                pri = build_schedule(
+                    dag, m, backend=self.cfg.placement_backend).pri_score
+                if len(_PRI_CACHE) >= _PRI_CACHE_CAP:
+                    _PRI_CACHE.pop(next(iter(_PRI_CACHE)))
+                _PRI_CACHE[key] = pri
+            return pri
         if kind == "bfs":
             order = bfs_order(dag)
         elif kind == "cp":
@@ -226,29 +318,42 @@ class ClusterSim:
         alive = np.ones(M, dtype=bool)
         groups = sorted({g for (_, _, g) in arrivals})
         shares = {g: 1.0 for g in groups}
-        matcher = Matcher(self.spec.matcher, capacity=float(M), shares=shares)
+        mcfg = self.spec.matcher
+        matcher = Matcher(mcfg, capacity=float(M), shares=shares)
+        fd, rigid, fung = matcher.fit_dim_split()
+        ob_slack = mcfg.max_overbook - 1.0
 
         jobs: dict[int, _Job] = {}
+        pool = TaskPool(d=d, expose=cfg.expose_per_job)
         counter = itertools.count()
-        events: list[tuple[float, int, str, tuple]] = []
-        for k, (t, dag, g) in enumerate(arrivals):
-            heapq.heappush(events, (float(t), next(counter), "arrival", (k, dag, g)))
+        events: list[tuple[float, int, int, int]] = []
+        for k, (t, _dag, _g) in enumerate(arrivals):
+            heapq.heappush(events, (float(t), next(counter), _ARRIVAL, k))
         if cfg.failure_rate > 0:
             t_fail = float(rng.exponential(1.0 / cfg.failure_rate))
-            heapq.heappush(events, (t_fail, next(counter), "fail", ()))
+            heapq.heappush(events, (t_fail, next(counter), _FAIL, 0))
 
-        running: dict[int, dict] = {}   # run_id -> info
-        run_counter = itertools.count()
+        runs = _RunTable()
         task_active: dict[tuple[int, int], list[int]] = {}  # (job,task) -> run_ids
         results: list[JobResult] = []
         usage_samples: list[tuple[float, np.ndarray]] = []
         allocations: list[tuple[float, float, int, float]] = []
         spec_launches = 0
         requeued = 0
+        pending_arrivals = len(arrivals)
+        incomplete_jobs = 0
         t_now = 0.0
+        prof = {"build": 0.0, "match": 0.0} if cfg.profile else None
+        t_run0 = time.perf_counter() if cfg.profile else 0.0
 
-        def machine_load(m: int) -> np.ndarray:
-            return 1.0 - avail[m]
+        def timed(key, fn, *args):
+            if prof is None:
+                return fn(*args)
+            t0 = time.perf_counter()
+            try:
+                return fn(*args)
+            finally:
+                prof[key] += time.perf_counter() - t0
 
         def start_task(job: _Job, tid: int, m: int, now: float, speculative: bool = False) -> None:
             nonlocal spec_launches
@@ -260,165 +365,164 @@ class ClusterSim:
                 lo, hi = cfg.straggle_factor
                 dur = base * float(rng.uniform(lo, hi))
             # implicit/explicit overload on fungible dims slows this task down
-            load = machine_load(m)
+            load = 1.0 - avail[m]
             overload = float(max(load[2:].max() if d > 2 else 0.0, 1.0))
             dur_eff = dur * overload
-            rid = next(run_counter)
-            running[rid] = dict(job=job.job_id, task=tid, machine=m,
-                                start=now, expected=base, dead=False)
+            rid = runs.append(job.job_id, tid, m, now, base)
             task_active.setdefault((job.job_id, tid), []).append(rid)
             if not speculative:
                 job.task_started(tid)
+                pool.mark_dirty(job.job_id)
             else:
                 spec_launches += 1
-            heapq.heappush(events, (now + dur_eff, next(counter), "finish", (rid,)))
+            heapq.heappush(events, (now + dur_eff, next(counter), _FINISH, rid))
             if cfg.speculate and not speculative:
                 chk = now + cfg.spec_threshold * base
-                heapq.heappush(events, (chk, next(counter), "spec", (rid,)))
+                heapq.heappush(events, (chk, next(counter), _SPEC, rid))
             allocations.append((now, now + dur_eff, job.group, float(np.abs(dem).sum())))
 
         def free_run(rid: int) -> None:
-            info = running[rid]
-            if not info["dead"]:
-                info["dead"] = True
-                avail[info["machine"]] += jobs[info["job"]].dag.demand[info["task"]]
+            if not runs.dead[rid]:
+                runs.dead[rid] = True
+                avail[runs.machine[rid]] += \
+                    jobs[int(runs.job[rid])].dag.demand[runs.task[rid]]
 
-        def _candidates() -> tuple[list[PendingTask], dict[int, JobView]]:
-            cands: list[PendingTask] = []
-            views: dict[int, JobView] = {}
-            for j in jobs.values():
-                if j.complete or not j.runnable:
-                    continue
-                views[j.job_id] = JobView(j.job_id, j.group, j.srpt)
-                top = sorted(j.runnable, key=lambda t: -j.pri[t])[: cfg.expose_per_job]
-                for tid in top:
-                    cands.append(PendingTask(
-                        job_id=j.job_id, task_id=tid,
-                        demand=j.dag.demand[tid], duration=float(j.dag.duration[tid]),
-                        pri_score=float(j.pri[tid]),
-                    ))
-            return cands, views
+        def settle_finish(rid: int, now: float) -> None:
+            """One task-copy completion: free it, kill speculative siblings,
+            advance the DAG, retire the job when done."""
+            nonlocal incomplete_jobs
+            job = jobs[int(runs.job[rid])]
+            tid = int(runs.task[rid])
+            free_run(rid)
+            for sib in task_active.get((job.job_id, tid), ()):
+                if sib != rid and not runs.dead[sib]:
+                    free_run(sib)
+            # exposure only depends on the runnable set: task_done changes
+            # it when it unlocks children OR when the task was requeued
+            # (machine failure) and a surviving speculative copy finished —
+            # then task_done itself pulls it back out of runnable.  srpt
+            # always moves; the pool patches that one column without
+            # re-sorting clean jobs.
+            was_runnable = tid in job.runnable
+            if job.task_done(tid) or was_runnable:
+                pool.mark_dirty(job.job_id)
+            pool.set_srpt(job.job_id, job.srpt)
+            if job.complete and job.finish is None:
+                job.finish = now
+                results.append(JobResult(job.job_id, job.group, job.arrival,
+                                         now, job.dag.n))
+                pool.remove_job(job.job_id)
+                incomplete_jobs -= 1
 
         def match_machine(m: int, now: float) -> None:
             if not alive[m]:
                 return
-            cands, views = _candidates()
-            if not cands:
+            batch = pool.refresh()
+            if batch is None or len(batch) == 0:
                 return
-            picks = matcher.find_tasks_for_machine(m, avail[m], cands, views)
-            for task, _over in picks:
-                start_task(jobs[task.job_id], task.task_id, m, now)
+            picks = matcher.match_batch(m, avail[m], batch)
+            for i, _over in picks:
+                start_task(jobs[int(batch.job[i])], int(batch.tid[i]), m, now)
 
         def match_all(now: float) -> None:
-            cands, views = _candidates()
-            if not cands:
+            batch = pool.refresh()
+            if batch is None or len(batch) == 0:
                 return
+            # one shot over all (candidate, machine) pairs: a machine whose
+            # eligibility column is empty cannot pick anything, so skipping
+            # its matcher call is decision-free (no deficit/EMA mutation).
+            eligible, machine_any = packing.machines_with_candidates(
+                avail, batch.dem, fd, rigid, fung, ob_slack,
+                mcfg.use_overbooking)
+            active = np.ones(len(batch), dtype=bool)
+            n_active = len(batch)
             order = np.argsort(-avail.sum(axis=1))
-            for m in order:
-                m = int(m)
-                if not alive[m] or not (avail[m] > 1e-9).any():
-                    continue
-                if not cands:
+            # visit only machines that can possibly pick: dead, drained, or
+            # candidate-less machines are guaranteed matcher no-ops
+            ok = (alive[order] & (avail[order] > 1e-9).any(axis=1)
+                  & machine_any[order])
+            for m in order[ok].tolist():
+                if n_active == 0:
                     break
-                # sound skip: machine can host nothing if its availability is
-                # below the per-dim minimum demand of all remaining candidates
-                min_dem = np.min([t.demand for t in cands], axis=0)
-                fd = list(self.spec.matcher.fit_dims)
-                if (not packing.fits_mask(avail[m], min_dem, dims=fd)
-                        and not self.spec.matcher.use_overbooking):
+                if not (eligible[:, m] & active).any():
                     continue
-                picks = matcher.find_tasks_for_machine(m, avail[m], cands, views)
-                started_ids = set()
-                for task, _over in picks:
-                    start_task(jobs[task.job_id], task.task_id, m, now)
-                    started_ids.add((task.job_id, task.task_id))
-                if started_ids:
-                    cands = [t for t in cands if (t.job_id, t.task_id) not in started_ids]
+                idx = np.flatnonzero(active)
+                sub = batch.take(idx)
+                picks = matcher.match_batch(m, avail[m], sub)
+                for i, _over in picks:
+                    gi = int(idx[i])
+                    start_task(jobs[int(batch.job[gi])], int(batch.tid[gi]),
+                               m, now)
+                    active[gi] = False
+                n_active -= len(picks)
 
         while events:
-            t_now, _, kind, data = heapq.heappop(events)
-            if kind == "arrival":
-                k, dag, g = data
-                pri = self._make_pri(dag, rng)
-                job = _Job(k, dag, t_now, g, pri)
-                jobs[k] = job
-                match_all(t_now)
-            elif kind == "finish":
-                (rid,) = data
-                info = running[rid]
-                if info["dead"]:
+            t_now, _, kind, arg = heapq.heappop(events)
+            if kind == _ARRIVAL:
+                _t_arr, dag, g = arrivals[arg]
+                pri = timed("build", self._make_pri, dag, rng)
+                job = _Job(arg, dag, t_now, g, pri)
+                jobs[arg] = job
+                pool.add_job(arg, g, dag.demand, pri, job.runnable, job.srpt)
+                pending_arrivals -= 1
+                if not job.complete:    # zero-task jobs never finish events
+                    incomplete_jobs += 1
+                timed("match", match_all, t_now)
+            elif kind == _FINISH:
+                if runs.dead[arg]:
                     continue
-                job = jobs[info["job"]]
-                tid = info["task"]
-                free_run(rid)
-                # kill sibling speculative copies
-                for sib in task_active.get((job.job_id, tid), []):
-                    if sib != rid and not running[sib]["dead"]:
-                        free_run(sib)
-                job.task_done(tid)
-                if job.complete and job.finish is None:
-                    job.finish = t_now
-                    results.append(JobResult(job.job_id, job.group, job.arrival,
-                                             t_now, job.dag.n))
+                settle_finish(arg, t_now)
                 if cfg.record_usage:
                     usage_samples.append((t_now, (1.0 - avail[alive]).sum(axis=0)))
                 # drain simultaneous finishes before re-matching
-                while events and events[0][2] == "finish" and events[0][0] <= t_now + 1e-9:
-                    _, _, _, (rid2,) = heapq.heappop(events)
-                    info2 = running[rid2]
-                    if info2["dead"]:
+                while events and events[0][2] == _FINISH and events[0][0] <= t_now + 1e-9:
+                    _, _, _, rid2 = heapq.heappop(events)
+                    if runs.dead[rid2]:
                         continue
-                    job2 = jobs[info2["job"]]
-                    tid2 = info2["task"]
-                    free_run(rid2)
-                    for sib in task_active.get((job2.job_id, tid2), []):
-                        if sib != rid2 and not running[sib]["dead"]:
-                            free_run(sib)
-                    job2.task_done(tid2)
-                    if job2.complete and job2.finish is None:
-                        job2.finish = t_now
-                        results.append(JobResult(job2.job_id, job2.group, job2.arrival,
-                                                 t_now, job2.dag.n))
-                match_all(t_now)
-            elif kind == "spec":
-                (rid,) = data
-                info = running[rid]
-                if info["dead"]:
+                    settle_finish(rid2, t_now)
+                timed("match", match_all, t_now)
+            elif kind == _SPEC:
+                if runs.dead[arg]:
                     continue
-                job = jobs[info["job"]]
-                tid = info["task"]
+                job = jobs[int(runs.job[arg])]
+                tid = int(runs.task[arg])
                 # only speculate if some machine can host a copy right now
                 dem = job.dag.demand[tid]
                 fit = np.nonzero(alive & packing.fits_mask(avail, dem))[0]
                 if len(fit):
                     start_task(job, tid, int(fit[0]), t_now, speculative=True)
-            elif kind == "fail":
+            elif kind == _FAIL:
                 m = int(rng.integers(M))
                 if alive[m]:
                     alive[m] = False
-                    for rid, info in list(running.items()):
-                        if not info["dead"] and info["machine"] == m:
-                            free_run(rid)
-                            job = jobs[info["job"]]
-                            job.task_requeued(info["task"])
-                            requeued += 1
+                    for rid in runs.live_on(m):
+                        rid = int(rid)
+                        free_run(rid)
+                        job = jobs[int(runs.job[rid])]
+                        job.task_requeued(int(runs.task[rid]))
+                        pool.mark_dirty(job.job_id)
+                        requeued += 1
                     avail[m] = 0.0
-                    heapq.heappush(events, (t_now + cfg.repair_time, next(counter), "join", (m,)))
-                still_work = any(not j.complete for j in jobs.values()) or any(
-                    e[2] == "arrival" for e in events
-                )
-                if cfg.failure_rate > 0 and still_work:
+                    heapq.heappush(events, (t_now + cfg.repair_time,
+                                            next(counter), _JOIN, m))
+                if cfg.failure_rate > 0 and (incomplete_jobs > 0
+                                             or pending_arrivals > 0):
                     nxt = t_now + float(rng.exponential(1.0 / cfg.failure_rate))
-                    heapq.heappush(events, (nxt, next(counter), "fail", ()))
-            elif kind == "join":
-                (m,) = data
-                alive[m] = True
-                avail[m] = 1.0
-                match_machine(m, t_now)
+                    heapq.heappush(events, (nxt, next(counter), _FAIL, 0))
+            elif kind == _JOIN:
+                alive[arg] = True
+                avail[arg] = 1.0
+                timed("match", match_machine, arg, t_now)
 
         makespan = max((j.finish for j in results), default=0.0)
+        phase_times = None
+        if prof is not None:
+            total = time.perf_counter() - t_run0
+            phase_times = {"build": prof["build"], "match": prof["match"],
+                           "event": max(total - prof["build"] - prof["match"], 0.0),
+                           "total": total}
         return SimResult(results, makespan, usage_samples, allocations,
-                         spec_launches, requeued)
+                         spec_launches, requeued, phase_times)
 
 
 def run_workload(

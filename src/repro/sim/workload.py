@@ -275,6 +275,26 @@ def workflow_dag(rng: np.random.Generator, name: str = "workflow") -> DAG:
                             duration_jitter=0.1, demand_jitter=0.1)
 
 
+def online_mix_workload(n_jobs: int, seed: int = 0,
+                        scale: float = 0.5) -> list[DAG]:
+    """Cluster-scale online mix: alternating production + TPC-DS jobs.
+
+    The population the s8/s9 online scenarios schedule — the paper's §8
+    regime of heterogeneous query DAGs interleaved with production DAGs
+    arriving at high rate on hundreds of machines.  `scale` sizes the
+    production DAGs (0.5 keeps individual jobs small so the *count* of
+    concurrent jobs, not any single DAG, is what stresses the scheduler).
+    """
+    rng = np.random.default_rng(seed)
+    out: list[DAG] = []
+    for k in range(n_jobs):
+        if k % 2 == 0:
+            out.append(production_dag(rng, scale=scale, name=f"prod-{k}"))
+        else:
+            out.append(query_dag(rng, "tpcds", name=f"tpcds-{k}"))
+    return out
+
+
 def make_workload(benchmark: str, n_jobs: int, seed: int = 0, scale: float = 1.0) -> list[DAG]:
     """n_jobs DAGs drawn from a benchmark family (§8.1)."""
     rng = np.random.default_rng(seed)

@@ -96,6 +96,20 @@ class TestSpace:
         with pytest.raises(RuntimeError):
             s.commit(1, 0, 0, 4, np.array([0.9]))
 
+    def test_runs_of_k_window_shorter_than_run(self):
+        from repro.core.space import runs_of_k
+        ok = np.ones((3, 5), dtype=bool)
+        # window shorter than the run: nothing can start (used to mis-slice
+        # the cumsum and raise on long tasks scanned near the grid end)
+        assert runs_of_k(ok, 7).shape == (3, 0)
+        assert runs_of_k(ok, 6).shape == (3, 0)
+        # boundary: window exactly k long has the single start position
+        out = runs_of_k(ok, 5)
+        assert out.shape == (3, 1) and out.all()
+        # a gap still blocks the run
+        ok[1, 2] = False
+        assert not runs_of_k(ok, 5)[1, 0]
+
 
 class TestBuilder:
     def test_schedule_valid_on_random_dags(self):
@@ -188,6 +202,44 @@ class TestOnline:
         g, d = dc.most_deprived()
         assert g == 1
         assert dc.must_serve() == 1  # deficit 5 >= kappa*C = 1
+
+    def test_set_groups_add_remove_mid_run(self):
+        dc = DeficitCounters({0: 1.0, 1: 1.0}, capacity=10, kappa=0.1)
+        for _ in range(4):
+            dc.allocated(0, 1.0)          # group 0 hogs -> 1 deprived
+        assert dc.must_serve() == 1
+        # a queue joins mid-run: zero deficit, shares renormalized
+        dc.set_groups({0: 1.0, 1: 1.0, 2: 2.0})
+        assert dc.deficit[2] == 0.0
+        assert abs(sum(dc.share.values()) - 1.0) < 1e-12
+        assert dc.share[2] == pytest.approx(0.5)
+        assert dc.must_serve() == 1       # existing deprivation survives churn
+        # the deprived queue leaves: its deficit is dropped entirely
+        dc.set_groups({0: 1.0, 2: 1.0})
+        assert 1 not in dc.deficit and 1 not in dc.share
+        assert set(dc.deficit) == {0, 2}
+        for _ in range(6):
+            dc.allocated(0, 1.0)
+        assert dc.must_serve() == 2
+        # each allocation is conservative: shares sum to 1, so one call
+        # moves the total deficit by sum(share)*w - w = 0
+        before = sum(dc.deficit.values())
+        dc.allocated(2, 1.0)
+        assert sum(dc.deficit.values()) == pytest.approx(before)
+
+    def test_jain_index_edge_cases(self):
+        dc = DeficitCounters({0: 1.0, 1: 3.0}, capacity=10, kappa=0.1)
+        # zero usage everywhere -> degenerate window counts as fair
+        assert dc.jain_index({}) == 1.0
+        assert dc.jain_index({0: 0.0, 1: 0.0}) == 1.0
+        # usage proportional to share -> perfectly fair
+        assert dc.jain_index({0: 1.0, 1: 3.0}) == pytest.approx(1.0)
+        # one group starved -> n-group worst case is 1/n
+        assert dc.jain_index({0: 4.0, 1: 0.0}) == pytest.approx(0.5)
+        # single group is always perfectly fair, whatever its usage
+        solo = DeficitCounters({7: 2.0}, capacity=4, kappa=0.1)
+        assert solo.jain_index({7: 0.0}) == 1.0
+        assert solo.jain_index({7: 123.0}) == pytest.approx(1.0)
 
     def test_priority_steers_choice(self):
         m = Matcher(MatcherConfig(use_srpt=False), capacity=10, shares={0: 1.0})

@@ -64,6 +64,31 @@ class TestBackendParity:
             results[name] = sess.place(1, np.array([0.5]), 2, 0, (0, 0.0, b"x"))
         assert results["batched"] == results["reference"] == (0, 9)
 
+    def test_backward_peer_cache_growth_rescan(self):
+        """Backward mirror of the grid-edge rule: a peer bitmap scanned
+        when the grid was shorter has unsound clear bits above edge - k;
+        once the real deadline grows the grid those starts must be settled
+        live, not trusted — regression for a batched/reference divergence."""
+        from repro.core.engine import BACKWARD, PeerTask
+
+        results = {}
+        for name in ("reference", "batched"):
+            s = Space(m=1, d=1, horizon=10)
+            sess = get_backend(name).session(s, BACKWARD)
+            # placing A announces peer B with an *estimated* deadline of 10;
+            # B's bitmap clears starts 5..6 only because their runs crossed
+            # the then-grid end
+            peers = [PeerTask(tid=2, anchor=10, demand=np.array([0.5]),
+                              dur_ticks=6)]
+            a = sess.place(1, np.array([0.5]), 2, 8, (0, 0.0, b"a"),
+                           peers_fn=lambda: peers)
+            s.commit(1, a[0], a[1], 2, np.array([0.5]))
+            # B's real deadline is 12: the grid grows and start 6 now fits
+            results[name] = sess.place(2, np.array([0.5]), 6, 12,
+                                       (1, 0.0, b"b"))
+        assert results["batched"] == results["reference"]
+        assert results["reference"][1] == 6
+
     def test_registry(self):
         names = available_backends()
         assert {"reference", "batched", "jit"} <= set(names)

@@ -1,0 +1,294 @@
+"""Decision parity: batched SoA matcher ≡ the pre-refactor object matcher.
+
+The vectorized online path (CandidateBatch/TaskPool + `Matcher.match_batch`)
+must make bit-identical decisions to the historical per-machine object-list
+matcher: same picks in the same order, same overbook flags, same EMA
+observations and deficit updates.  `ReferenceMatcher` below is a verbatim
+copy of the pre-refactor `find_tasks_for_machine`; randomized heartbeats
+(including score ties, overbooking boundaries, deficit forcing, and
+carried-over matcher state) assert equality against the new path.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.engine import packing
+from repro.core.online import (CandidateBatch, DeficitCounters, JobView,
+                               Matcher, MatcherConfig, PendingTask, TaskPool,
+                               drf_fairness, slot_fairness)
+
+FUNGIBLE = (2, 3)
+RIGID = (0, 1)
+
+
+class ReferenceMatcher:
+    """Pre-refactor FindAppropriateTasksForMachine, kept verbatim as the
+    parity oracle for the batched path."""
+
+    def __init__(self, cfg: MatcherConfig, capacity: float, shares: dict[int, float]):
+        self.cfg = cfg
+        self.deficits = DeficitCounters(shares, capacity, cfg.kappa)
+        self._ema_score = 1.0
+        self._ema_srpt = 1.0
+
+    @property
+    def eta(self) -> float:
+        if not self.cfg.use_srpt:
+            return 0.0
+        return self.cfg.eta_m * self._ema_score / max(self._ema_srpt, 1e-12)
+
+    def _observe(self, score: float, srpt: float) -> None:
+        a = 0.05
+        self._ema_score = (1 - a) * self._ema_score + a * score
+        self._ema_srpt = (1 - a) * self._ema_srpt + a * max(srpt, 1e-12)
+
+    def find_tasks_for_machine(self, machine_id, avail, tasks, jobs):
+        cfg = self.cfg
+        if not tasks:
+            return []
+        avail = avail.astype(np.float64).copy()
+        dem = np.stack([t.demand for t in tasks])           # (n, d)
+        pri = (np.array([t.pri_score for t in tasks])
+               if cfg.use_priority else np.ones(len(tasks)))
+        srpt = np.array([jobs[t.job_id].srpt for t in tasks])
+        grp = np.array([jobs[t.job_id].group for t in tasks])
+        rp = np.array([
+            cfg.remote_penalty if (t.locality >= 0 and t.locality != machine_id) else 1.0
+            for t in tasks
+        ])
+        fd = np.asarray(cfg.fit_dims)
+        rigid = np.asarray([r for r in RIGID if r in cfg.fit_dims], dtype=int)
+        fung = np.asarray([f for f in FUNGIBLE if f in cfg.fit_dims], dtype=int)
+        taken = np.zeros(len(tasks), dtype=bool)
+        picked = []
+        while len(picked) < cfg.bundle_limit:
+            fits = packing.fits_mask(avail, dem, dims=fd)
+            if cfg.use_overbooking:
+                over = (~fits
+                        & packing.fits_mask(avail, dem, dims=rigid)
+                        & packing.fits_mask(avail, dem, dims=fung,
+                                            slack=cfg.max_overbook - 1.0))
+            else:
+                over = np.zeros(len(tasks), dtype=bool)
+            eligible = (fits | over) & ~taken
+            must_group = self.deficits.must_serve()
+            if must_group is not None and (eligible & (grp == must_group)).any():
+                eligible &= grp == must_group
+            if not eligible.any():
+                break
+            if cfg.use_packing:
+                dot = packing.pack_score(avail, dem, clip=True) * rp
+            else:
+                dot = rp.copy()
+            if len(fung):
+                overshoot = np.clip((dem[:, fung] - avail[fung]).max(axis=1), 0.0, None)
+            else:
+                overshoot = np.zeros(len(tasks))
+            base = np.where(fits, dot, dot * np.maximum(1.0 - overshoot, 0.05))
+            perf = pri * base - self.eta * srpt
+            pool = eligible & fits if (eligible & fits).any() else eligible
+            score = np.where(pool, perf, -np.inf)
+            i = int(np.argmax(score))
+            if not np.isfinite(score[i]):
+                break
+            t = tasks[i]
+            taken[i] = True
+            picked.append((t, bool(over[i])))
+            self._observe(float(pri[i] * base[i]), float(srpt[i]))
+            avail -= t.demand
+            np.clip(avail, 0.0, None, out=avail)
+            self.deficits.allocated(jobs[t.job_id].group, cfg.fairness(t.demand))
+        return picked
+
+
+def _random_heartbeat(rng: np.random.Generator):
+    """One randomized heartbeat config: tasks, job views, cfg, machines."""
+    d = 4
+    n_jobs = int(rng.integers(1, 6))
+    jobs = {j: JobView(j, int(rng.integers(0, 3)),
+                       float(rng.uniform(0.5, 50.0))) for j in range(n_jobs)}
+    n = int(rng.integers(1, 40))
+    quant = rng.random() < 0.5       # coarse demands/pri force score ties
+    tasks = []
+    for i in range(n):
+        dem = rng.uniform(0.02, 0.95, d)
+        pri = float(rng.uniform(0.0, 1.0))
+        if quant:
+            dem = np.round(dem * 5) / 5 + 0.01
+            pri = round(pri, 1)
+        tasks.append(PendingTask(
+            job_id=int(rng.integers(0, n_jobs)), task_id=i, demand=dem,
+            duration=float(rng.uniform(0.5, 20.0)), pri_score=pri,
+            locality=int(rng.integers(-1, 4)) if rng.random() < 0.3 else -1))
+    cfg = MatcherConfig(
+        eta_m=float(rng.choice([0.05, 0.2, 0.5])),
+        remote_penalty=float(rng.choice([0.5, 0.8, 1.0])),
+        kappa=float(rng.choice([0.02, 0.1, 10.0])),
+        max_overbook=float(rng.choice([1.0, 1.25, 1.5])),
+        fairness=drf_fairness if rng.random() < 0.5 else slot_fairness,
+        use_priority=bool(rng.random() < 0.8),
+        use_packing=bool(rng.random() < 0.8),
+        use_srpt=bool(rng.random() < 0.8),
+        use_overbooking=bool(rng.random() < 0.7),
+        bundle_limit=int(rng.choice([2, 8, 64])),
+        fit_dims=tuple(rng.choice([0, 1, 2, 3],
+                                  size=int(rng.integers(1, 5)),
+                                  replace=False).tolist()),
+    )
+    shares = {g: 1.0 for g in sorted({v.group for v in jobs.values()})}
+    machines = [(int(m), rng.uniform(0.0, 1.2, d))
+                for m in rng.integers(0, 5, size=int(rng.integers(1, 4)))]
+    return tasks, jobs, cfg, shares, machines
+
+
+def _batch_from(tasks, jobs) -> CandidateBatch:
+    return CandidateBatch(
+        dem=np.stack([t.demand for t in tasks]),
+        pri=np.array([t.pri_score for t in tasks]),
+        srpt=np.array([jobs[t.job_id].srpt for t in tasks]),
+        grp=np.array([jobs[t.job_id].group for t in tasks]),
+        loc=np.array([t.locality for t in tasks], dtype=np.int64),
+        job=np.array([t.job_id for t in tasks], dtype=np.int64),
+        tid=np.array([t.task_id for t in tasks], dtype=np.int64),
+    )
+
+
+def _assert_parity_one(seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    tasks, jobs, cfg, shares, machines = _random_heartbeat(rng)
+    ref = ReferenceMatcher(cfg, capacity=10.0, shares=shares)
+    new = Matcher(cfg, capacity=10.0, shares=shares)
+    # pre-load deficit state identically on both (forces must_serve paths)
+    for _ in range(int(rng.integers(0, 8))):
+        g = int(rng.choice(list(shares)))
+        w = float(rng.uniform(0.5, 2.0))
+        ref.deficits.allocated(g, w)
+        new.deficits.allocated(g, w)
+    # several heartbeats against the same matcher state (EMA/deficit carry)
+    for m, avail in machines:
+        want = ref.find_tasks_for_machine(m, avail, tasks, jobs)
+        got_rows = new.match_batch(m, avail, _batch_from(tasks, jobs))
+        got = [(tasks[i], ob) for i, ob in got_rows]
+        assert [(t.job_id, t.task_id, ob) for t, ob in want] == \
+               [(t.job_id, t.task_id, ob) for t, ob in got]
+        assert new._ema_score == ref._ema_score
+        assert new._ema_srpt == ref._ema_srpt
+        assert new.deficits.deficit == ref.deficits.deficit
+
+
+def test_decision_parity_seeded():
+    """≥20 randomized heartbeat configurations, exact decision parity."""
+    for seed in range(30):
+        _assert_parity_one(seed)
+
+
+def test_wrapper_matches_batch_core():
+    """find_tasks_for_machine (object wrapper) ≡ match_batch decisions."""
+    rng = np.random.default_rng(1234)
+    for _ in range(10):
+        tasks, jobs, cfg, shares, machines = _random_heartbeat(rng)
+        a = Matcher(cfg, capacity=10.0, shares=shares)
+        b = Matcher(cfg, capacity=10.0, shares=shares)
+        for m, avail in machines:
+            via_wrap = a.find_tasks_for_machine(m, avail, tasks, jobs)
+            via_core = b.match_batch(m, avail, _batch_from(tasks, jobs))
+            assert [(t.task_id, ob) for t, ob in via_wrap] == \
+                   [(tasks[i].task_id, ob) for i, ob in via_core]
+            assert a._ema_score == b._ema_score
+            assert a.deficits.deficit == b.deficits.deficit
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_decision_parity_hypothesis(seed):
+        _assert_parity_one(seed)
+except ImportError:  # pragma: no cover - hypothesis ships with .[test]
+    pass
+
+
+def test_machine_skip_layer_is_exact():
+    """machines_with_candidates ≡ the matcher's first-iteration eligibility.
+
+    The simulator skips machines whose eligibility column is empty; that is
+    only decision-free if the batched masks match what `match_batch` would
+    compute on its first bundling iteration for every machine — including
+    restricted fit_dims, disabled overbooking, and sub-1.0 overbook caps.
+    """
+    rng = np.random.default_rng(99)
+    for trial in range(40):
+        n, m, d = int(rng.integers(1, 30)), int(rng.integers(1, 20)), 4
+        dem = rng.uniform(0.02, 0.95, (n, d))
+        avail = rng.uniform(0.0, 1.1, (m, d))
+        fit_dims = tuple(sorted(rng.choice(4, size=int(rng.integers(1, 5)),
+                                           replace=False).tolist()))
+        use_ob = bool(rng.random() < 0.6)
+        max_ob = float(rng.choice([0.9, 1.0, 1.25, 1.5]))
+        fd = np.asarray(fit_dims)
+        rigid = np.asarray([r for r in RIGID if r in fit_dims], dtype=int)
+        fung = np.asarray([f for f in FUNGIBLE if f in fit_dims], dtype=int)
+        eligible, machine_any = packing.machines_with_candidates(
+            avail, dem, fd, rigid, fung, max_ob - 1.0, use_ob)
+        for mi in range(m):
+            fits = packing.fits_mask(avail[mi], dem, dims=fd)
+            if use_ob:
+                over = (~fits
+                        & packing.fits_mask(avail[mi], dem, dims=rigid)
+                        & packing.fits_mask(avail[mi], dem, dims=fung,
+                                            slack=max_ob - 1.0))
+            else:
+                over = np.zeros(n, dtype=bool)
+            want = fits | over
+            np.testing.assert_array_equal(eligible[:, mi], want,
+                                          err_msg=f"trial {trial} machine {mi}")
+            assert machine_any[mi] == want.any()
+
+
+def test_taskpool_matches_fresh_rebuild():
+    """Incremental TaskPool refresh ≡ rebuilding candidates from scratch."""
+    rng = np.random.default_rng(7)
+    pool = TaskPool(d=4, expose=4)
+    jobs = {}
+    for j in range(5):
+        n = int(rng.integers(3, 12))
+        demand = rng.uniform(0.05, 0.9, (n, 4))
+        pri = np.round(rng.uniform(0, 1, n), 1)   # ties likely
+        runnable = set(range(n))
+        jobs[j] = dict(demand=demand, pri=pri, runnable=runnable,
+                       srpt=float(rng.uniform(1, 20)), group=j % 2)
+        pool.add_job(j, j % 2, demand, pri, runnable, jobs[j]["srpt"])
+
+    def fresh():
+        dem, prs, tids, jids = [], [], [], []
+        for j, jd in jobs.items():
+            top = sorted(jd["runnable"], key=lambda t: -jd["pri"][t])[:4]
+            for t in top:
+                dem.append(jd["demand"][t])
+                prs.append(float(jd["pri"][t]))
+                tids.append(t)
+                jids.append(j)
+        return dem, prs, tids, jids
+
+    for step in range(40):
+        batch = pool.refresh()
+        dem, prs, tids, jids = fresh()
+        assert batch is not None and len(batch) == len(tids)
+        np.testing.assert_array_equal(batch.dem, np.stack(dem))
+        np.testing.assert_array_equal(batch.pri, np.array(prs))
+        assert batch.tid.tolist() == tids
+        assert batch.job.tolist() == jids
+        # mutate a random job's runnable set like the simulator would
+        j = int(rng.integers(0, 5))
+        jd = jobs[j]
+        if jd["runnable"] and rng.random() < 0.6:
+            victim = sorted(jd["runnable"])[int(rng.integers(0, len(jd["runnable"])))]
+            jd["runnable"].discard(victim)
+        else:
+            jd["runnable"].add(int(rng.integers(0, len(jd["pri"]))))
+        pool.mark_dirty(j)
+        jd["srpt"] *= 0.9
+        pool.set_srpt(j, jd["srpt"])

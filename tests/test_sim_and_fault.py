@@ -1,10 +1,15 @@
 """Cluster-simulator behaviors: completion, fairness, stragglers, failures."""
 
+import json
+import os
+
 import numpy as np
 import pytest
 
 from repro.sim import make_workload, run_workload
 from repro.sim.cluster import ClusterSim, SimConfig, scheme
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "data", "golden_sim.json")
 
 
 def _small_workload(n=6, seed=0):
@@ -52,6 +57,93 @@ def test_machine_failures_requeue_and_complete():
                        failure_rate=1 / 150.0, repair_time=60.0)
     assert len(res.jobs) == 5          # everything still finishes
     assert res.failed_tasks_requeued >= 0
+
+
+@pytest.mark.parametrize("name,bench,n,sch,kw", [
+    ("tpch_tez", "tpch", 8, "tez",
+     dict(n_machines=10, interarrival=8.0, seed=3)),
+    ("prod_tetris", "production", 6, "tez+tetris",
+     dict(n_machines=10, interarrival=6.0, seed=5)),
+    ("tpcds_drf", "tpcds", 6, "tez+drf",
+     dict(n_machines=8, interarrival=10.0, seed=21, n_groups=2)),
+    ("prod_churn", "production", 5, "dagps",
+     dict(n_machines=10, interarrival=5.0, seed=9, failure_rate=1 / 150.0,
+          repair_time=60.0, straggle_prob=0.08, straggle_factor=(4.0, 8.0))),
+])
+def test_golden_bit_identical(name, bench, n, sch, kw):
+    """The vectorized online path reproduces pre-refactor outputs exactly.
+
+    tests/data/golden_sim.json holds full-precision (repr) JCT / makespan /
+    Jain values captured from the object-list simulator before the SoA
+    task-pool refactor; any drift in matching decisions, event ordering, or
+    rng consumption shows up here as a bit-level mismatch.
+    """
+    golden = json.load(open(GOLDEN))[name]
+    dags = make_workload(bench, n, seed=kw["seed"])
+    res = run_workload(dags, sch, **kw)
+    assert {str(j.job_id): repr(j.jct) for j in res.jobs} == golden["jcts"]
+    assert repr(res.makespan) == golden["makespan"]
+    assert repr(res.jain_index(60.0, {0: 1.0, 1: 1.0})) == golden["jain_60"]
+    assert res.speculative_launches == golden["spec"]
+    assert res.failed_tasks_requeued == golden["requeued"]
+
+
+def test_profile_phase_times():
+    dags = make_workload("tpch", 3, seed=2)
+    res = run_workload(dags, "dagps", n_machines=8, interarrival=5.0, seed=2,
+                       profile=True)
+    pt = res.phase_times
+    assert pt is not None
+    assert set(pt) == {"build", "match", "event", "total"}
+    assert pt["total"] >= pt["build"] + pt["match"] - 1e-6
+    assert all(v >= 0.0 for v in pt.values())
+    # profiling must not perturb outputs
+    plain = run_workload(dags, "dagps", n_machines=8, interarrival=5.0, seed=2)
+    assert plain.phase_times is None
+    np.testing.assert_array_equal(plain.jcts(), res.jcts())
+
+
+def test_zero_task_job_does_not_hang_failure_loop():
+    """A zero-task DAG is born complete: it must not keep the failure
+    process rescheduling forever (regression for the work-remaining
+    counters that replaced the per-event job scan)."""
+    from repro.core.dag import DAG
+
+    empty = DAG(duration=np.empty(0), demand=np.empty((0, 4)),
+                stage_of=np.empty(0, int), parents=[])
+    res = run_workload([empty], "tez", n_machines=4, interarrival=1.0,
+                       seed=0, failure_rate=0.5, repair_time=5.0)
+    assert res.jobs == [] and res.makespan == 0.0
+    # mixed with a real job everything still completes
+    dags = [empty] + make_workload("tpch", 2, seed=4)
+    res = run_workload(dags, "tez", n_machines=6, interarrival=1.0, seed=4,
+                       failure_rate=1 / 50.0, repair_time=10.0)
+    assert len(res.jobs) == 2
+
+
+def test_no_restart_of_done_tasks_under_churn(monkeypatch):
+    """A task requeued by a machine failure whose speculative copy then
+    finishes must leave the pool's cached exposure — the matcher may never
+    start a task that is already done (regression for a stale-exposure bug
+    in the incremental TaskPool dirty marking)."""
+    from repro.sim import cluster as C
+
+    orig = C._Job.task_started
+
+    def checked(self, t):
+        assert t not in self.done, f"done task {t} restarted"
+        orig(self, t)
+
+    monkeypatch.setattr(C._Job, "task_started", checked)
+    dags = make_workload("production", 4, seed=13)
+    # seeds 3/12/13/20 deterministically hit the failure->speculative-finish
+    # race under these churn parameters (verified against the buggy variant)
+    for seed in (3, 12, 13, 20):
+        res = run_workload(dags, "tez+tetris", n_machines=6, interarrival=3.0,
+                           seed=seed, failure_rate=1 / 10.0, repair_time=8.0,
+                           straggle_prob=0.5, straggle_factor=(5.0, 12.0),
+                           speculate=True, spec_threshold=1.1)
+        assert len(res.jobs) == 4
 
 
 def test_workload_generators_valid():
