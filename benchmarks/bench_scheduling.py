@@ -36,10 +36,40 @@ def _imp(base: np.ndarray, new: np.ndarray, q: float) -> float:
     return float(np.percentile(gaps, q) * 100)
 
 
+def _memo_counters() -> dict[str, int]:
+    from repro.core.memo import counters_snapshot
+
+    return counters_snapshot()
+
+
+def _emit_memo_rows(prefix: str, before: dict[str, int]) -> None:
+    """Construction-memo accounting rows for one bench group.
+
+    Reports the offline builder's placements-evaluated (live backend
+    searches) vs placements-memoized (cross-candidate memo hits) since
+    ``before``, plus the derived hit rate — so the bench JSON attributes
+    construction speedups to the memo, not just to the wall clock.
+    us_per_call is 0: these are counter rows, not timings (the CI
+    regression gate keys on s*_ timing rows).
+    """
+    after = _memo_counters()
+    ev = after["places_evaluated"] - before["places_evaluated"]
+    hit = after["places_memoized"] - before["places_memoized"]
+    emit(f"{prefix}_placements_evaluated", 0.0, ev)
+    emit(f"{prefix}_placements_memoized", 0.0, hit)
+    emit(f"{prefix}_memo_hit_rate", 0.0, round(hit / max(ev + hit, 1), 3))
+    emit(f"{prefix}_passes_replayed", 0.0,
+         after["passes_replayed"] - before["passes_replayed"])
+    emit(f"{prefix}_variants_pruned", 0.0,
+         (after["variants_bound_skipped"] - before["variants_bound_skipped"])
+         + (after["candidates_lb_skipped"] - before["candidates_lb_skipped"]))
+
+
 def bench_jct() -> None:
     """Fig. 10: per-benchmark JCT improvement of DAGPS over Tez."""
     from benchmarks import common
 
+    memo_before = _memo_counters()
     for bench in ("tpch", "tpcds", "bigbench", "ehive", "production"):
         dags = make_workload(bench, n_jobs(12), seed=42)
         t0 = time.perf_counter()
@@ -56,10 +86,12 @@ def bench_jct() -> None:
         if common.PROFILE:
             for s in ("tez", "dagps"):
                 emit_phases(f"s1_jct_{bench}_{s}", rs[s].phase_times)
+    _emit_memo_rows("s1_jct", memo_before)
 
 
 def bench_makespan() -> None:
     """Table 3: makespan; all jobs arrive at t~0."""
+    memo_before = _memo_counters()
     for bench in ("tpcds", "tpch"):
         dags = make_workload(bench, n_jobs(16), seed=7)
         t0 = time.perf_counter()
@@ -71,6 +103,7 @@ def bench_makespan() -> None:
         for s in ("tez+cp", "tez+tetris", "dagps"):
             gain = 100 * (1 - out[s] / out["tez"])
             emit(f"table3_makespan_{bench}_{s}", dt, round(gain, 1))
+    _emit_memo_rows("s2_makespan", memo_before)
 
 
 def bench_fairness() -> None:
@@ -218,11 +251,13 @@ def bench_construction() -> None:
                 # buckets, so the timed row measures placement, not XLA
                 # compilation (ROADMAP follow-up)
                 build_schedule(dag, 8, backend=be)
+            memo_before = _memo_counters()
             t0 = time.perf_counter()
             build_schedule(dag, 8, backend=be)
             times[be] = time.perf_counter() - t0
             emit(f"s7_construction_{label}_n{dag.n}_{be}",
                  times[be] * 1e6, round(times[be], 3))
+            _emit_memo_rows(f"s7_construction_{label}_{be}", memo_before)
         # legacy row: the default backend's wall time under the old name
         emit(f"s7_construction_{label}_n{dag.n}",
              times["batched"] * 1e6, round(times["batched"], 3))

@@ -1,0 +1,52 @@
+"""Coverage gate: fail CI when src/repro/core line coverage drops.
+
+Usage:
+    python -m benchmarks.check_coverage coverage.json benchmarks/coverage_floor.json
+
+``coverage.json`` is the output of ``coverage json`` after running tier-1
+under ``coverage run``.  The floor file commits the minimum acceptable
+line-coverage percentage for the scheduling core (the subsystem the
+parity/property harness of this PR exists to protect).  Ratchet the floor
+upward from the coverage artifact of a green run; never lower it to make
+CI pass — shrink the diff instead.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def core_line_coverage(cov: dict, prefix: str) -> tuple[float, int, int]:
+    covered = total = 0
+    for path, data in cov.get("files", {}).items():
+        norm = path.replace("\\", "/")
+        if prefix not in norm:
+            continue
+        s = data["summary"]
+        covered += s["covered_lines"]
+        total += s["covered_lines"] + s["missing_lines"]
+    if total == 0:
+        raise SystemExit(f"no files matching {prefix!r} in coverage data")
+    return 100.0 * covered / total, covered, total
+
+
+def main() -> int:
+    cov_path, floor_path = sys.argv[1], sys.argv[2]
+    with open(cov_path) as f:
+        cov = json.load(f)
+    with open(floor_path) as f:
+        floors = json.load(f)
+    failed = False
+    for prefix, floor in floors.items():
+        pct, covered, total = core_line_coverage(cov, prefix)
+        status = "OK " if pct >= floor else "FAIL"
+        print(f"{status} {prefix}: {pct:.2f}% line coverage "
+              f"({covered}/{total} lines, floor {floor}%)")
+        if pct < floor:
+            failed = True
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -4,6 +4,7 @@ from .space import Space, SpaceSnapshot
 from .engine import (BatchedBackend, JitBackend, PlacementBackend,
                      ReferenceBackend, available_backends, get_backend)
 from .builder import Schedule, build_schedule, partition_totally_ordered
+from .memo import ConstructionMemo, counters_snapshot, reset_counters
 from .bounds import all_bounds, cp_length, mod_cp, new_lb, t_work
 from .baselines import (
     bfs_order, cp_order, cg_order, random_order, run_baseline,

@@ -21,6 +21,21 @@ variant, never a full grid clone), and the per-task fit queries go through
 a pluggable placement backend (core/engine/): "reference" rescans the grid
 per task, "batched" (default) answers whole ready-sets with one
 (n_tasks, m, W) feasibility scan, "jit" runs that scan via jax.jit.
+
+Cross-candidate reductions (all outcome-exact; parity suite locks them):
+
+  * the order variants around a placed T run as a shared-prefix tree
+    (``_try_orders``): each common (ids-prefix, direction) segment is
+    placed once and branched via the Space undo log;
+  * placement work is memoized across variants at pass and single-slot
+    granularity (core/memo.py) — a segment or query re-reached on another
+    branch replays its recorded outcome instead of searching;
+  * candidate evaluation stops at a sound tick lower bound, and order
+    subtrees whose dependency-chain bound already reaches the incumbent
+    are skipped before any placement.
+
+Disable the memo with ``build_schedule(..., memoize=False)`` or
+``REPRO_BUILDER_MEMO=0`` (the parity tests diff both modes).
 """
 
 from __future__ import annotations
@@ -28,6 +43,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import math
+import os
 from typing import Iterable
 
 import numpy as np
@@ -35,7 +51,17 @@ import numpy as np
 from .dag import DAG
 from .engine import FORWARD, BACKWARD, PeerTask, PlacementBackend, get_backend
 from .engine.base import ceil32
+from .memo import COUNTERS, ConstructionMemo
 from .space import Space
+
+#: env var consulted when build_schedule is not given an explicit memoize
+MEMO_ENV = "REPRO_BUILDER_MEMO"
+
+
+def _memo_enabled(memoize: bool | None) -> bool:
+    if memoize is not None:
+        return memoize
+    return os.environ.get(MEMO_ENV, "1") != "0"
 
 
 @dataclasses.dataclass
@@ -75,17 +101,29 @@ class Schedule:
 
 class _Placer:
     def __init__(self, dag: DAG, space: Space, dur_ticks: np.ndarray,
-                 backend: PlacementBackend):
+                 backend: PlacementBackend,
+                 memo: ConstructionMemo | None = None):
         self.dag = dag
         self.space = space
         self.k = dur_ticks
         self.backend = backend
+        self.memo = memo
         # structural tie-break: among equal durations, place tasks that
         # enable the most downstream work first (resolves Fig. 17's "red"
         # tasks, which are identical to their siblings except structurally).
         self.n_desc = np.array([len(dag.children[i]) for i in range(dag.n)])
         self.n_par = np.array([len(dag.parents[i]) for i in range(dag.n)])
         self.demand32 = ceil32(dag.demand)   # for float32-comparing sessions
+        # demand rows as bytes, precomputed once: hint keys and memo keys
+        # need them on every single placement
+        self.vb64 = [row.tobytes() for row in dag.demand]
+        self.vb32 = [row.tobytes() for row in self.demand32]
+        # flat edge arrays: pending counts per pass become one bincount
+        self.edge_child = np.concatenate(
+            [np.full(len(p), i) for i, p in enumerate(dag.parents)]
+        ).astype(np.int64) if dag.n else np.empty(0, np.int64)
+        self.edge_parent = (np.concatenate(dag.parents).astype(np.int64)
+                            if dag.n and len(self.edge_child) else np.empty(0, np.int64))
         self.placed_start = np.zeros(dag.n, dtype=np.int64)
         self.placed_end = np.zeros(dag.n, dtype=np.int64)
         self.machine = np.full(dag.n, -1, dtype=np.int64)
@@ -95,8 +133,11 @@ class _Placer:
         """Cheap variant copy: own task arrays, SHARED space (snapshot it)."""
         p = _Placer.__new__(_Placer)
         p.dag, p.k, p.backend = self.dag, self.k, self.backend
+        p.memo = self.memo
         p.n_desc, p.n_par = self.n_desc, self.n_par
         p.demand32 = self.demand32
+        p.vb64, p.vb32 = self.vb64, self.vb32
+        p.edge_child, p.edge_parent = self.edge_child, self.edge_parent
         p.space = self.space
         p.placed_start = self.placed_start.copy()
         p.placed_end = self.placed_end.copy()
@@ -112,12 +153,24 @@ class _Placer:
         self.placed_start, self.placed_end, self.machine, self.is_placed = (
             saved[0].copy(), saved[1].copy(), saved[2].copy(), saved[3].copy())
 
-    def _commit(self, t: int, m: int, t0: int) -> None:
-        self.space.commit(t, m, t0, self.k[t], self.dag.demand[t])
+    def _commit(self, t: int, m: int, t0: int, check: bool = True) -> None:
+        self.space.commit(t, m, t0, self.k[t], self.dag.demand[t], check)
         self.placed_start[t] = t0
         self.placed_end[t] = t0 + self.k[t]
         self.machine[t] = m
         self.is_placed[t] = True
+
+    def _replay_commit(self, t: int, m: int, t0: int) -> None:
+        """Re-commit a memoized placement: grow the grid to cover the slot,
+        skip the over-commit guard (the original commit passed it against
+        bit-identical window content)."""
+        sp = self.space
+        k = int(self.k[t])
+        while t0 < sp.grid_start:
+            sp._grow_front()
+        while t0 + k > sp.grid_end:
+            sp._grow_back()
+        self._commit(t, m, t0, check=False)
 
     def _anchor(self, t: int, forward: bool) -> int:
         """Ready tick (forward) / deadline tick (backward) for one task.
@@ -125,26 +178,60 @@ class _Placer:
         Unplaced parents *within the subset* gate readiness; parents outside
         the subset constrain the start only if already placed (see §4.3
         discussion of inter-subset dependencies).  Mirrored for backward.
+
+        Scalar python loop on purpose: adjacency rows are short and this
+        runs twice per commit, where numpy fancy-indexing overhead on
+        10-element arrays dominates the actual work.
         """
-        dag, sp = self.dag, self.space
+        sp = self.space
+        placed = self.is_placed
         if forward:
-            par = dag.parents[t]
-            pl = par[self.is_placed[par]] if len(par) else par
-            if len(pl):
-                return int(self.placed_end[pl].max())
+            best = None     # logical ticks may be negative: no -1 sentinel
+            pe = self.placed_end
+            for p in self.dag.parents[t]:
+                if placed[p] and (best is None or pe[p] > best):
+                    best = pe[p]
+            if best is not None:
+                return int(best)
             return sp._min_start if sp._min_start is not None else 0
-        ch = dag.children[t]
-        pl = ch[self.is_placed[ch]] if len(ch) else ch
-        if len(pl):
-            return int(self.placed_start[pl].min())
+        best = None
+        ps = self.placed_start
+        for c in self.dag.children[t]:
+            if placed[c] and (best is None or ps[c] < best):
+                best = ps[c]
+        if best is not None:
+            return int(best)
         if sp._max_end is not None:
             # unanchored task: pack against the occupied region instead of
             # drifting to the far end of the grid.
             return int(sp._max_end)
         return sp.grid_end  # logical end of the empty grid
 
+    def ready_peers(self, ids: np.ndarray, direction: str,
+                    cap: int = 24) -> list[PeerTask]:
+        """Initial ready set of a pass as PeerTask prefetch hints.
+
+        Used by the multi-variant node prescan (``PlacementBackend.
+        sessions``): anchors are the same estimates ``place_pass`` itself
+        announces, so prescanned bitmaps are hints only and can never
+        change a placement result.
+        """
+        dag = self.dag
+        forward = direction == FORWARD
+        if len(ids) == 0:
+            return []
+        in_subset = np.zeros(dag.n, dtype=bool)
+        in_subset[ids] = True
+        adj_gate = dag.parents if forward else dag.children
+        ready = [int(i) for i in ids if not in_subset[adj_gate[i]].any()]
+        ready.sort(key=lambda i: (-dag.duration[i],
+                                  -(self.n_desc if forward else self.n_par)[i], i))
+        demand = self.demand32
+        return [PeerTask(i, self._anchor(i, forward), demand[i], int(self.k[i]))
+                for i in ready[:cap]]
+
     def place_pass(self, ids: np.ndarray, direction: str,
-                   limit: int | None = None) -> bool:
+                   limit: int | None = None, sess=None) -> bool:
         """PlaceTasksF / PlaceTasksB: dependency order within the subset,
         longest task first, each task at its extreme feasible slot.
 
@@ -154,14 +241,39 @@ class _Placer:
         derived per-placement ``cap`` lets a session stop searching early
         once every admissible slot is provably past the bound (see
         PlacementSession.place).
+
+        ``sess`` injects a pre-seeded session (multi-variant node prescan);
+        the memo layers consult core/memo.py before touching the session —
+        a whole-segment hit replays the recorded plan with zero searches,
+        a single-slot hit skips just that query.
         """
         dag, sp = self.dag, self.space
+        memo = self.memo
+        pass_key = None
+        if memo is not None:
+            pass_key = memo.pass_key(ids, direction)
+            hit = memo.pass_get(pass_key)
+            if hit is not None:
+                span, plan = hit
+                COUNTERS["passes_replayed"] += 1
+                if limit is not None and span >= limit:
+                    return False   # the live pass would abort mid-way
+                for t, m, t0 in plan:   # replay is commit-only: no searches
+                    self._replay_commit(t, m, t0)
+                return True
+        COUNTERS["passes_run"] += 1
+        n_before = len(sp.placements)
         forward = direction == FORWARD
         in_subset = np.zeros(dag.n, dtype=bool)
         in_subset[ids] = True
-        adj_gate = dag.parents if forward else dag.children
         adj_open = dag.children if forward else dag.parents
-        pending = np.array([int(in_subset[adj_gate[i]].sum()) for i in range(dag.n)])
+        # pending in-subset gate-neighbors per task, as one bincount over
+        # the flat edge list (parents gate forward passes, children gate
+        # backward ones)
+        ev, ew = ((self.edge_parent, self.edge_child) if forward
+                  else (self.edge_child, self.edge_parent))
+        pending = np.bincount(ew[in_subset[ev]], minlength=dag.n) \
+            if len(ev) else np.zeros(dag.n, dtype=np.int64)
         tie = self.n_desc if forward else self.n_par
         dur = dag.duration
         # min-heap pops in the same (-duration, -tie, id) order the sorted
@@ -169,8 +281,12 @@ class _Placer:
         heap = [(-dur[i], -tie[i], int(i)) for i in ids if pending[i] == 0]
         heapq.heapify(heap)
         remaining = len(ids)
-        sess = self.backend.session(sp, direction)
-        demand = self.demand32 if sess.wants_f32 else dag.demand
+        if sess is None or sess.direction != direction:
+            sess = self.backend.session(sp, direction)
+        if sess.wants_f32:
+            demand, vbytes = self.demand32, self.vb32
+        else:
+            demand, vbytes = dag.demand, self.vb64
         peers_fn = None
         est: dict[int, int] = {}
         if sess.wants_peers:
@@ -186,7 +302,6 @@ class _Placer:
                 return False  # cycle — cannot happen on a valid DAG
             t = heapq.heappop(heap)[2]
             anchor = self._anchor(t, forward)
-            key = (int(dag.stage_of[t]), float(anchor), dag.demand[t].tobytes())
             k = int(self.k[t])
             cap = None
             if limit is not None:
@@ -195,10 +310,20 @@ class _Placer:
                     cap = limit + sp._min_start - k
                 elif not forward and sp._max_end is not None:
                     cap = sp._max_end - limit
-            m, t0 = sess.place(t, demand[t], k, anchor, key, peers_fn, cap)
-            if m < 0:
-                return False  # session proved the variant cannot win
-            self._commit(t, m, t0)
+            vb = vbytes[t]
+            hit = memo.place_get(direction, vb, k, anchor) if memo is not None else None
+            if hit is not None:
+                m, t0 = hit
+                self._replay_commit(t, m, t0)
+            else:
+                COUNTERS["places_evaluated"] += 1
+                key = (int(dag.stage_of[t]), float(anchor), self.vb64[t])
+                m, t0 = sess.place(t, demand[t], k, anchor, key, peers_fn, cap)
+                if memo is not None and m >= 0:
+                    memo.place_put(direction, vb, k, anchor, forward, m, t0)
+                if m < 0:
+                    return False  # session proved the variant cannot win
+                self._commit(t, m, t0)
             if limit is not None and sp.makespan_ticks >= limit:
                 return False  # span is monotone: this variant cannot win
             remaining -= 1
@@ -210,41 +335,52 @@ class _Placer:
                         if sess.wants_peers:
                             est[c] = self._anchor(c, forward)
                         heapq.heappush(heap, (-dur[c], -tie[c], c))
+        if memo is not None:
+            plan = [(p.task, p.machine, p.start)
+                    for p in sp.placements[n_before:]]
+            memo.pass_put(pass_key, sp.makespan_ticks, plan)
         return True
 
     # kept as thin aliases for readability at call sites / tests
-    def place_forward(self, ids: np.ndarray, limit: int | None = None) -> bool:
-        return self.place_pass(ids, FORWARD, limit)
+    def place_forward(self, ids: np.ndarray, limit: int | None = None,
+                      sess=None) -> bool:
+        return self.place_pass(ids, FORWARD, limit, sess)
 
-    def place_backward(self, ids: np.ndarray, limit: int | None = None) -> bool:
-        return self.place_pass(ids, BACKWARD, limit)
+    def place_backward(self, ids: np.ndarray, limit: int | None = None,
+                       sess=None) -> bool:
+        return self.place_pass(ids, BACKWARD, limit, sess)
 
-    def place_best(self, ids: np.ndarray, limit: int | None = None) -> bool:
+    def place_best(self, ids: np.ndarray, limit: int | None = None,
+                   sess=None) -> bool:
         """PlaceTasks: min(forward, backward) by resulting span (Fig. 7 l.13).
 
         Tries both directions against the shared space (rolling back in
         between) and replays the winner's commits — no grid clone.  An
         aborted direction's true span provably exceeds ``limit``, so a
-        completed direction always beats it and pruning stays exact.
+        completed direction always beats it and pruning stays exact.  The
+        backward attempt runs under min(limit, forward span): forward wins
+        ties, so backward only matters when strictly more compact.
         """
         if len(ids) == 0:
             return True
         sp = self.space
         snap = sp.snapshot()
         saved = self._save()
-        okf = self.place_forward(ids, limit)
+        okf = self.place_forward(ids, limit, sess)
         span_f = sp.makespan_ticks
         plan_f = [(p.task, p.machine, p.start)
                   for p in sp.placements[snap.n_placed:]] if okf else []
         # keep any growth: the forward plan may be replayed into it below
         sp.restore(snap, keep_extent=True)
         self._load(saved)
-        okb = self.place_backward(ids, limit)
+        blim = limit if not okf else \
+            (span_f if limit is None else min(limit, span_f))
+        okb = self.place_backward(ids, blim)
         if okf and (not okb or span_f <= sp.makespan_ticks):
             sp.restore(snap, keep_extent=True)
             self._load(saved)
             for t, m, t0 in plan_f:  # replay is commit-only: no searches
-                self._commit(t, m, t0)
+                self._commit(t, m, t0, check=False)
             return True
         return okb
 
@@ -338,25 +474,130 @@ def build_schedule(
     max_candidates: int = 24,
     use_partitions: bool = True,
     backend: str | PlacementBackend | None = None,
+    memoize: bool | None = None,
 ) -> Schedule:
     """Construct DAGPS's preferred schedule for one DAG on m machines.
 
     `backend` selects the placement engine ("reference" | "batched" |
     "jit"); None resolves REPRO_PLACEMENT_BACKEND, defaulting to "batched".
-    All backends produce tick-identical schedules.
+    All backends produce tick-identical schedules.  `memoize` toggles the
+    cross-candidate construction memo (None resolves REPRO_BUILDER_MEMO,
+    default on); memoized and plain builds are bit-identical.
     """
     if dag.n == 0:
         return Schedule(dag, np.empty(0, np.int64), np.empty(0), np.empty(0, np.int64), 0.0, 1.0)
     be = get_backend(backend)
+    memoize = _memo_enabled(memoize)
     if use_partitions:
         parts = partition_totally_ordered(dag)
         if len(parts) > 1:
             return _concat_partition_schedules(dag, parts, m, ticks, n_long,
-                                               n_frag, max_candidates, be)
-    return _build_one(dag, m, ticks, n_long, n_frag, max_candidates, be)
+                                               n_frag, max_candidates, be,
+                                               memoize)
+    return _build_one(dag, m, ticks, n_long, n_frag, max_candidates, be,
+                      memoize)
 
 
-def _build_one(dag, m, ticks, n_long, n_frag, max_candidates, backend) -> Schedule:
+def _span_lb_ticks(dag: DAG, m: int, dur_ticks: np.ndarray) -> int:
+    """Sound tick lower bound on ANY schedule the builder can construct.
+
+    Critical path in *rounded* ticks (chain tasks occupy disjoint tick
+    ranges in the space) and per-dim total work over m unit-capacity
+    machines.  Once the incumbent reaches this bound no later candidate
+    can be strictly more compact, so the search may stop (``consider``
+    replaces on strict < only, which also keeps tie-breaking exact).
+    """
+    n = dag.n
+    finish = np.zeros(n, dtype=np.int64)
+    for i in range(n):   # DAG guarantees topological index order
+        ps = dag.parents[i]
+        finish[i] = (finish[ps].max() if len(ps) else 0) + dur_ticks[i]
+    cp = int(finish.max()) if n else 0
+    work = (dur_ticks[:, None] * dag.demand).sum(axis=0)
+    wb = int(np.ceil(work.max() / max(m, 1) - 1e-12)) if n else 0
+    return max(cp, wb)
+
+
+_INF = 1 << 60
+
+
+def _span_bound(pl: _Placer) -> int:
+    """Sound LB on the final span of any COMPLETED variant continuing
+    from ``pl``'s partial placement.
+
+    Every completed variant places all remaining tasks with dependencies
+    holding as tick inequalities (parent end <= child start — the §4.3
+    dead-end-free invariant), so chains rooted at already-placed tasks
+    bound the final extent: a placed parent's end plus the longest k-chain
+    below it must fit under max_end', and min_start' can only decrease.
+    Unrooted chains bound the span directly.  If the bound reaches the
+    incumbent, the whole subtree of order variants under this prefix is
+    skipped — outcome-exact, since a completed variant's span would be
+    >= the incumbent and ``consider`` replaces on strict < only (a live
+    evaluation would have aborted on the monotone-span limit instead).
+    """
+    dag, sp = pl.dag, pl.space
+    placed = pl.is_placed
+    span_cur = sp.makespan_ticks
+    if placed.all():
+        return span_cur
+    k = pl.k
+    pe, ps_ = pl.placed_end, pl.placed_start
+    parents, children = dag.parents, dag.children
+    n = dag.n
+    # forward sweep: finish-time LBs; rooted[i] iff the chain passes
+    # through a placed task (only rooted chains bound absolute extents)
+    fin = np.zeros(n, dtype=np.int64)
+    rooted = np.zeros(n, dtype=bool)
+    for i in range(n):
+        if placed[i]:
+            continue
+        b, r = 0, False
+        for p in parents[i]:
+            v = pe[p] if placed[p] else fin[p]
+            if v > b:
+                b, r = v, bool(placed[p] or rooted[p])
+            elif v == b and (placed[p] or rooted[p]):
+                r = True
+        fin[i] = b + k[i]
+        rooted[i] = r
+    top_rooted = 0
+    pure = 0
+    for i in range(n):
+        if placed[i]:
+            continue
+        if rooted[i]:
+            if fin[i] > top_rooted:
+                top_rooted = fin[i]
+        elif fin[i] > pure:
+            pure = fin[i]
+    bound = max(span_cur, pure)
+    mn, mx = sp._min_start, sp._max_end
+    if top_rooted and mn is not None:
+        bound = max(bound, top_rooted - mn)
+    # backward sweep: start-time UBs rooted at placed children
+    if mx is not None:
+        start_ub = np.full(n, _INF, dtype=np.int64)
+        low = _INF
+        for i in range(n - 1, -1, -1):
+            if placed[i]:
+                continue
+            b = _INF
+            for c in children[i]:
+                v = ps_[c] if placed[c] else start_ub[c]
+                if v < b:
+                    b = v
+            if b < _INF:
+                start_ub[i] = b - k[i]
+                if start_ub[i] < low:
+                    low = start_ub[i]
+        if low < _INF:
+            bound = max(bound, mx - low)
+    return bound
+
+
+def _build_one(dag, m, ticks, n_long, n_frag, max_candidates, backend,
+               memoize=True) -> Schedule:
     from .bounds import cp_length, t_work  # local import, no cycle at module load
 
     horizon = max(cp_length(dag), t_work(dag, m))
@@ -369,83 +610,157 @@ def _build_one(dag, m, ticks, n_long, n_frag, max_candidates, backend) -> Schedu
     # direction) evaluation runs against a snapshot and is rolled back,
     # so variant cost is O(cells written), never O(grid) cloning.
     space = Space(m, dag.d, grid, tick)
+    memo = ConstructionMemo(space) if memoize else None
+    lb = _span_lb_ticks(dag, m, dur_ticks)
     best_span: int | None = None
     best_state: tuple[np.ndarray, np.ndarray] | None = None
     best_mask: np.ndarray | None = None
-    for t_mask in candidate_troublesome(dag, m, n_long, n_frag, max_candidates):
+    # adaptive gate for the chain-bound pruner: on work-dominated DAGs the
+    # bound never reaches the incumbent, so after a few dry candidates the
+    # O(n + e) sweeps stop (a perf-only choice — skipping a *computation*
+    # of an exact pruner cannot change the search outcome)
+    bound_gate = {"tries": 0, "hits": 0}
+    cands = candidate_troublesome(dag, m, n_long, n_frag, max_candidates)
+    for ci, t_mask in enumerate(cands):
+        if best_span is not None and best_span <= lb:
+            # the incumbent is provably unbeatable (strict-< consider)
+            COUNTERS["candidates_lb_skipped"] += len(cands) - ci
+            break
         t_mask, o_mask, p_mask, c_mask = dag.split_subsets(t_mask)
         t_ids, o_ids = np.nonzero(t_mask)[0], np.nonzero(o_mask)[0]
         p_ids, c_ids = np.nonzero(p_mask)[0], np.nonzero(c_mask)[0]
 
         snap_cand = space.snapshot()
-        base = _Placer(dag, space, dur_ticks, backend)
+        base = _Placer(dag, space, dur_ticks, backend, memo)
         if base.place_best(t_ids, best_span):  # trouble goes first (Fig. 5 l.7)
             best_span, best_state, best_mask = _try_orders(
                 space, base, o_ids, p_ids, c_ids, t_mask,
-                best_span, best_state, best_mask)
+                best_span, best_state, best_mask, lb, bound_gate)
         space.restore(snap_cand)
     assert best_state is not None
     return _to_schedule(dag, best_state[0], best_state[1], tick, best_mask,
                         label="dagps")
 
 
-def _try_orders(space, base, o_ids, p_ids, c_ids, t_mask,
-                best_span, best_state, best_mask):
-    """TrySubsetOrders (Fig. 7 l.19-23) around a placed T.
+#: segment ops: how one prefix-tree edge places its id set
+_SEG_BEST, _SEG_FWD, _SEG_BWD = "best", "fwd", "bwd"
 
-    Exact-outcome reductions on the original four orders:
-      * T-OPC and T-OCP share the identical place_best(O) prefix (same
-        pre-state => same placements), computed once; when P or C is empty
-        their tails coincide and only one runs.
-      * With P and C both empty every order degenerates to placing O, and
-        place_best(O) already covers both directions — COP/POC are skipped.
-      * Every pass prunes against the incumbent best span (see place_pass).
+
+def _variant_tree(o_ids, p_ids, c_ids):
+    """The four dead-end-free orders (Fig. 7 l.19-23) as a shared-prefix
+    tree of (op, ids) placement segments.
+
+    Exact-outcome normalizations before the trie is built:
+      * empty segments are dropped (placing nothing is the identity);
+      * sequences that coincide after dropping are deduplicated — e.g.
+        with P empty, T-OPC and T-OCP are the same variant;
+      * with P and C both empty every order degenerates to placing O, and
+        place_best(O) already covers both directions, so one sequence
+        remains.
+    The trie preserves the paper's enumeration order, which ``consider``'s
+    strict-< tie-breaking depends on.
     """
-    def consider(pl, ok):
-        nonlocal best_span, best_state, best_mask
-        if ok:
-            span = space.makespan_ticks
-            if best_span is None or span < best_span:
-                best_span = span
-                best_state = (pl.placed_start.copy(), pl.machine.copy())
-                best_mask = t_mask
-    snap_t = space.snapshot()
-    pl_o = base.branch()
-    if pl_o.place_best(o_ids, best_span):        # shared T-O... prefix
-        tails = (_tail_pc,) if (len(p_ids) == 0 or len(c_ids) == 0) \
-            else (_tail_pc, _tail_cp)
-        for tail in tails:
-            snap_o = space.snapshot()
-            pl = pl_o.branch()
-            consider(pl, tail(pl, p_ids, c_ids, best_span))
-            space.restore(snap_o)
-    space.restore(snap_t)
+    segs = {
+        "O": (_SEG_BEST, o_ids),       # either direction (Lemma 4)
+        "P": (_SEG_BWD, p_ids),        # parents only backward
+        "C": (_SEG_FWD, c_ids),        # children only forward
+        "Ob": (_SEG_BWD, o_ids),
+        "Of": (_SEG_FWD, o_ids),
+    }
+    orders = [
+        ["O", "P", "C"],               # T-OPC (l.20)
+        ["O", "C", "P"],               # T-OCP (l.21)
+        ["C", "Ob", "P"],              # T-COP (l.22)
+        ["P", "Of", "C"],              # T-POC (l.23)
+    ]
     if len(p_ids) == 0 and len(c_ids) == 0:
-        return best_span, best_state, best_mask
-    for order_fn in (_order_cop, _order_poc):
-        snap_order = space.snapshot()
-        pl = base.branch()
-        consider(pl, order_fn(pl, o_ids, p_ids, c_ids, best_span))
-        space.restore(snap_order)
+        orders = [["O"]]
+    seen: list[tuple] = []
+    tree: dict = {}
+    for order in orders:
+        seq = tuple(s for s in order if len(segs[s][1]))
+        if seq in seen:
+            continue
+        seen.append(seq)
+        node = tree
+        for s in seq:
+            node = node.setdefault(s, {})
+    return segs, tree
+
+
+def _try_orders(space, base, o_ids, p_ids, c_ids, t_mask,
+                best_span, best_state, best_mask, lb=None, bound_gate=None):
+    """TrySubsetOrders around a placed T, as a shared-prefix-tree DFS.
+
+    Each trie edge places one (ids, direction) segment; shared prefixes
+    (e.g. the place_best(O) prefix of T-OPC/T-OCP) are placed once and
+    branched through the Space undo log.  At every branch node:
+
+      * the subtree is skipped when the dependency-chain bound of the
+        prefix already reaches the incumbent (``_span_bound``) or the
+        incumbent sits at the tick lower bound — both outcome-exact;
+      * sibling segments' initial feasibility scans are stacked into one
+        multi-variant backend pass (``PlacementBackend.sessions``).
+    """
+    def consider(pl):
+        nonlocal best_span, best_state, best_mask
+        span = space.makespan_ticks
+        if best_span is None or span < best_span:
+            best_span = span
+            best_state = (pl.placed_start.copy(), pl.machine.copy())
+            best_mask = t_mask
+
+    segs, tree = _variant_tree(o_ids, p_ids, c_ids)
+
+    def descend(pl, node):
+        nonlocal best_span
+        if not node:
+            consider(pl)
+            return
+        bound = None
+        kids = list(node.items())
+        sessions = [None] * len(kids)
+        if len(kids) > 1 and pl.backend.wants_prescan:
+            # one stacked (n_variants, n_tasks, m, W) prescan for all
+            # sibling first-segments off this node's shared grid state
+            specs = []
+            for name, _child in kids:
+                op, ids = segs[name]
+                d = BACKWARD if op == _SEG_BWD else FORWARD
+                specs.append((d, pl.ready_peers(ids, d)))
+            sessions = pl.backend.sessions(space, specs)
+        gate_open = bound_gate is None or bound_gate["hits"] > 0 \
+            or bound_gate["tries"] < 6
+        for j, (name, child) in enumerate(kids):
+            if best_span is not None:
+                if lb is not None and best_span <= lb:
+                    break
+                if bound is None and gate_open:
+                    bound = _span_bound(pl)
+                    if bound_gate is not None:
+                        bound_gate["tries"] += 1
+                if bound is not None and bound >= best_span:
+                    if bound_gate is not None:
+                        bound_gate["hits"] += 1
+                    # every remaining sibling subtree is abandoned (same
+                    # all-skipped semantics as candidates_lb_skipped)
+                    COUNTERS["variants_bound_skipped"] += len(kids) - j
+                    break
+            op, ids = segs[name]
+            snap = space.snapshot()
+            pl2 = pl.branch()
+            if op == _SEG_BEST:
+                ok = pl2.place_best(ids, best_span, sessions[j])
+            elif op == _SEG_FWD:
+                ok = pl2.place_forward(ids, best_span, sessions[j])
+            else:
+                ok = pl2.place_backward(ids, best_span, sessions[j])
+            if ok:
+                descend(pl2, child)
+            space.restore(snap)
+
+    descend(base, tree)
     return best_span, best_state, best_mask
-
-
-def _tail_pc(pl: _Placer, p, c, lim) -> bool:        # T OPC (Fig. 7 l.20)
-    return pl.place_backward(p, lim) and pl.place_forward(c, lim)
-
-
-def _tail_cp(pl: _Placer, p, c, lim) -> bool:        # T OCP (l.21)
-    return pl.place_forward(c, lim) and pl.place_backward(p, lim)
-
-
-def _order_cop(pl: _Placer, o, p, c, lim) -> bool:   # T COP (l.22)
-    return (pl.place_forward(c, lim) and pl.place_backward(o, lim)
-            and pl.place_backward(p, lim))
-
-
-def _order_poc(pl: _Placer, o, p, c, lim) -> bool:   # T POC (l.23)
-    return (pl.place_backward(p, lim) and pl.place_forward(o, lim)
-            and pl.place_forward(c, lim))
 
 
 def _to_schedule(dag: DAG, placed_start: np.ndarray, machine: np.ndarray,
@@ -492,7 +807,8 @@ def partition_totally_ordered(dag: DAG) -> list[np.ndarray]:
 
 
 def _concat_partition_schedules(dag, parts, m, ticks, n_long, n_frag,
-                                max_candidates, backend) -> Schedule:
+                                max_candidates, backend,
+                                memoize=True) -> Schedule:
     start = np.zeros(dag.n, dtype=np.float64)
     machine = np.zeros(dag.n, dtype=np.int64)
     offset = 0.0
@@ -500,7 +816,8 @@ def _concat_partition_schedules(dag, parts, m, ticks, n_long, n_frag,
     tmask = np.zeros(dag.n, dtype=bool)
     for ids in parts:
         sub = _subdag(dag, ids)
-        sched = _build_one(sub, m, ticks, n_long, n_frag, max_candidates, backend)
+        sched = _build_one(sub, m, ticks, n_long, n_frag, max_candidates,
+                           backend, memoize)
         start[ids] = sched.start + offset
         machine[ids] = sched.machine
         if sched.trouble_mask is not None:

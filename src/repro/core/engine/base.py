@@ -127,9 +127,35 @@ class PlacementBackend(abc.ABC):
 
     name: str = "abstract"
 
+    #: whether sessions() actually consumes the per-spec peer hints — lets
+    #: callers skip building prefetch hints for backends that ignore them
+    wants_prescan: bool = False
+
     @abc.abstractmethod
     def session(self, space: "Space", direction: str) -> PlacementSession:
         ...
+
+    def sessions(
+        self,
+        space: "Space",
+        specs: Sequence[tuple[str, Sequence[PeerTask]]],
+    ) -> list[PlacementSession]:
+        """Multi-variant entry point: one session per sibling variant.
+
+        ``specs`` lists the first placement segment of each sibling branch
+        off one shared grid state as (direction, initial ready-set peers).
+        Backends MAY evaluate all siblings' feasibility scans in one
+        stacked (n_variants, n_tasks, m, W) pass and seed each returned
+        session with the results; because every sibling starts from
+        exactly the scanned grid state and capacity only decreases within
+        its pass, a node-level scan is a sound superset for each branch
+        (the same monotonicity argument as per-pass prefetch, so results
+        are tick-identical with or without the prescan).
+
+        The default is the degenerate stack: independent unseeded
+        sessions, one per spec (the reference backend's behavior).
+        """
+        return [self.session(space, d) for d, _peers in specs]
 
     @classmethod
     def available(cls) -> bool:

@@ -35,10 +35,11 @@ from ..space import runs_of_k
 from .base import (BACKWARD, FORWARD, HintKey, PeerTask, PlacementBackend,
                    PlacementSession, ceil32, register_backend)
 
-#: first window size in ticks (doubles on every extension)
-WINDOW0 = 96
+#: first window size in ticks (doubles on every extension); sized so the
+#: common case — placing near the packing frontier — resolves in one scan
+WINDOW0 = 192
 #: max ready-set peers prefetched into one scan
-MAX_BATCH = 24
+MAX_BATCH = 32
 #: durations above this skip the bitmap machinery: a long task's window is
 #: duration-dominated, so batching it multiplies large scans that a couple
 #: of chunked live probes (Space.fit_first) answer outright.  Long stages
@@ -82,13 +83,22 @@ def scan_starts(
             full = full[::-1]
         return np.ascontiguousarray(full).reshape(1, W * m)
     ok = (win[None, :, :, :] >= Vs[:, None, None, :]).all(axis=3)  # (g, m, L)
-    cz = np.zeros((g, m, L + 1), dtype=np.int32)
-    np.cumsum(ok, axis=2, out=cz[:, :, 1:])
-    ends = np.minimum(np.arange(W, dtype=np.int64)[None, :] + ks[:, None], L)
-    idx = np.broadcast_to(ends[:, None, :], (g, m, W))
-    run = np.take_along_axis(cz, idx, axis=2) - cz[:, :, :W]
-    # a run truncated by the grid edge counts < k and is correctly excluded
-    good = run == ks[:, None, None]                             # (g, m, W)
+    if (ks == ks[0]).all():
+        # stage peers usually share one duration: the per-task gather
+        # degenerates to a single slice subtraction over the cumsums
+        k0 = int(ks[0])
+        good = np.zeros((g, m, W), dtype=bool)
+        runs = runs_of_k(ok.reshape(g * m, L), k0).reshape(g, m, -1)
+        n = min(W, runs.shape[2])
+        good[:, :, :n] = runs[:, :, :n]
+    else:
+        cz = np.zeros((g, m, L + 1), dtype=np.int32)
+        np.cumsum(ok, axis=2, out=cz[:, :, 1:])
+        ends = np.minimum(np.arange(W, dtype=np.int64)[None, :] + ks[:, None], L)
+        idx = np.broadcast_to(ends[:, None, :], (g, m, W))
+        run = np.take_along_axis(cz, idx, axis=2) - cz[:, :, :W]
+        # a run truncated by the grid edge counts < k and is correctly excluded
+        good = run == ks[:, None, None]                         # (g, m, W)
     good = np.ascontiguousarray(np.swapaxes(good, 1, 2))        # (g, W, m)
     if reverse:
         good = good[:, ::-1, :]
@@ -369,6 +379,7 @@ class BatchedSession(PlacementSession):
 
 class BatchedBackend(PlacementBackend):
     name = "batched"
+    wants_prescan = True
 
     #: the feasibility-scan kernel; subclasses (jit) override this
     @staticmethod
@@ -377,6 +388,67 @@ class BatchedBackend(PlacementBackend):
 
     def session(self, space, direction: str) -> BatchedSession:
         return BatchedSession(space, direction, self)
+
+    def sessions(self, space, specs) -> list[BatchedSession]:
+        """Multi-variant entry: stack sibling variants' first feasibility
+        scans into one pass per direction over the shared node grid.
+
+        All sibling branches start from exactly this grid state, so one
+        (n_variants * n_tasks, m, W) scan is sound for every branch: a
+        branch only subtracts capacity from the scanned state, keeping
+        each bitmap a superset that the session's stale-walk settles with
+        live rechecks (same argument as per-pass peer prefetch — the
+        prescan can change cost, never results).
+        """
+        out = [self.session(space, d) for d, _peers in specs]
+        for reverse in (False, True):
+            direction = BACKWARD if reverse else FORWARD
+            batch: list[tuple[int, np.ndarray, int, int]] = []   # tid, v, k, first start
+            owners: list[list[BatchedSession]] = []
+            tids: dict[int, int] = {}
+            for sess, (d, peers) in zip(out, specs):
+                if d != direction:
+                    continue
+                for p in peers:
+                    if p.dur_ticks > LONG_K:
+                        continue
+                    if p.tid in tids:    # same task in two sibling branches
+                        owners[tids[p.tid]].append(sess)
+                        continue
+                    tids[p.tid] = len(batch)
+                    start = p.anchor - p.dur_ticks if reverse else p.anchor
+                    batch.append((p.tid, p.demand, p.dur_ticks, start))
+                    owners.append([sess])
+            if not batch:
+                continue
+            kmax = max(k for _t, _v, k, _s in batch)
+            if reverse:
+                whi = max(s for _t, _v, _k, s in batch)
+                wlo = max(whi - max(WINDOW0, 2 * kmax) + 1, space.grid_start)
+            else:
+                wlo = min(s for _t, _v, _k, s in batch)
+                whi = min(wlo + max(WINDOW0, 2 * kmax) - 1, space.grid_end - 1)
+            if whi < wlo:
+                continue
+            # keep only peers whose own walk starts inside the window (a
+            # cache missing a task's first admissible start is discarded
+            # at use, so scanning it would be waste)
+            keep = [j for j, (_t, _v, _k, s) in enumerate(batch)
+                    if wlo <= s <= whi]
+            if not keep:
+                continue
+            Vs = ceil32(np.stack([batch[j][1] for j in keep]))
+            ks = np.array([batch[j][2] for j in keep], dtype=np.int64)
+            plo, phi = wlo + space.off, whi + 1 + space.off
+            goods = self.scan_kernel(space.avail, Vs, ks, plo, phi, reverse)
+            ver, edge = space.version, space.grid_end
+            for row, j in zip(goods, keep):
+                cand = _Cand(wlo, whi, np.ascontiguousarray(row), reverse,
+                             ver, edge)
+                for sess in owners[j]:
+                    # the _Cand is read-only; sibling sessions may share it
+                    sess._cands[batch[j][0]] = cand
+        return out
 
 
 register_backend("batched", BatchedBackend)

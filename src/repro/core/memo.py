@@ -1,0 +1,172 @@
+"""Cross-candidate construction memoization (ROADMAP "memoization lever").
+
+The offline search (paper Fig. 7) evaluates many (T-set, order, direction)
+variants that share long placement prefixes: the same tasks get placed at
+the same anchors onto grids that agree wherever it matters.  This module
+memoizes that work at two granularities, both *outcome-exact* — a memo hit
+returns precisely what the live search would have returned:
+
+Pass level ("segment replay").  A whole PlaceTasksF/PlaceTasksB pass is a
+deterministic function of (the id *set*, the direction, the grid content,
+the grid extents): the heap pops tasks in a canonical order and every
+anchor derives from already-committed placements.  Successful passes are
+recorded as (final span, commit plan) under the key
+(ids-digest, direction, space-digest, grid extent); re-reaching the key on
+another branch replays the commits with zero searches.  The ids-digest is
+the *sorted* id bytes — permuted-but-equal id sets are the same set and
+must hit (place_pass heapifies, so its outcome is order-independent);
+tests/test_memo.py locks that down.
+
+Place level ("windowed memo").  A single placement query is even more
+reusable: an earliest-fit of demand v for k ticks from anchor a depends
+only on the grid cells in [a, t0 + k) — every start it examined lives
+there (mirrored for latest-fit).  Keying on a digest of just the
+placements overlapping that window lets a query hit even when the grids
+have long since diverged elsewhere (e.g. two candidate T-sets whose
+placement traces share a prefix but end differently).  Entries store the
+window bounds and its digest at record time; a lookup recomputes the
+digest over the *current* placements and only trusts a bit-equal match.
+
+Digests are 64-bit XOR-multiset hashes over (task, machine, start)
+triples (order-independent, O(1) incremental under commit, O(dropped)
+under restore).  The memo mirrors the Space's placement list through the
+Space.observer hook, so snapshot/restore keeps the digest exact.  A stale
+digest can never validate: any content difference inside the window flips
+the XOR (up to 64-bit collision odds, ~2^-64 per lookup pair).
+
+Both memos are scoped to one ``_build_one`` call: durations, demands and
+the tick quantization are fixed there, so (task, machine, start) triples
+fully determine grid content.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# counters threaded into benchmarks/bench_scheduling.py: the bench JSON
+# reports placements-evaluated vs placements-memoized per scenario.
+COUNTERS = {
+    "places_evaluated": 0,   # live backend searches
+    "places_memoized": 0,    # windowed place-memo hits
+    "passes_run": 0,         # live place_pass executions
+    "passes_replayed": 0,    # pass-memo plan replays (incl. fail shortcuts)
+    "variants_bound_skipped": 0,   # order-variant subtrees pruned by bound
+    "candidates_lb_skipped": 0,    # candidates skipped at the tick LB
+}
+
+
+def reset_counters() -> None:
+    for k in COUNTERS:
+        COUNTERS[k] = 0
+
+
+def counters_snapshot() -> dict[str, int]:
+    return dict(COUNTERS)
+
+
+_M1 = 0x9E3779B97F4A7C15
+_M2 = 0xC2B2AE3D27D4EB4F
+_M3 = 0x165667B19E3779F9
+_MASK = (1 << 64) - 1
+
+
+def item_hash(task: int, machine: int, start: int) -> int:
+    """64-bit mix of one placement triple (xorshift-multiply finalizer)."""
+    h = (task * _M1 ^ (machine + 7) * _M2 ^ (start & _MASK) * _M3) & _MASK
+    h ^= h >> 29
+    h = (h * _M1) & _MASK
+    h ^= h >> 32
+    return h
+
+
+#: per (direction, demand, k, anchor) key, how many distinct grid-window
+#: contexts to remember before dropping the oldest
+PLACE_ENTRY_CAP = 8
+
+
+class ConstructionMemo:
+    """Placement memo for one builder Space (see module docstring).
+
+    Registers itself as ``space.observer`` so commits/restores keep the
+    mirrored (start, end, hash) arrays and the whole-content digest exact.
+    """
+
+    def __init__(self, space):
+        self.space = space
+        space.observer = self
+        cap = 256
+        self._start = np.zeros(cap, dtype=np.int64)
+        self._end = np.zeros(cap, dtype=np.int64)
+        self._hash = np.zeros(cap, dtype=np.uint64)
+        self._n = 0
+        self.ckey = 0                       # XOR over all live placements
+        self._place: dict[tuple, list] = {}
+        self._pass: dict[tuple, tuple] = {}
+
+    # -- Space.observer protocol ---------------------------------------
+    def on_commit(self, task: int, machine: int, start: int, k: int) -> None:
+        n = self._n
+        if n == len(self._start):
+            grow = 2 * n
+            self._start = np.resize(self._start, grow)
+            self._end = np.resize(self._end, grow)
+            self._hash = np.resize(self._hash, grow)
+        # item_hash inlined: this runs once per grid commit
+        h = (task * _M1 ^ (machine + 7) * _M2 ^ (start & _MASK) * _M3) & _MASK
+        h ^= h >> 29
+        h = (h * _M1) & _MASK
+        h ^= h >> 32
+        self._start[n] = start
+        self._end[n] = start + k
+        self._hash[n] = h
+        self._n = n + 1
+        self.ckey ^= h
+
+    def on_restore(self, n_placed: int) -> None:
+        if n_placed < self._n:
+            dropped = self._hash[n_placed:self._n]
+            self.ckey ^= int(np.bitwise_xor.reduce(dropped))
+        self._n = n_placed
+
+    # -- windowed place memo -------------------------------------------
+    def _window_digest(self, a: int, b: int) -> int:
+        """XOR over placements whose occupancy intersects logical [a, b)."""
+        n = self._n
+        if n == 0:
+            return 0
+        mask = (self._end[:n] > a) & (self._start[:n] < b)
+        if not mask.any():
+            return 0
+        return int(np.bitwise_xor.reduce(self._hash[:n][mask]))
+
+    def place_get(self, direction: str, vb: bytes, k: int,
+                  anchor: int) -> tuple[int, int] | None:
+        lst = self._place.get((direction, vb, k, anchor))
+        if not lst:
+            return None
+        for b0, b1, dig, m, t0 in lst:
+            if self._window_digest(b0, b1) == dig:
+                COUNTERS["places_memoized"] += 1
+                return m, t0
+        return None
+
+    def place_put(self, direction: str, vb: bytes, k: int, anchor: int,
+                  forward: bool, m: int, t0: int) -> None:
+        # the cells the live search examined: every candidate start it
+        # rejected plus the slot it took (see module docstring)
+        b0, b1 = (anchor, t0 + k) if forward else (t0, anchor)
+        lst = self._place.setdefault((direction, vb, k, anchor), [])
+        lst.append((b0, b1, self._window_digest(b0, b1), m, t0))
+        if len(lst) > PLACE_ENTRY_CAP:
+            del lst[0]
+
+    # -- pass-level segment memo ---------------------------------------
+    def pass_key(self, ids: np.ndarray, direction: str) -> tuple:
+        sp = self.space
+        return (np.sort(ids).tobytes(), direction, self.ckey, sp.T, sp.off)
+
+    def pass_get(self, key: tuple):
+        return self._pass.get(key)
+
+    def pass_put(self, key: tuple, span: int, plan: list) -> None:
+        self._pass[key] = (span, plan)

@@ -89,10 +89,15 @@ class Space:
         # copy of the overwritten cells) — restoring copies the exact bits
         # back, so rollback is float-exact (no subtract/re-add drift).
         self._undo: list[tuple[int, int, np.ndarray]] = []
+        # optional mirror of the placement list (core/memo.py keeps its
+        # content digests exact through commits AND rollbacks via these
+        # two callbacks)
+        self.observer = None
 
     # ------------------------------------------------------------------
     def clone(self) -> "Space":
         s = Space.__new__(Space)
+        s.observer = None      # digests mirror ONE space; clones start fresh
         s.version = self.version
         s.m, s.d, s.tick, s.T, s.off = self.m, self.d, self.tick, self.T, self.off
         s.avail = self.avail.copy()
@@ -134,6 +139,8 @@ class Space:
             self.avail[machine, ps : ps + len(vals), :] = vals
         del self._undo[snap.n_undo:]
         del self.placements[snap.n_placed:]
+        if self.observer is not None:
+            self.observer.on_restore(snap.n_placed)
         self.version += 1
         if not keep_extent and (self.T != snap.T or self.off != snap.off):
             lo = self.off - snap.off   # growth only ever extends, off >= snap.off
@@ -275,17 +282,27 @@ class Space:
             self._grow_front()
 
     # ------------------------------------------------------------------
-    def commit(self, task: int, machine: int, start: int, k: int, v: np.ndarray) -> Placement:
+    def commit(self, task: int, machine: int, start: int, k: int, v: np.ndarray,
+               check: bool = True) -> Placement:
+        """Subtract v over [start, start+k) on `machine` and log the undo.
+
+        ``check=False`` skips the over-commit guard: replay paths (memo
+        plan replays, place_best winner replays) re-commit placements that
+        already passed the guard against bit-identical window content.
+        """
         k = max(int(k), 1)
         ps = start + self.off
         assert 0 <= ps and ps + k <= self.T, "commit outside grid"
-        self._undo.append((machine, start, self.avail[machine, ps : ps + k, :].copy()))
-        self.avail[machine, ps : ps + k, :] -= v
+        win = self.avail[machine, ps : ps + k, :]   # one view, three uses
+        self._undo.append((machine, start, win.copy()))
+        win -= v
         self.version += 1
-        if (self.avail[machine, ps : ps + k, :] < -1e-5).any():
+        if check and win.min() < -1e-5:
             raise RuntimeError("over-committed space")
         p = Placement(task, machine, start, start + k)
         self.placements.append(p)
+        if self.observer is not None:
+            self.observer.on_commit(task, machine, start, k)
         self._min_start = start if self._min_start is None else min(self._min_start, start)
         self._max_end = start + k if self._max_end is None else max(self._max_end, start + k)
         return p

@@ -1,0 +1,136 @@
+"""Parity suite for the memoized schedule builder.
+
+The cross-candidate construction memo (core/memo.py) and every search
+reduction around it (prefix-tree order variants, tick-LB stop, chain-bound
+subtree skips) must be invisible in the output: a memoized build is
+bit-identical to a no-memo build, on every backend, on every DAG of the
+engine-parity corpus.  A committed golden file additionally pins the
+full-precision start/machine arrays of a fixed corpus, so a regression
+that changes *both* modes the same way still gets caught.
+
+Regenerate the golden after an intentional semantic change with:
+
+    PYTHONPATH=src python tests/test_builder_parity.py --regen
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import build_schedule
+from repro.core.engine import JitBackend
+from repro.core.memo import COUNTERS
+from repro.sim.workload import production_dag, query_dag
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "data", "golden_builder.json")
+
+
+def _corpus():
+    """The engine-parity corpus: every production + TPC-DS DAG that
+    tests/test_engine.py checks for backend parity."""
+    out = []
+    for seed in range(20):
+        dag = production_dag(np.random.default_rng(seed), scale=0.35, share=3)
+        out.append((f"production-{seed}", dag, 3, 96))
+    for seed in range(4):
+        dag = query_dag(np.random.default_rng(seed), preset="tpcds")
+        out.append((f"tpcds-{seed}", dag, 4, 128))
+    return out
+
+
+def _assert_same(a, b, ctx):
+    assert a.makespan == b.makespan, f"makespan differs {ctx}"
+    assert np.array_equal(a.start, b.start), f"starts differ {ctx}"
+    assert np.array_equal(a.machine, b.machine), f"machines differ {ctx}"
+    assert np.array_equal(a.order, b.order), f"order differs {ctx}"
+
+
+class TestMemoParity:
+    def test_memoized_equals_plain_full_corpus(self):
+        """Every corpus DAG: memo on == memo off, bit for bit (default
+        backend), and the memo actually did something."""
+        before = COUNTERS["places_memoized"]
+        for name, dag, m, ticks in _corpus():
+            memo = build_schedule(dag, m, ticks=ticks, memoize=True)
+            plain = build_schedule(dag, m, ticks=ticks, memoize=False)
+            _assert_same(memo, plain, f"({name})")
+        assert COUNTERS["places_memoized"] > before, \
+            "memo never hit on the whole corpus — the lever is dead"
+
+    def test_memoized_equals_plain_all_backends(self):
+        """Memo/no-memo parity holds per backend AND across backends."""
+        backends = ["reference", "batched"]
+        if JitBackend.available():
+            backends.append("jit")
+        for name, dag, m, ticks in _corpus()[:3] + _corpus()[-2:]:
+            builds = {}
+            for be in backends:
+                memo = build_schedule(dag, m, ticks=ticks, backend=be,
+                                      memoize=True)
+                plain = build_schedule(dag, m, ticks=ticks, backend=be,
+                                       memoize=False)
+                _assert_same(memo, plain, f"({name}, backend={be})")
+                builds[be] = memo
+            for be in backends[1:]:
+                _assert_same(builds[backends[0]], builds[be],
+                             f"({name}, {backends[0]} vs {be})")
+
+    def test_env_var_disables_memo(self, monkeypatch):
+        from repro.core import builder
+        monkeypatch.setenv(builder.MEMO_ENV, "0")
+        assert builder._memo_enabled(None) is False
+        monkeypatch.setenv(builder.MEMO_ENV, "1")
+        assert builder._memo_enabled(None) is True
+        assert builder._memo_enabled(False) is False  # explicit arg wins
+
+
+def _golden_corpus():
+    """Smaller fixed corpus for the committed golden arrays."""
+    out = []
+    for seed in (0, 3, 7, 11):
+        dag = production_dag(np.random.default_rng(seed), scale=0.35, share=3)
+        out.append((f"production-{seed}", dag, 3, 96))
+    for seed in (0, 2):
+        dag = query_dag(np.random.default_rng(seed), preset="tpcds")
+        out.append((f"tpcds-{seed}", dag, 4, 128))
+    return out
+
+
+def _build_golden():
+    entries = []
+    for name, dag, m, ticks in _golden_corpus():
+        s = build_schedule(dag, m, ticks=ticks)
+        entries.append({
+            "name": name, "m": m, "ticks": ticks, "n": int(dag.n),
+            # full precision: json round-trips python floats exactly
+            "tick": s.tick,
+            "start": [float(x) for x in s.start],
+            "machine": [int(x) for x in s.machine],
+        })
+    return {"entries": entries}
+
+
+class TestGoldenBuilder:
+    def test_matches_committed_golden(self):
+        """Start/machine arrays equal the committed full-precision golden."""
+        with open(GOLDEN) as f:
+            golden = json.load(f)
+        built = _build_golden()
+        assert len(built["entries"]) == len(golden["entries"])
+        for g, b in zip(golden["entries"], built["entries"]):
+            assert g["name"] == b["name"]
+            assert g["tick"] == b["tick"], f"tick drifted ({g['name']})"
+            assert g["start"] == b["start"], f"starts drifted ({g['name']})"
+            assert g["machine"] == b["machine"], \
+                f"machines drifted ({g['name']})"
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--regen" in sys.argv:
+        with open(GOLDEN, "w") as f:
+            json.dump(_build_golden(), f, indent=1)
+        print(f"wrote {GOLDEN}")

@@ -64,6 +64,76 @@ def test_deficit_counters_never_exceed_bound_when_enforced(allocs, kappa):
         assert worst <= kappa * C + 1.0 + 1e-9
 
 
+def _space_interleaving_oracle(seed: int, n_ops: int) -> None:
+    """Random snapshot/branch/restore interleavings leave the grid
+    bit-identical to a clone-based oracle.
+
+    The construction memo trees lean on exactly this: every branch of the
+    variant trie assumes a restore returns the grid (cells, extents,
+    placement list, physical shape) to the checkpoint state *exactly* —
+    no float drift, no leaked growth.  The oracle is the expensive
+    alternative the undo log replaces: a full clone at every snapshot.
+    """
+    from repro.core import Space
+
+    rng = np.random.default_rng(seed)
+    s = Space(m=int(rng.integers(1, 4)), d=int(rng.integers(1, 3)),
+              horizon=int(rng.integers(8, 24)))
+    stack = []  # (snapshot, full clone at snapshot time)
+    tid = 0
+    for _ in range(n_ops):
+        op = rng.random()
+        if op < 0.45:  # commit somewhere feasible (earliest or latest fit)
+            v = rng.uniform(0.05, 0.9, s.d)
+            k = int(rng.integers(1, 6))
+            if rng.random() < 0.5:
+                m, t0 = s.earliest_fit(v, k, int(rng.integers(0, 12)))
+            else:
+                m, t0 = s.latest_fit(v, k, int(rng.integers(4, 16)))
+            s.commit(tid, m, t0, k, v)
+            tid += 1
+        elif op < 0.6:  # grow explicitly (restore must shrink it back)
+            (s._grow_front if rng.random() < 0.5 else s._grow_back)()
+        elif op < 0.8 or not stack:  # snapshot a new branch point
+            stack.append((s.snapshot(), s.clone()))
+        else:  # restore to a random depth (pops everything above it)
+            depth = int(rng.integers(0, len(stack)))
+            snap, oracle = stack[depth]
+            del stack[depth + 1:]
+            s.restore(snap)
+            assert s.T == oracle.T and s.off == oracle.off
+            assert np.array_equal(s.avail, oracle.avail), \
+                "grid not bit-identical to clone oracle after restore"
+            assert len(s.placements) == len(oracle.placements)
+            assert s._min_start == oracle._min_start
+            assert s._max_end == oracle._max_end
+            assert s.makespan_ticks == oracle.makespan_ticks
+    while stack:  # unwind the whole tree back to the root
+        snap, oracle = stack.pop()
+        s.restore(snap)
+        assert np.array_equal(s.avail, oracle.avail)
+        assert s.T == oracle.T and s.off == oracle.off
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(5, 60))
+def test_space_restore_matches_clone_oracle(seed, n_ops):
+    """Hypothesis sweep of the snapshot/branch/restore state machine."""
+    _space_interleaving_oracle(seed, n_ops)
+
+
+@settings(max_examples=15, deadline=None)
+@given(small_dags(), st.integers(1, 4))
+def test_memoized_build_matches_plain(dag, m):
+    """Random DAGs: the memoized builder is bit-identical to no-memo."""
+    a = build_schedule(dag, m=m, ticks=128, memoize=True)
+    b = build_schedule(dag, m=m, ticks=128, memoize=False)
+    assert a.makespan == b.makespan
+    assert np.array_equal(a.start, b.start)
+    assert np.array_equal(a.machine, b.machine)
+    assert np.array_equal(a.order, b.order)
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.integers(0, 2**31 - 1), st.integers(1, 512))
 def test_int8_compression_relative_error(seed, n):
