@@ -58,6 +58,10 @@ def _emit_memo_rows(prefix: str, before: dict[str, int]) -> None:
     emit(f"{prefix}_placements_evaluated", 0.0, ev)
     emit(f"{prefix}_placements_memoized", 0.0, hit)
     emit(f"{prefix}_memo_hit_rate", 0.0, round(hit / max(ev + hit, 1), 3))
+    # hits served across the partitioned sub-builds of one DAG (recurring
+    # pipelines: identical partitions -> identical tick-space queries)
+    emit(f"{prefix}_memo_xpart_hits", 0.0,
+         after["places_memoized_xpart"] - before["places_memoized_xpart"])
     emit(f"{prefix}_passes_replayed", 0.0,
          after["passes_replayed"] - before["passes_replayed"])
     emit(f"{prefix}_variants_pruned", 0.0,
@@ -70,7 +74,11 @@ def bench_jct() -> None:
     from benchmarks import common
 
     memo_before = _memo_counters()
-    for bench in ("tpch", "tpcds", "bigbench", "ehive", "production"):
+    # "periodic" (recurring pipelines, §2: >40% of production jobs recur)
+    # is the cross-partition memo's home regime: identical barrier-split
+    # phases make the sub-builds share tick-space placement queries
+    for bench in ("tpch", "tpcds", "bigbench", "ehive", "production",
+                  "periodic"):
         dags = make_workload(bench, n_jobs(12), seed=42)
         t0 = time.perf_counter()
         rs = {s: run_workload(dags, s, n_machines=16, interarrival=12.0,
@@ -92,7 +100,7 @@ def bench_jct() -> None:
 def bench_makespan() -> None:
     """Table 3: makespan; all jobs arrive at t~0."""
     memo_before = _memo_counters()
-    for bench in ("tpcds", "tpch"):
+    for bench in ("tpcds", "tpch", "periodic"):
         dags = make_workload(bench, n_jobs(16), seed=7)
         t0 = time.perf_counter()
         out = {}
@@ -229,17 +237,21 @@ def bench_domains() -> None:
 def bench_construction() -> None:
     """§7: BuildSchedule wall time across DAG sizes, per placement backend.
 
-    Emits one row per (size, backend) plus the reference/batched speedup
-    ratio so BENCH_*.json tracks the perf trajectory of the engine layer.
+    Emits one row per (size, backend), the reference/batched speedup
+    ratio, and — per backend — a scan-phase row (seconds inside the
+    feasibility-scan kernels, via the dispatch-layer profile) plus jit
+    retrace/device-call accounting, so jit-path regressions gate in CI
+    like scenario regressions (benchmarks/check_regression.py keys on
+    these s7_* rows).
     """
     from repro.core import available_backends, get_backend
+    from repro.core.engine import jit as jit_mod, kernels
     from benchmarks import common
 
     sizes = ((0.5, "small"),) if common.QUICK else (
         (0.5, "small"), (1.0, "medium"), (2.0, "large"))
     backends = ["reference", "batched"]
-    if "jit" in available_backends() and get_backend("jit").available() \
-            and not common.QUICK:
+    if "jit" in available_backends() and get_backend("jit").available():
         backends.append("jit")
     for scale, label in sizes:
         dag = production_dag(np.random.default_rng(99), scale=scale, share=8)
@@ -252,11 +264,28 @@ def bench_construction() -> None:
                 # compilation (ROADMAP follow-up)
                 build_schedule(dag, 8, backend=be)
             memo_before = _memo_counters()
+            kprof0 = kernels.profile_snapshot()
+            jit_mod.reset_profile()
+            retrace0 = kernels.XLA_STATS["compiles"]
             t0 = time.perf_counter()
             build_schedule(dag, 8, backend=be)
             times[be] = time.perf_counter() - t0
             emit(f"s7_construction_{label}_n{dag.n}_{be}",
                  times[be] * 1e6, round(times[be], 3))
+            # scan-phase row: seconds inside the scan kernels for this
+            # build (dispatch-layer numpy/xla time + device-resident jit
+            # launch time); gated like any s7 timing row
+            kprof1 = kernels.profile_snapshot()
+            scan_s = sum(sec - kprof0.get(key, (0, 0.0))[1]
+                         for key, (_c, sec) in kprof1.items()
+                         if key.startswith("scan."))
+            scan_s += jit_mod.PROFILE["scan_seconds"]
+            emit(f"s7_scan_{label}_{be}", scan_s * 1e6, round(scan_s, 3))
+            if be == "jit":
+                emit(f"s7_construction_{label}_jit_retraces", 0.0,
+                     kernels.XLA_STATS["compiles"] - retrace0)
+                emit(f"s7_construction_{label}_jit_device_calls", 0.0,
+                     jit_mod.PROFILE["device_calls"])
             _emit_memo_rows(f"s7_construction_{label}_{be}", memo_before)
         # legacy row: the default backend's wall time under the old name
         emit(f"s7_construction_{label}_n{dag.n}",
@@ -269,16 +298,21 @@ def bench_construction() -> None:
 def bench_online_large() -> None:
     """s8: online matching at cluster scale (intractable pre-vectorization).
 
-    >=500 machines, >=200 mixed production + TPC-DS jobs, Poisson arrivals
-    at a rate that keeps the cluster saturated — the §5/§7 regime where the
-    matcher, not the per-job DAGs, is the bottleneck.  The pre-refactor
-    object-list path took ~104 s for the tez+tetris leg alone; the SoA
-    path runs it in seconds.  `derived` is the scheme's median JCT so the
-    row doubles as an output-stability check.
+    >=500 machines (>=1k non-quick), >=200 mixed production + TPC-DS jobs,
+    Poisson arrivals at a rate that keeps the cluster saturated — the
+    §5/§7 regime where the matcher, not the per-job DAGs, is the
+    bottleneck.  The pre-refactor object-list path took ~104 s for the
+    tez+tetris leg alone; the SoA path runs it in seconds.  `derived` is
+    the scheme's median JCT so the row doubles as an output-stability
+    check.  Heartbeat eligibility runs through the kernel-dispatch layer
+    (one batched launch per heartbeat); the `_phase_heartbeat` rows report
+    time inside that op and the `_heartbeat_kernel` row names the
+    implementation that served it.
     """
+    from repro.core.engine import kernels
     from benchmarks import common
 
-    n_m, n_j = (500, 200) if common.QUICK else (800, 320)
+    n_m, n_j = (500, 200) if common.QUICK else (1024, 320)
     dags = online_mix_workload(n_j, seed=88)
     for sch in ("tez+tetris", "dagps"):
         t0 = time.perf_counter()
@@ -290,6 +324,8 @@ def bench_online_large() -> None:
              round(float(np.median(res.jcts())), 1))
         if common.PROFILE:
             emit_phases(f"s8_online_large_{tag}", res.phase_times)
+            emit(f"s8_online_large_{tag}_heartbeat_kernel", 0.0,
+                 kernels.active()["machines_with_candidates"])
 
 
 def bench_online_churn() -> None:

@@ -7,7 +7,11 @@ Rows whose name starts with ``s<digit>`` carry scenario wall-clock in the
 times its baseline fails the check.  Rows below ``--floor`` microseconds in
 the baseline are skipped (too noisy to gate on), as are rows present on
 only one side (new scenarios don't fail the job; removed ones are
-reported).  Exit code 1 on any regression so CI can gate on it.
+reported).  ``--expect PREFIX`` (repeatable) additionally fails the check
+when no current row starts with PREFIX — it pins load-bearing rows (e.g.
+the per-backend ``s7_scan_`` kernel-phase rows) so a refactor cannot
+silently stop emitting them.  Exit code 1 on any regression so CI can
+gate on it.
 
 The committed baseline is machine-specific.  If the gate fails with no
 code change (e.g. CI runner hardware changed), refresh
@@ -38,10 +42,17 @@ def main() -> int:
                     help="fail when current > factor * baseline")
     ap.add_argument("--floor", type=float, default=1e4,
                     help="ignore rows with baseline below this many us")
+    ap.add_argument("--expect", action="append", default=[],
+                    metavar="PREFIX",
+                    help="fail unless some current row starts with PREFIX")
     args = ap.parse_args()
     cur = load_rows(args.current)
     base = load_rows(args.baseline)
     failures = []
+    for prefix in args.expect:
+        if not any(n.startswith(prefix) for n in cur):
+            print(f"FAIL expected row prefix {prefix!r} missing from current run")
+            failures.append(f"expect:{prefix}")
     for name, b_us in sorted(base.items()):
         if not _SCENARIO.match(name):
             continue

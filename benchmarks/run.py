@@ -38,8 +38,21 @@ def main() -> None:
     if args.backend:
         # resolved by build_schedule everywhere a bench constructs schedules
         os.environ["REPRO_PLACEMENT_BACKEND"] = args.backend
+    # Low-core CPU hosts (CI runners): XLA's default intra-op pool spawns
+    # one worker per core, which fights the host thread for cores and
+    # serializes the jit backend's asynchronous scans — a single worker
+    # is strictly better below ~4 cores.  Appended only when the user has
+    # not configured the pool themselves; must land before jax's backend
+    # initializes, hence before the bench imports below.
+    xla_flags = os.environ.get("XLA_FLAGS", "")
+    if (os.cpu_count() or 8) <= 4 and \
+            "intra_op_parallelism_threads" not in xla_flags and \
+            "xla_cpu_multi_thread_eigen" not in xla_flags:
+        os.environ["XLA_FLAGS"] = (
+            xla_flags + " --xla_cpu_multi_thread_eigen=false"
+                        " intra_op_parallelism_threads=1").strip()
 
-    # import after the env var is pinned so every bench sees the backend
+    # import after the env vars are pinned so every bench sees them
     from . import bench_scheduling, bench_systems, common
 
     groups = {

@@ -29,7 +29,10 @@ Cross-candidate reductions (all outcome-exact; parity suite locks them):
     placed once and branched via the Space undo log;
   * placement work is memoized across variants at pass and single-slot
     granularity (core/memo.py) — a segment or query re-reached on another
-    branch replays its recorded outcome instead of searching;
+    branch replays its recorded outcome instead of searching; the
+    windowed slot memo is content-addressed, so one memo serves every
+    partitioned sub-build of a DAG (recurring pipelines hit across
+    partitions);
   * candidate evaluation stops at a sound tick lower bound, and order
     subtrees whose dependency-chain bound already reaches the incumbent
     are skipped before any placement.
@@ -482,20 +485,24 @@ def build_schedule(
     "jit"); None resolves REPRO_PLACEMENT_BACKEND, defaulting to "batched".
     All backends produce tick-identical schedules.  `memoize` toggles the
     cross-candidate construction memo (None resolves REPRO_BUILDER_MEMO,
-    default on); memoized and plain builds are bit-identical.
+    default on), which is shared across the partitioned sub-builds of the
+    DAG; memoized and plain builds are bit-identical.
     """
     if dag.n == 0:
         return Schedule(dag, np.empty(0, np.int64), np.empty(0), np.empty(0, np.int64), 0.0, 1.0)
     be = get_backend(backend)
-    memoize = _memo_enabled(memoize)
+    # one memo for the whole build: the windowed place memo is content-
+    # addressed (core/memo.py), so it carries across the partitioned
+    # sub-builds of one DAG — each partition re-attaches it to its Space.
+    memo = ConstructionMemo() if _memo_enabled(memoize) else None
     if use_partitions:
         parts = partition_totally_ordered(dag)
         if len(parts) > 1:
             return _concat_partition_schedules(dag, parts, m, ticks, n_long,
                                                n_frag, max_candidates, be,
-                                               memoize)
+                                               memo)
     return _build_one(dag, m, ticks, n_long, n_frag, max_candidates, be,
-                      memoize)
+                      memo)
 
 
 def _span_lb_ticks(dag: DAG, m: int, dur_ticks: np.ndarray) -> int:
@@ -597,7 +604,7 @@ def _span_bound(pl: _Placer) -> int:
 
 
 def _build_one(dag, m, ticks, n_long, n_frag, max_candidates, backend,
-               memoize=True) -> Schedule:
+               memo=None) -> Schedule:
     from .bounds import cp_length, t_work  # local import, no cycle at module load
 
     horizon = max(cp_length(dag), t_work(dag, m))
@@ -610,7 +617,8 @@ def _build_one(dag, m, ticks, n_long, n_frag, max_candidates, backend,
     # direction) evaluation runs against a snapshot and is rolled back,
     # so variant cost is O(cells written), never O(grid) cloning.
     space = Space(m, dag.d, grid, tick)
-    memo = ConstructionMemo(space) if memoize else None
+    if memo is not None:
+        memo.attach(space)
     lb = _span_lb_ticks(dag, m, dur_ticks)
     best_span: int | None = None
     best_state: tuple[np.ndarray, np.ndarray] | None = None
@@ -808,7 +816,7 @@ def partition_totally_ordered(dag: DAG) -> list[np.ndarray]:
 
 def _concat_partition_schedules(dag, parts, m, ticks, n_long, n_frag,
                                 max_candidates, backend,
-                                memoize=True) -> Schedule:
+                                memo=None) -> Schedule:
     start = np.zeros(dag.n, dtype=np.float64)
     machine = np.zeros(dag.n, dtype=np.int64)
     offset = 0.0
@@ -817,7 +825,7 @@ def _concat_partition_schedules(dag, parts, m, ticks, n_long, n_frag,
     for ids in parts:
         sub = _subdag(dag, ids)
         sched = _build_one(sub, m, ticks, n_long, n_frag, max_candidates,
-                           backend, memoize)
+                           backend, memo)
         start[ids] = sched.start + offset
         machine[ids] = sched.machine
         if sched.trouble_mask is not None:

@@ -2,20 +2,26 @@
 
 Layers:
   base      — PlacementBackend/PlacementSession protocol + registry
+  kernels   — kernel-dispatch layer: numpy / xla / pallas implementations
+              of the scan + fit/score/heartbeat ops, selected per-op
   reference — per-task numpy grid search (the semantic oracle)
   batched   — windowed ready-set feasibility scan, (n_tasks, m, W) lift
-  jit       — the same scan as a jax.jit-compiled kernel (flag-gated)
-  packing   — shared fit/score kernels for the online layers
+  jit       — device-resident sessions: persistent grid mirror + bucketed
+              donated buffers over the same scan (flag-gated)
+  packing   — shared numpy fit/score kernels for the online layers
 
-Select with ``build_schedule(..., backend="batched")`` or the
-``REPRO_PLACEMENT_BACKEND`` env var.  See docs/architecture.md.
+Select backends with ``build_schedule(..., backend="batched")`` or the
+``REPRO_PLACEMENT_BACKEND`` env var; pin kernel implementations with
+``REPRO_KERNELS`` (e.g. ``scan=xla``).  See docs/architecture.md.
 """
 
 from .base import (BACKEND_ENV, BACKWARD, DEFAULT_BACKEND, FORWARD, PeerTask,
                    PlacementBackend, PlacementSession, available_backends,
                    get_backend, register_backend)
+from . import kernels
+from .kernels import scan_starts
 from .reference import ReferenceBackend
-from .batched import BatchedBackend, scan_starts
+from .batched import BatchedBackend
 from .jit import JitBackend
 from . import packing
 
@@ -23,5 +29,5 @@ __all__ = [
     "BACKEND_ENV", "BACKWARD", "DEFAULT_BACKEND", "FORWARD", "PeerTask",
     "PlacementBackend", "PlacementSession", "available_backends",
     "get_backend", "register_backend", "ReferenceBackend", "BatchedBackend",
-    "JitBackend", "scan_starts", "packing",
+    "JitBackend", "scan_starts", "packing", "kernels",
 ]

@@ -68,7 +68,11 @@ def ceil32(v: np.ndarray) -> np.ndarray:
     For a float32 grid cell a and float64 demand v, ``a >= v`` iff
     ``a >= ceil32(v)``: comparisons can then run entirely in float32,
     sparing the float64 promotion of every scanned grid slice while
-    staying bit-identical to the reference float64 comparison.
+    staying bit-identical to the reference float64 comparison.  This is
+    the exactness keystone of every accelerated scan implementation in
+    the kernel-dispatch layer (numpy/xla/pallas all compare the same
+    float32 pair); a hypothesis property test pins the boundary argument
+    (tests/test_placement_kernels.py).
     """
     v = np.asarray(v)
     if v.dtype == np.float32:  # already rounded — passthrough
@@ -150,7 +154,9 @@ class PlacementBackend(abc.ABC):
         exactly the scanned grid state and capacity only decreases within
         its pass, a node-level scan is a sound superset for each branch
         (the same monotonicity argument as per-pass prefetch, so results
-        are tick-identical with or without the prescan).
+        are tick-identical with or without the prescan).  Under the
+        device-resident jit backend the stacked pass is a single
+        asynchronous device launch.
 
         The default is the degenerate stack: independent unseeded
         sessions, one per spec (the reference backend's behavior).

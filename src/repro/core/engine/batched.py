@@ -31,9 +31,10 @@ from typing import Callable, Sequence
 
 import numpy as np
 
-from ..space import runs_of_k
+from . import kernels
 from .base import (BACKWARD, FORWARD, HintKey, PeerTask, PlacementBackend,
                    PlacementSession, ceil32, register_backend)
+from .kernels import scan_starts  # noqa: F401  (re-exported; moved to kernels)
 
 #: first window size in ticks (doubles on every extension); sized so the
 #: common case — placing near the packing frontier — resolves in one scan
@@ -44,77 +45,29 @@ MAX_BATCH = 32
 #: duration-dominated, so batching it multiplies large scans that a couple
 #: of chunked live probes (Space.fit_first) answer outright.  Long stages
 #: are also narrow (few tasks), so there is no cohort to amortize over.
-LONG_K = 128
-
-
-def scan_starts(
-    avail: np.ndarray,
-    Vs: np.ndarray,
-    ks: np.ndarray,
-    plo: int,
-    phi: int,
-    reverse: bool = False,
-) -> np.ndarray:
-    """Feasible-start bitmaps for a batch of tasks over one window.
-
-    For each task g (demand ``Vs[g]``, duration ``ks[g]`` ticks) and each
-    physical start t in [plo, phi), bit (g, t, machine) says whether the
-    whole run [t, t + ks[g]) fits on that machine inside the grid.
-
-    Returns bool (g, (phi - plo) * m): rows are flattened over
-    (start, machine) with starts ascending, or descending when
-    ``reverse`` (the backward-pass walk order).
-    """
-    m, T, _d = avail.shape
-    g = len(ks)
-    W = phi - plo
-    kmax = int(ks.max())
-    hi_read = min(T, phi + kmax - 1)
-    win = avail[:, plo:hi_read, :]                              # (m, L, d)
-    L = hi_read - plo
-    if g == 1:  # window extensions: skip the batched gather machinery
-        k = int(ks[0])
-        ok = (win >= Vs[0]).all(axis=2)                         # (m, L)
-        good = runs_of_k(ok, k)
-        full = np.zeros((W, m), dtype=bool)
-        n = min(W, good.shape[1])
-        full[:n] = good[:, :n].T
-        if reverse:
-            full = full[::-1]
-        return np.ascontiguousarray(full).reshape(1, W * m)
-    ok = (win[None, :, :, :] >= Vs[:, None, None, :]).all(axis=3)  # (g, m, L)
-    if (ks == ks[0]).all():
-        # stage peers usually share one duration: the per-task gather
-        # degenerates to a single slice subtraction over the cumsums
-        k0 = int(ks[0])
-        good = np.zeros((g, m, W), dtype=bool)
-        runs = runs_of_k(ok.reshape(g * m, L), k0).reshape(g, m, -1)
-        n = min(W, runs.shape[2])
-        good[:, :, :n] = runs[:, :, :n]
-    else:
-        cz = np.zeros((g, m, L + 1), dtype=np.int32)
-        np.cumsum(ok, axis=2, out=cz[:, :, 1:])
-        ends = np.minimum(np.arange(W, dtype=np.int64)[None, :] + ks[:, None], L)
-        idx = np.broadcast_to(ends[:, None, :], (g, m, W))
-        run = np.take_along_axis(cz, idx, axis=2) - cz[:, :, :W]
-        # a run truncated by the grid edge counts < k and is correctly excluded
-        good = run == ks[:, None, None]                         # (g, m, W)
-    good = np.ascontiguousarray(np.swapaxes(good, 1, 2))        # (g, W, m)
-    if reverse:
-        good = good[:, ::-1, :]
-    return good.reshape(g, W * m)
+#: Shared with the dispatch layer, whose compiled-scan shape buckets lean
+#: on every bitmap-path duration being <= LONG_K.
+LONG_K = kernels.LONG_K
 
 
 class _Cand:
-    """One scanned window's bitmap for one task."""
+    """One scanned window's bitmap for one task.
 
-    __slots__ = ("wlo", "whi", "flat", "reverse", "version", "edge")
+    The bitmap may be *lazy*: a backend that scans asynchronously (the
+    device-resident jit sessions) hands a loader instead of the flat
+    array, and the first ``next_bit`` call materializes it.  The bitmap's
+    *content* is fixed at scan time either way — an async launch computes
+    over the grid state captured at the call — so version/edge soundness
+    reasoning is untouched by when the bits arrive on the host.
+    """
 
-    def __init__(self, wlo: int, whi: int, flat: np.ndarray, reverse: bool,
-                 version: int, edge: int):
+    __slots__ = ("wlo", "whi", "flat", "reverse", "version", "edge", "_load")
+
+    def __init__(self, wlo: int, whi: int, flat: np.ndarray | None,
+                 reverse: bool, version: int, edge: int, load=None):
         self.wlo = wlo          # lowest logical start covered
         self.whi = whi          # highest logical start covered (inclusive)
-        self.flat = flat        # (W * m,) bool in walk order
+        self.flat = flat        # (W * m,) bool in walk order, or None (lazy)
         self.reverse = reverse
         self.version = version  # grid version at scan time
         # logical grid_end at scan time: starts above edge - dur had their
@@ -122,11 +75,15 @@ class _Cand:
         # with respect to later growth — they are NOT settled by this
         # bitmap and must be rescanned once the grid grows
         self.edge = edge
+        self._load = load
 
     def next_bit(self, m: int, bound: int):
         """First set bit in walk order at/after ``bound`` → (machine, t)."""
-        j0 = ((self.whi - bound) if self.reverse else (bound - self.wlo)) * m
         flat = self.flat
+        if flat is None:
+            flat = self.flat = self._load()
+            self._load = None
+        j0 = ((self.whi - bound) if self.reverse else (bound - self.wlo)) * m
         if j0 < 0:
             j0 = 0
         elif j0 >= flat.size:
@@ -364,11 +321,16 @@ class BatchedSession(PlacementSession):
         Vs = ceil32(np.stack([b[1] for b in batch]))
         ks = np.array([b[2] for b in batch], dtype=np.int64)
         plo, phi = wlo + sp.off, whi + 1 + sp.off
-        goods = self._backend.scan_kernel(sp.avail, Vs, ks, plo, phi, reverse)
+        goods = self._backend.scan_kernel(sp, Vs, ks, plo, phi, reverse)
         out: _Cand | None = None
         ver, edge = sp.version, sp.grid_end
-        for row, (btid, _bv, _bk) in zip(goods, batch):
-            c = _Cand(wlo, whi, np.ascontiguousarray(row), reverse, ver, edge)
+        eager = isinstance(goods, np.ndarray)
+        for i, (btid, _bv, _bk) in enumerate(batch):
+            if eager:
+                c = _Cand(wlo, whi, np.ascontiguousarray(goods[i]), reverse,
+                          ver, edge)
+            else:   # async backend: rows materialize on first use
+                c = _Cand(wlo, whi, None, reverse, ver, edge, load=goods[i])
             if btid == tid:
                 out = c
             else:
@@ -381,10 +343,12 @@ class BatchedBackend(PlacementBackend):
     name = "batched"
     wants_prescan = True
 
-    #: the feasibility-scan kernel; subclasses (jit) override this
-    @staticmethod
-    def scan_kernel(avail, Vs, ks, plo, phi, reverse):
-        return scan_starts(avail, Vs, ks, plo, phi, reverse)
+    def scan_kernel(self, space, Vs, ks, plo, phi, reverse):
+        """The feasibility-scan kernel, routed through the kernel-dispatch
+        layer (core/engine/kernels.py).  Subclasses (jit) override with a
+        device-resident session keyed off the Space — which is why the
+        entry point takes the Space, not a bare grid array."""
+        return kernels.scan(space.avail, Vs, ks, plo, phi, reverse)
 
     def session(self, space, direction: str) -> BatchedSession:
         return BatchedSession(space, direction, self)
@@ -440,11 +404,16 @@ class BatchedBackend(PlacementBackend):
             Vs = ceil32(np.stack([batch[j][1] for j in keep]))
             ks = np.array([batch[j][2] for j in keep], dtype=np.int64)
             plo, phi = wlo + space.off, whi + 1 + space.off
-            goods = self.scan_kernel(space.avail, Vs, ks, plo, phi, reverse)
+            goods = self.scan_kernel(space, Vs, ks, plo, phi, reverse)
             ver, edge = space.version, space.grid_end
-            for row, j in zip(goods, keep):
-                cand = _Cand(wlo, whi, np.ascontiguousarray(row), reverse,
-                             ver, edge)
+            eager = isinstance(goods, np.ndarray)
+            for i, j in enumerate(keep):
+                if eager:
+                    cand = _Cand(wlo, whi, np.ascontiguousarray(goods[i]),
+                                 reverse, ver, edge)
+                else:
+                    cand = _Cand(wlo, whi, None, reverse, ver, edge,
+                                 load=goods[i])
                 for sess in owners[j]:
                     # the _Cand is read-only; sibling sessions may share it
                     sess._cands[batch[j][0]] = cand

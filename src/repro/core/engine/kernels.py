@@ -1,0 +1,710 @@
+"""Kernel-dispatch layer: one registry for the engine's array kernels.
+
+Every tensor-shaped inner loop of the scheduler — the windowed feasibility
+scan the placement backends run, and the fit/score/heartbeat kernels the
+online layers run — is registered here as an *op* with up to three
+implementations:
+
+  numpy   — the reference implementation; always available, always exact.
+  xla     — a jax.jit-compiled version (shape-bucketed, float32 compute).
+  pallas  — the ``src/repro/kernels/placement_scan`` Pallas kernels
+            (TPU target; interpret mode elsewhere).
+
+Selection is per-op: ``REPRO_KERNELS="scan=xla,machines_with_candidates=
+pallas"`` (or ``all=<impl>``) pins an implementation, and resolution falls
+back down the chain pallas -> xla -> numpy when the requested one is
+unavailable (no jax, no pallas).  ``active()`` reports what actually runs;
+``PROFILE`` accumulates per-(op, impl) call counts and seconds so
+benchmarks can attribute time to the kernel layer.
+
+Exactness contract per op (docs/architecture.md "Kernel layer"):
+
+  * ``scan`` — all implementations are bit-identical: the grid is float32
+    and demands are pre-rounded with ``ceil32``, so feasibility is a pure
+    float32 comparison plus integer run-length counting on every path.
+  * ``fits_mask`` / ``pack_score`` / ``heartbeat_masks`` — the numpy
+    implementations are the decision oracles (float64).  Accelerated
+    variants compute in float32 and are therefore NOT bit-exact; they are
+    only offered where a sound approximation cannot change a decision.
+  * ``machines_with_candidates`` — decision-exact under every
+    implementation: its masks are used exclusively to *skip* machines
+    that provably cannot pick a task, so any sound superset of the exact
+    eligibility yields bit-identical scheduling decisions (a falsely
+    eligible machine runs the matcher and picks nothing, mutating no
+    state).  The accelerated implementations compute supersets by
+    directed rounding: demands rounded *down* to float32, thresholds
+    ``avail + slack + eps`` rounded *up*, so no exact-eligible pair is
+    ever dropped.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+from ..space import runs_of_k
+from . import packing
+from .base import ceil32
+
+#: env var: comma-separated op=impl pairs, e.g. "scan=xla,all=numpy"
+KERNELS_ENV = "REPRO_KERNELS"
+
+OPS = ("scan", "fits_mask", "pack_score", "heartbeat_masks",
+       "machines_with_candidates")
+#: ops whose non-numpy implementations are approximate in ways that are
+#: only safe for specific consumers (see the exactness contract above):
+#: ``all=<impl>`` deliberately skips these — accelerating them requires
+#: an explicit per-op opt-in, e.g. ``REPRO_KERNELS=heartbeat_masks=xla``
+EXPLICIT_ONLY = ("fits_mask", "pack_score", "heartbeat_masks")
+IMPLS = ("pallas", "xla", "numpy")   # fallback order, strongest first
+
+#: per-(op, impl) dispatch accounting: {"op.impl": [calls, seconds]}
+PROFILE: dict[str, list] = {}
+
+
+def reset_profile() -> None:
+    PROFILE.clear()
+
+
+def profile_snapshot() -> dict[str, tuple[int, float]]:
+    return {k: (int(v[0]), float(v[1])) for k, v in PROFILE.items()}
+
+
+# ----------------------------------------------------------------------
+# numpy implementations (the reference semantics)
+# ----------------------------------------------------------------------
+
+def scan_starts(
+    avail: np.ndarray,
+    Vs: np.ndarray,
+    ks: np.ndarray,
+    plo: int,
+    phi: int,
+    reverse: bool = False,
+) -> np.ndarray:
+    """Feasible-start bitmaps for a batch of tasks over one window.
+
+    For each task g (demand ``Vs[g]``, duration ``ks[g]`` ticks) and each
+    physical start t in [plo, phi), bit (g, t, machine) says whether the
+    whole run [t, t + ks[g]) fits on that machine inside the grid.
+
+    Returns bool (g, (phi - plo) * m): rows are flattened over
+    (start, machine) with starts ascending, or descending when
+    ``reverse`` (the backward-pass walk order).
+    """
+    m, T, _d = avail.shape
+    g = len(ks)
+    W = phi - plo
+    kmax = int(ks.max())
+    hi_read = min(T, phi + kmax - 1)
+    win = avail[:, plo:hi_read, :]                              # (m, L, d)
+    L = hi_read - plo
+    if g == 1:  # window extensions: skip the batched gather machinery
+        k = int(ks[0])
+        ok = (win >= Vs[0]).all(axis=2)                         # (m, L)
+        good = runs_of_k(ok, k)
+        full = np.zeros((W, m), dtype=bool)
+        n = min(W, good.shape[1])
+        full[:n] = good[:, :n].T
+        if reverse:
+            full = full[::-1]
+        return np.ascontiguousarray(full).reshape(1, W * m)
+    ok = (win[None, :, :, :] >= Vs[:, None, None, :]).all(axis=3)  # (g, m, L)
+    if (ks == ks[0]).all():
+        # stage peers usually share one duration: the per-task gather
+        # degenerates to a single slice subtraction over the cumsums
+        k0 = int(ks[0])
+        good = np.zeros((g, m, W), dtype=bool)
+        runs = runs_of_k(ok.reshape(g * m, L), k0).reshape(g, m, -1)
+        n = min(W, runs.shape[2])
+        good[:, :, :n] = runs[:, :, :n]
+    else:
+        cz = np.zeros((g, m, L + 1), dtype=np.int32)
+        np.cumsum(ok, axis=2, out=cz[:, :, 1:])
+        ends = np.minimum(np.arange(W, dtype=np.int64)[None, :] + ks[:, None], L)
+        idx = np.broadcast_to(ends[:, None, :], (g, m, W))
+        run = np.take_along_axis(cz, idx, axis=2) - cz[:, :, :W]
+        # a run truncated by the grid edge counts < k and is correctly excluded
+        good = run == ks[:, None, None]                         # (g, m, W)
+    good = np.ascontiguousarray(np.swapaxes(good, 1, 2))        # (g, W, m)
+    if reverse:
+        good = good[:, ::-1, :]
+    return good.reshape(g, W * m)
+
+
+# ----------------------------------------------------------------------
+# xla implementations
+# ----------------------------------------------------------------------
+
+try:  # the numpy paths must work without jax
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    _HAVE_JAX = True
+except Exception:  # pragma: no cover - exercised only on jax-less installs
+    jax = jnp = lax = None
+    _HAVE_JAX = False
+
+
+def have_jax() -> bool:
+    return _HAVE_JAX
+
+
+def _have_pallas() -> bool:
+    if not _HAVE_JAX:
+        return False
+    try:
+        from ...kernels import placement_scan  # noqa: F401
+        return True
+    except Exception:  # pragma: no cover
+        return False
+
+
+def bucket(n: int, floor: int = 64) -> int:
+    """Smallest size >= n on the {64, 96, 128, 192, 256, ...} ladder.
+
+    A 1.5x-stepped power-of-two ladder: coarse enough that kernels
+    retrace a handful of times per process, tight enough that padded
+    compute stays within ~50% of the true shape.
+    """
+    if n <= floor:
+        return floor
+    p = floor
+    while True:
+        if n <= p:
+            return p
+        if n <= p + p // 2:
+            return p + p // 2
+        p *= 2
+
+
+def pad8(n: int) -> int:
+    return ((n + 7) // 8) * 8
+
+
+#: durations above this never reach the bitmap scans (the sessions answer
+#: them with chunked live probes — see core/engine/batched.py); the scan
+#: buckets below lean on it to pin the window-read length per W bucket
+LONG_K = 128
+#: the tighter of the two window-read allowances (see scan_buckets)
+SHORT_K = 32
+
+#: window-length buckets for the compiled scans; WINDOW0 (192) dominates
+W_LADDER = (192, 256, 512, 1024, 2048)
+
+
+def scan_buckets(g: int, W: int, kmax: int) -> tuple[int, int, int]:
+    """(gb, Lb, Wb) compile buckets for one scan shape.
+
+    Deliberately coarse: gb in multiples of 8, Wb on a short ladder, and
+    Lb = Wb plus a two-step duration allowance — SHORT_K covers the
+    common case (most stage durations quantize to a few ticks), LONG_K
+    the bitmap-path ceiling — a handful of distinct keys per (m, d)
+    pair, so the bounded compile cache never thrashes, while the window
+    read (the per-launch compute) stays ~30% leaner on typical batches.
+    """
+    gb = pad8(g)
+    for Wb in W_LADDER:
+        if W <= Wb:
+            break
+    else:
+        Wb = bucket(W)
+    if kmax <= SHORT_K:
+        Lb = Wb + SHORT_K
+    elif kmax <= LONG_K:
+        Lb = Wb + LONG_K
+    else:
+        Lb = bucket(Wb + kmax)
+    return gb, Lb, Wb
+
+
+#: compiled-kernel bucket cache cap (satellite: bound lru growth); above
+#: the cap the least-recently-used bucket is dropped and recompilation is
+#: counted as a retrace
+BUCKET_CAP = int(os.environ.get("REPRO_JIT_BUCKET_CAP", "32"))
+
+#: retrace/eviction accounting for the XLA scan buckets
+XLA_STATS = {"compiles": 0, "evictions": 0, "scan_calls": 0}
+
+
+class _BucketCache:
+    """Bounded LRU of jitted functions keyed by static shape buckets."""
+
+    def __init__(self, build: Callable, cap: int = BUCKET_CAP):
+        self._build = build
+        self._cap = cap
+        self._fns: dict[tuple, Callable] = {}
+
+    def get(self, key: tuple) -> Callable:
+        fn = self._fns.pop(key, None)
+        if fn is None:
+            if len(self._fns) >= self._cap:
+                self._fns.pop(next(iter(self._fns)))
+                XLA_STATS["evictions"] += 1
+            XLA_STATS["compiles"] += 1
+            fn = self._build(*key)
+        self._fns[key] = fn          # (re)append = most recently used
+        return fn
+
+    def __len__(self) -> int:
+        return len(self._fns)
+
+
+def _build_scan_fn(m: int, d: int, gb: int, Lb: int, Wb: int, Tb: int):
+    """One (m, d, gb, Lb, Wb, Tb) bucket of the windowed feasibility scan.
+
+    Slices a (m, Lb, d) window out of a (m, Tb, d) device grid at a
+    dynamic start — in-trace, so the launch stays a single asynchronous
+    dispatch (an eager host-side slice would synchronize with in-flight
+    work and serialize the async session).  The grid length Tb is part of
+    the trace signature on purpose: it sits on the coarse allocation
+    ladder and in the cache key, so those compiles are counted and capped
+    like every other bucket.  Ticks at/after ``tlive`` (window-relative)
+    are masked infeasible, which reproduces the numpy kernel's grid-edge
+    truncation bit-for-bit.
+
+    Run detection is *erosion by doubling* instead of the numpy kernel's
+    cumsum+gather: E_{2^j}[t] = "ok for 2^j consecutive ticks from t" is
+    built by log2(kmax) shifted ANDs, and each row's k combines the
+    ladder levels of its set bits at accumulated offsets (one per-row
+    dynamic slice per level).  Pure boolean shifts lower much better on
+    CPU/TPU than a length-L integer scan plus a (g, m, W) gather, and the
+    result is identical: a start is good iff all k ticks are ok.  All
+    comparisons are float32-vs-float32 (demands pre-rounded via
+    ``ceil32``), so the bitmaps are bit-identical to the numpy kernel.
+    """
+    nbits = max(LONG_K.bit_length(), (Lb - Wb).bit_length())
+
+    def scan(buf, start, tlive, Vs, ks):
+        win = lax.dynamic_slice(buf, (0, start, 0), (m, Lb, d))
+        ok = (win[None, :, :, :] >= Vs[:, None, None, :]).all(axis=3)
+        idx = jnp.arange(Lb, dtype=jnp.int32)
+        ok = ok & (idx < tlive)[None, None, :]           # (gb, m, Lb)
+        # erosion ladder: E[j][t] == all ok in [t, t + 2^j)
+        E = [ok]
+        for j in range(nbits - 1):
+            s = 1 << j
+            prev = E[-1]
+            E.append(prev[:, :, : prev.shape[2] - s] & prev[:, :, s:])
+        acc = jnp.ones((gb, m, Wb), dtype=bool)
+        off = jnp.zeros((gb,), dtype=jnp.int32)
+
+        def row_slice(e, o):
+            return lax.dynamic_slice(e, (0, o), (m, Wb))
+
+        for j in range(nbits):
+            s = 1 << j
+            # zero-pad (False) so every admissible offset slices in bounds
+            # — off before level j is at most 2^j - 1, so 2s covers it; a
+            # run reaching the padding correctly reads False
+            Ej = jnp.pad(E[j], ((0, 0), (0, 0), (0, 2 * s)))
+            bit = (ks >> j) & 1                          # (gb,)
+            sl = jax.vmap(row_slice)(Ej, off)
+            acc = acc & jnp.where(bit[:, None, None] > 0, sl, True)
+            off = off + bit * s
+        return jnp.swapaxes(acc, 1, 2)                   # (gb, Wb, m)
+
+    return jax.jit(scan)
+
+
+_SCAN_FNS: _BucketCache | None = None
+
+
+def scan_fn_for(m: int, d: int, gb: int, Lb: int, Wb: int,
+                Tb: int) -> Callable:
+    """Compiled scan for one shape bucket (shared with the jit backend)."""
+    global _SCAN_FNS
+    if _SCAN_FNS is None:
+        _SCAN_FNS = _BucketCache(_build_scan_fn)
+    return _SCAN_FNS.get((m, d, gb, Lb, Wb, Tb))
+
+
+def _scan_xla(avail, Vs, ks, plo, phi, reverse=False):
+    """Stateless XLA scan: uploads the window per call (the jit backend's
+    device-resident session avoids the upload; this entry point is the
+    registry implementation used for parity testing and ad-hoc routing)."""
+    m, T, d = avail.shape
+    g = len(ks)
+    W = phi - plo
+    kmax = int(ks.max())
+    hi_read = min(T, phi + kmax - 1)
+    L = hi_read - plo
+    gb, Lb, Wb = scan_buckets(g, W, kmax)
+    win_p = np.full((m, Lb, d), -1.0, dtype=np.float32)
+    win_p[:, :L, :] = avail[:, plo:hi_read, :]
+    Vs_p = np.full((gb, d), 2.0, dtype=np.float32)
+    Vs_p[:g] = ceil32(np.asarray(Vs))
+    ks_p = np.ones(gb, dtype=np.int32)
+    ks_p[:g] = ks
+    XLA_STATS["scan_calls"] += 1
+    fn = scan_fn_for(m, d, gb, Lb, Wb, Lb)   # buffer == window here
+    good = np.asarray(fn(jnp.asarray(win_p), np.int32(0), np.int32(L),
+                         Vs_p, ks_p))
+    good = good[:g, :W, :]
+    if reverse:
+        good = good[:, ::-1, :]
+    return np.ascontiguousarray(good).reshape(g, W * m)
+
+
+# -- heartbeat ops: sound-superset float32 formulation -------------------
+
+def _round_down32(x: np.ndarray) -> np.ndarray:
+    """Largest float32 <= x (directed rounding for sound supersets)."""
+    x32 = x.astype(np.float32)
+    high = x32.astype(np.float64) > x
+    if high.any():
+        x32[high] = np.nextafter(x32[high], np.float32(-np.inf))
+    return x32
+
+
+def _round_up32(x: np.ndarray) -> np.ndarray:
+    """Smallest float32 >= x."""
+    x32 = x.astype(np.float32)
+    low = x32.astype(np.float64) < x
+    if low.any():
+        x32[low] = np.nextafter(x32[low], np.float32(np.inf))
+    return x32
+
+
+def _superset_operands(avail, demands, fit_dims, rigid_dims, fungible_dims,
+                       overbook_slack, eps=packing.EPS):
+    """Host-side exact prep for the accelerated eligibility kernels.
+
+    The exact test per (candidate, machine, dim) is
+    ``demand <= avail + slack + eps`` in float64.  Rounding the demand
+    *down* and the float64 threshold *up* to float32 can only turn False
+    into True — a sound superset, which is all the skip-only consumers
+    need.  The (m, d)/(n, d) rounding runs on host (cheap); only the
+    (n, m) outer comparison runs on the accelerator.
+    """
+    avail = np.atleast_2d(np.asarray(avail, dtype=np.float64))
+    demands = np.atleast_2d(np.asarray(demands, dtype=np.float64))
+    d = avail.shape[1]
+    dem32 = _round_down32(demands)
+    thr_fit = _round_up32(avail + eps)
+    thr_fung = _round_up32(avail + max(overbook_slack, 0.0) + eps)
+
+    def sel(dims):
+        dims = np.asarray(dims, dtype=np.int64)
+        return dims if len(dims) else np.empty(0, np.int64)
+
+    return dem32, thr_fit, thr_fung, sel(fit_dims), sel(rigid_dims), \
+        sel(fungible_dims)
+
+
+def _eligible_superset_np(dem32, thr_fit, thr_fung, fd, rd, gd):
+    """Reference formulation of the superset masks (used by tests)."""
+    def fit(thr, dims):
+        if len(dims) == 0:
+            return np.ones((dem32.shape[0], thr.shape[0]), dtype=bool)
+        return (dem32[:, None, dims] <= thr[None, :, dims]).all(axis=2)
+
+    eligible = fit(thr_fit, fd) | (fit(thr_fit, rd) & fit(thr_fung, gd))
+    return eligible, eligible.any(axis=0)
+
+
+_ELIG_FNS: _BucketCache | None = None
+
+
+def _build_elig_fn(n_dims_key):
+    def elig(dem32, thr_fit, thr_fung, fd_mask, rd_mask, gd_mask):
+        # dims enter as (d,) float32 {0, 1} masks: a masked-out dim
+        # compares against +inf and never fails the fit
+        inf = jnp.float32(np.inf)
+        tf = jnp.where(fd_mask > 0, thr_fit[None, :, :], inf)
+        tr = jnp.where(rd_mask > 0, thr_fit[None, :, :], inf)
+        tg = jnp.where(gd_mask > 0, thr_fung[None, :, :], inf)
+        dm = dem32[:, None, :]
+        fits = (dm <= tf).all(axis=2)
+        rigid = (dm <= tr).all(axis=2)
+        fung = (dm <= tg).all(axis=2)
+        eligible = fits | (rigid & fung)
+        return eligible, eligible.any(axis=0)
+    return jax.jit(elig)
+
+
+def _eligibility_launch_args(avail, demands, fit_dims, rigid_dims,
+                             fungible_dims, overbook_slack, use_overbooking):
+    """Shared preamble of the accelerated eligibility ops.
+
+    Returns ``(dem32, thr_fit, thr_fung, masks)`` ready for either launch
+    path, or the ``(eligible, machine_any)`` empty-result shortcut when
+    there are no candidates.  One site on purpose: the xla and pallas
+    implementations must degenerate and encode dims identically or their
+    decisions could drift apart.
+    """
+    if not use_overbooking:
+        # no overbooking: eligibility is the plain fit mask; reuse the
+        # fit threshold for both halves so the kernel stays one shape
+        rigid_dims = fit_dims
+        fungible_dims = np.empty(0, np.int64)
+        overbook_slack = 0.0
+    dem32, thr_fit, thr_fung, fd, rd, gd = _superset_operands(
+        avail, demands, fit_dims, rigid_dims, fungible_dims, overbook_slack)
+    n, d = dem32.shape
+    if n == 0:
+        m = thr_fit.shape[0]
+        return None, (np.zeros((n, m), dtype=bool), np.zeros(m, dtype=bool))
+    masks = []
+    for dims in (fd, rd, gd):
+        mk = np.zeros(d, dtype=np.float32)
+        mk[dims] = 1.0
+        masks.append(mk)
+    return (dem32, thr_fit, thr_fung, masks), None
+
+
+def _machines_with_candidates_xla(avail, demands, fit_dims, rigid_dims,
+                                  fungible_dims, overbook_slack=0.0,
+                                  use_overbooking=True):
+    """Sound-superset eligibility in one device launch (see module doc)."""
+    args, empty = _eligibility_launch_args(avail, demands, fit_dims,
+                                           rigid_dims, fungible_dims,
+                                           overbook_slack, use_overbooking)
+    if empty is not None:
+        return empty
+    dem32, thr_fit, thr_fung, masks = args
+    global _ELIG_FNS
+    if _ELIG_FNS is None:
+        _ELIG_FNS = _BucketCache(_build_elig_fn)
+    fn = _ELIG_FNS.get((dem32.shape[1],))
+    eligible, any_m = fn(dem32, thr_fit, thr_fung, *masks)
+    return np.asarray(eligible), np.asarray(any_m)
+
+
+def _heartbeat_masks_xla(avail, demands, fit_dims, rigid_dims, fungible_dims,
+                         overbook_slack=0.0, use_overbooking=True):
+    """Superset (fits, over) masks; see machines_with_candidates caveats.
+
+    NOTE: ``over`` is derived from the superset ``fits`` via negation, so
+    unlike the union mask it is *neither* a superset nor a subset of the
+    exact mask — this implementation is only safe for consumers that use
+    ``fits | over``.  The dispatch default therefore stays numpy.
+    """
+    args, empty = _eligibility_launch_args(avail, demands, fit_dims,
+                                           rigid_dims, fungible_dims,
+                                           overbook_slack, use_overbooking)
+    if empty is not None:
+        # this op's contract is (fits (n, m), over (n, m)) — not the
+        # (eligible, machine_any (m,)) pair of machines_with_candidates
+        return empty[0], np.zeros_like(empty[0])
+    dem32, thr_fit, thr_fung, masks = args
+    global _ELIG_FNS
+    if _ELIG_FNS is None:
+        _ELIG_FNS = _BucketCache(_build_elig_fn)
+    fn = _ELIG_FNS.get((dem32.shape[1],))
+    eligible, _any = fn(dem32, thr_fit, thr_fung, *masks)
+    eligible = np.asarray(eligible)
+    fd_mask = masks[0] > 0
+    fits = (dem32[:, None, fd_mask] <= thr_fit[None, :, fd_mask]).all(axis=2) \
+        if fd_mask.any() else np.ones_like(eligible)
+    return fits, eligible & ~fits
+
+
+def _fits_mask_xla(avail, demand, dims=None, slack=0.0, eps=packing.EPS):
+    """float32 fit mask (superset by directed rounding); not bit-exact."""
+    avail = np.asarray(avail, dtype=np.float64)
+    demand = np.asarray(demand, dtype=np.float64)
+    if dims is not None:
+        dims = np.asarray(dims, dtype=np.int64)
+        if len(dims) == 0:
+            if avail.ndim == 2 and demand.ndim == 2:
+                return np.ones((demand.shape[0], avail.shape[0]), dtype=bool)
+            shape = np.broadcast_shapes(avail.shape[:-1], demand.shape[:-1])
+            return np.ones(shape, dtype=bool)
+        avail = avail[..., dims]
+        demand = demand[..., dims]
+    thr = jnp.asarray(_round_up32(avail + slack + eps))
+    dem = jnp.asarray(_round_down32(demand))
+    if avail.ndim == 2 and demand.ndim == 2:
+        out = (dem[:, None, :] <= thr[None, :, :]).all(axis=2)
+    else:
+        out = (dem <= thr).all(axis=-1)
+    return np.asarray(out)
+
+
+def _pack_score_xla(avail, demand, clip=False):
+    """float32 Tetris dot-product scores; NOT bit-exact vs numpy float64."""
+    avail = jnp.asarray(np.asarray(avail), dtype=jnp.float32)
+    if clip:
+        avail = jnp.clip(avail, 0.0, None)
+    demand = jnp.asarray(np.asarray(demand), dtype=jnp.float32)
+    if avail.ndim == 2 and demand.ndim == 2:
+        return np.asarray(demand @ avail.T, dtype=np.float64)
+    out = demand @ jnp.swapaxes(jnp.atleast_2d(avail), -1, -2)
+    return np.asarray(out.squeeze(), dtype=np.float64)
+
+
+# ----------------------------------------------------------------------
+# pallas implementations (adapters over src/repro/kernels/placement_scan)
+# ----------------------------------------------------------------------
+
+def _scan_pallas(avail, Vs, ks, plo, phi, reverse=False):
+    from ...kernels.placement_scan import ops as ps_ops
+
+    m, T, d = avail.shape
+    g = len(ks)
+    W = phi - plo
+    kmax = int(ks.max())
+    hi_read = min(T, phi + kmax - 1)
+    L = hi_read - plo
+    # the kernel's dynamic k-slice needs L_pad >= W_pad + kmax; ticks
+    # beyond t_live are masked infeasible so the padding never flips a bit
+    Wb = bucket(W)
+    Lp = bucket(max(Wb + kmax, L))
+    gb = pad8(g)
+    win_p = np.full((m, Lp, d), -1.0, dtype=np.float32)
+    win_p[:, :L, :] = avail[:, plo:hi_read, :]
+    Vs_p = np.full((gb, d), 2.0, dtype=np.float32)
+    Vs_p[:g] = ceil32(np.asarray(Vs))
+    ks_p = np.ones(gb, dtype=np.int32)
+    ks_p[:g] = ks
+    good = np.asarray(ps_ops.scan_bitmaps(win_p, Vs_p, ks_p, np.int32(L),
+                                          W=Wb)) != 0
+    good = good[:g, :W, :]
+    if reverse:
+        good = good[:, ::-1, :]
+    return np.ascontiguousarray(good).reshape(g, W * m)
+
+
+def _machines_with_candidates_pallas(avail, demands, fit_dims, rigid_dims,
+                                     fungible_dims, overbook_slack=0.0,
+                                     use_overbooking=True):
+    from ...kernels.placement_scan import ops as ps_ops
+
+    args, empty = _eligibility_launch_args(avail, demands, fit_dims,
+                                           rigid_dims, fungible_dims,
+                                           overbook_slack, use_overbooking)
+    if empty is not None:
+        return empty
+    dem32, thr_fit, thr_fung, masks = args
+    eligible = np.asarray(ps_ops.heartbeat_eligible(
+        dem32, thr_fit, thr_fung, *masks)) != 0
+    return eligible, eligible.any(axis=0)
+
+
+# ----------------------------------------------------------------------
+# registry + dispatch
+# ----------------------------------------------------------------------
+
+_REGISTRY: dict[tuple[str, str], tuple[Callable, Callable[[], bool]]] = {}
+
+
+def register(op: str, impl: str, fn: Callable,
+             available: Callable[[], bool] = lambda: True) -> None:
+    _REGISTRY[(op, impl)] = (fn, available)
+
+
+register("scan", "numpy", scan_starts)
+register("fits_mask", "numpy", packing.fits_mask)
+register("pack_score", "numpy", packing.pack_score)
+register("heartbeat_masks", "numpy", packing.heartbeat_masks)
+register("machines_with_candidates", "numpy", packing.machines_with_candidates)
+
+if _HAVE_JAX:
+    register("scan", "xla", _scan_xla, have_jax)
+    register("fits_mask", "xla", _fits_mask_xla, have_jax)
+    register("pack_score", "xla", _pack_score_xla, have_jax)
+    register("heartbeat_masks", "xla", _heartbeat_masks_xla, have_jax)
+    register("machines_with_candidates", "xla",
+             _machines_with_candidates_xla, have_jax)
+    register("scan", "pallas", _scan_pallas, _have_pallas)
+    register("machines_with_candidates", "pallas",
+             _machines_with_candidates_pallas, _have_pallas)
+
+
+_REQ_CACHE: tuple[str, dict] | None = None
+
+
+def _requested() -> dict[str, str]:
+    """Parsed REPRO_KERNELS, cached per raw env value (dispatch-hot)."""
+    global _REQ_CACHE
+    raw = os.environ.get(KERNELS_ENV, "")
+    if _REQ_CACHE is not None and _REQ_CACHE[0] == raw:
+        return _REQ_CACHE[1]
+    out: dict[str, str] = {}
+    for part in raw.split(","):
+        part = part.strip()
+        if not part or "=" not in part:
+            continue
+        op, impl = part.split("=", 1)
+        op, impl = op.strip(), impl.strip()
+        if impl not in IMPLS:
+            raise ValueError(f"unknown kernel impl {impl!r}; have {IMPLS}")
+        if op == "all":
+            for o in OPS:
+                if o not in EXPLICIT_ONLY:
+                    out.setdefault(o, impl)
+        elif op in OPS:
+            out[op] = impl
+        else:
+            raise ValueError(f"unknown kernel op {op!r}; have {OPS}")
+    _REQ_CACHE = (raw, out)
+    return out
+
+
+def resolve(op: str) -> tuple[str, Callable]:
+    """(impl name, callable) for one op, honoring env + availability.
+
+    The requested implementation falls back down the IMPLS chain when it
+    is unregistered or reports unavailable; numpy is always registered,
+    so resolution always succeeds.
+    """
+    want = _requested().get(op, "numpy")
+    start = IMPLS.index(want)
+    for impl in IMPLS[start:]:
+        ent = _REGISTRY.get((op, impl))
+        if ent is not None and ent[1]():
+            return impl, ent[0]
+    raise RuntimeError(f"no implementation available for kernel op {op!r}")
+
+
+def active() -> dict[str, str]:
+    """op -> impl actually selected right now (env + availability)."""
+    return {op: resolve(op)[0] for op in OPS}
+
+
+def _dispatch(op: str, *args, **kwargs):
+    impl, fn = resolve(op)
+    key = f"{op}.{impl}"
+    slot = PROFILE.get(key)
+    if slot is None:
+        slot = PROFILE[key] = [0, 0.0]
+    t0 = time.perf_counter()
+    try:
+        return fn(*args, **kwargs)
+    finally:
+        slot[0] += 1
+        slot[1] += time.perf_counter() - t0
+
+
+# -- public dispatching entry points -----------------------------------
+
+def scan(avail, Vs, ks, plo, phi, reverse=False):
+    """Windowed feasibility scan through the dispatch table."""
+    return _dispatch("scan", avail, Vs, ks, plo, phi, reverse)
+
+
+def fits_mask(avail, demand, dims=None, slack=0.0, eps=packing.EPS):
+    return _dispatch("fits_mask", avail, demand, dims, slack, eps)
+
+
+def pack_score(avail, demand, clip=False):
+    return _dispatch("pack_score", avail, demand, clip)
+
+
+def heartbeat_masks(avail, demands, fit_dims, rigid_dims, fungible_dims,
+                    overbook_slack=0.0, use_overbooking=True):
+    return _dispatch("heartbeat_masks", avail, demands, fit_dims, rigid_dims,
+                     fungible_dims, overbook_slack, use_overbooking)
+
+
+def machines_with_candidates(avail, demands, fit_dims, rigid_dims,
+                             fungible_dims, overbook_slack=0.0,
+                             use_overbooking=True):
+    return _dispatch("machines_with_candidates", avail, demands, fit_dims,
+                     rigid_dims, fungible_dims, overbook_slack,
+                     use_overbooking)

@@ -10,6 +10,14 @@ matcher (`core.online.Matcher`) and the cluster simulator
 
 These kernels are that shared core, so every layer uses identical epsilon
 and dimension-subset semantics.
+
+They are also the ``numpy`` implementations — the exact float64 oracles —
+of the corresponding ops in the kernel-dispatch layer
+(``core/engine/kernels.py``), which layers xla/pallas variants on top.
+Decision-bearing callers (the matcher's bundling loop, speculative-copy
+placement) import this module directly on purpose: those must never be
+rerouted to an approximate implementation.  Skip-only callers go through
+the dispatch wrappers instead.
 """
 
 from __future__ import annotations

@@ -2,9 +2,11 @@
 
 Each `place` call runs one full cumsum feasibility scan over the remaining
 grid (`Space.earliest_fit` / `Space.latest_fit`), seeded by the per-pass
-hint table.  This is the semantic oracle the batched backends must match
-tick-for-tick, and the baseline the construction benchmark compares
-against.
+hint table.  This is the semantic oracle the batched backends — and every
+implementation in the kernel-dispatch layer (core/engine/kernels.py) —
+must match tick-for-tick, and the baseline the construction benchmark
+compares against.  It deliberately bypasses the dispatch layer: the
+oracle must not share code with what it oracles.
 """
 
 from __future__ import annotations

@@ -15,7 +15,9 @@ recorded as (final span, commit plan) under the key
 another branch replays the commits with zero searches.  The ids-digest is
 the *sorted* id bytes — permuted-but-equal id sets are the same set and
 must hit (place_pass heapifies, so its outcome is order-independent);
-tests/test_memo.py locks that down.
+tests/test_memo.py locks that down.  Pass entries are scoped to one
+sub-build: plans store task ids, and ids map to different demands in
+different partitions, so ``attach`` clears them.
 
 Place level ("windowed memo").  A single placement query is even more
 reusable: an earliest-fit of demand v for k ticks from anchor a depends
@@ -27,16 +29,26 @@ placement traces share a prefix but end differently).  Entries store the
 window bounds and its digest at record time; a lookup recomputes the
 digest over the *current* placements and only trusts a bit-equal match.
 
-Digests are 64-bit XOR-multiset hashes over (task, machine, start)
-triples (order-independent, O(1) incremental under commit, O(dropped)
-under restore).  The memo mirrors the Space's placement list through the
-Space.observer hook, so snapshot/restore keeps the digest exact.  A stale
-digest can never validate: any content difference inside the window flips
-the XOR (up to 64-bit collision odds, ~2^-64 per lookup pair).
-
-Both memos are scoped to one ``_build_one`` call: durations, demands and
-the tick quantization are fixed there, so (task, machine, start) triples
-fully determine grid content.
+Digests are 64-bit *additive* multiset hashes (sum mod 2^64) over
+(machine, start, k, demand-bytes) quadruples — order-independent, O(1)
+incremental under commit, O(dropped) under restore.  Addition, not XOR:
+hashing the *demand* instead of the task id makes two identical tasks
+legally sharing one (machine, start) slot hash-equal, and XOR would
+cancel the pair into "empty window" (a real bug class caught by the
+periodic workload); a sum accumulates multiplicity.  Dropping the task
+id is what makes the digest a pure function of grid content: identical
+window content yields identical digests no matter which tasks produced
+it.
+That is what lets one memo serve every partitioned sub-build of a DAG
+(``build_schedule`` rebinds the memo to each partition's Space via
+``attach``): task ids are partition-local, but a window whose content
+digest matches is the same tick-space search problem regardless of
+partition or even tick quantization, so cross-partition hits are exact.
+The memo mirrors the Space's placement list through the Space observer
+hook, so snapshot/restore keeps the digest exact.  A stale digest can
+never validate: any content difference inside the window changes the sum
+by a nonzero multiset of pseudo-random 64-bit terms (up to collision
+odds, ~2^-64 per lookup pair).
 """
 
 from __future__ import annotations
@@ -48,6 +60,8 @@ import numpy as np
 COUNTERS = {
     "places_evaluated": 0,   # live backend searches
     "places_memoized": 0,    # windowed place-memo hits
+    "places_memoized_xpart": 0,  # ...of which hit an entry recorded by an
+                                 # earlier partition of the same DAG
     "passes_run": 0,         # live place_pass executions
     "passes_replayed": 0,    # pass-memo plan replays (incl. fail shortcuts)
     "variants_bound_skipped": 0,   # order-variant subtrees pruned by bound
@@ -70,9 +84,13 @@ _M3 = 0x165667B19E3779F9
 _MASK = (1 << 64) - 1
 
 
-def item_hash(task: int, machine: int, start: int) -> int:
-    """64-bit mix of one placement triple (xorshift-multiply finalizer)."""
-    h = (task * _M1 ^ (machine + 7) * _M2 ^ (start & _MASK) * _M3) & _MASK
+def item_hash(a: int, b: int, c: int, salt: int = 0) -> int:
+    """64-bit mix of one placement tuple (xorshift-multiply finalizer).
+
+    The memo feeds it (machine, start, k) with the demand-row hash as
+    ``salt``; every component perturbs the result.
+    """
+    h = (a * _M1 ^ (b + 7) * _M2 ^ (c & _MASK) * _M3 ^ (salt & _MASK)) & _MASK
     h ^= h >> 29
     h = (h * _M1) & _MASK
     h ^= h >> 32
@@ -85,34 +103,57 @@ PLACE_ENTRY_CAP = 8
 
 
 class ConstructionMemo:
-    """Placement memo for one builder Space (see module docstring).
+    """Placement memo for one builder DAG (see module docstring).
 
-    Registers itself as ``space.observer`` so commits/restores keep the
-    mirrored (start, end, hash) arrays and the whole-content digest exact.
+    ``attach`` binds it to a Space (registering as a Space observer so
+    commits/restores keep the mirrored (start, end, hash) arrays and the
+    whole-content digest exact) and may be called again for each
+    partitioned sub-build: the windowed place memo persists across
+    partitions (content-addressed, see module docstring), the pass memo
+    and the placement mirror reset.
     """
 
-    def __init__(self, space):
-        self.space = space
-        space.observer = self
+    def __init__(self, space=None):
+        self.space = None
         cap = 256
         self._start = np.zeros(cap, dtype=np.int64)
         self._end = np.zeros(cap, dtype=np.int64)
         self._hash = np.zeros(cap, dtype=np.uint64)
         self._n = 0
-        self.ckey = 0                       # XOR over all live placements
+        self.ckey = 0                       # sum (mod 2^64) over live placements
         self._place: dict[tuple, list] = {}
         self._pass: dict[tuple, tuple] = {}
+        self._epoch = 0                     # bumped per attach (partition)
+        if space is not None:
+            self.attach(space)
+
+    def attach(self, space) -> None:
+        """(Re)bind to a Space: fresh mirror + pass memo, kept place memo."""
+        if self.space is not None:
+            self.space.remove_observer(self)
+        self.space = space
+        space.add_observer(self)
+        self._n = 0
+        self.ckey = 0
+        self._pass.clear()
+        self._epoch += 1
 
     # -- Space.observer protocol ---------------------------------------
-    def on_commit(self, task: int, machine: int, start: int, k: int) -> None:
+    def on_commit(self, task: int, machine: int, start: int, k: int,
+                  v: np.ndarray) -> None:
         n = self._n
         if n == len(self._start):
             grow = 2 * n
             self._start = np.resize(self._start, grow)
             self._end = np.resize(self._end, grow)
             self._hash = np.resize(self._hash, grow)
-        # item_hash inlined: this runs once per grid commit
-        h = (task * _M1 ^ (machine + 7) * _M2 ^ (start & _MASK) * _M3) & _MASK
+        # item_hash inlined: this runs once per grid commit.  The hash
+        # covers (machine, start, k, demand) — task ids are NOT part of it,
+        # so the digest identifies grid *content* (what commit subtracts),
+        # which is what makes cross-partition place-memo hits sound.
+        salt = hash(v.tobytes())
+        h = (machine * _M1 ^ (start + 7) * _M2 ^ (k & _MASK) * _M3
+             ^ (salt & _MASK)) & _MASK
         h ^= h >> 29
         h = (h * _M1) & _MASK
         h ^= h >> 32
@@ -120,33 +161,36 @@ class ConstructionMemo:
         self._end[n] = start + k
         self._hash[n] = h
         self._n = n + 1
-        self.ckey ^= h
+        self.ckey = (self.ckey + h) & _MASK
 
-    def on_restore(self, n_placed: int) -> None:
+    def on_restore(self, n_placed: int, lo=None, hi=None) -> None:
         if n_placed < self._n:
-            dropped = self._hash[n_placed:self._n]
-            self.ckey ^= int(np.bitwise_xor.reduce(dropped))
+            dropped = int(np.sum(self._hash[n_placed:self._n],
+                                 dtype=np.uint64))
+            self.ckey = (self.ckey - dropped) & _MASK
         self._n = n_placed
 
     # -- windowed place memo -------------------------------------------
     def _window_digest(self, a: int, b: int) -> int:
-        """XOR over placements whose occupancy intersects logical [a, b)."""
+        """Sum (mod 2^64) over placements intersecting logical [a, b)."""
         n = self._n
         if n == 0:
             return 0
         mask = (self._end[:n] > a) & (self._start[:n] < b)
         if not mask.any():
             return 0
-        return int(np.bitwise_xor.reduce(self._hash[:n][mask]))
+        return int(np.sum(self._hash[:n][mask], dtype=np.uint64))
 
     def place_get(self, direction: str, vb: bytes, k: int,
                   anchor: int) -> tuple[int, int] | None:
         lst = self._place.get((direction, vb, k, anchor))
         if not lst:
             return None
-        for b0, b1, dig, m, t0 in lst:
+        for b0, b1, dig, m, t0, epoch in lst:
             if self._window_digest(b0, b1) == dig:
                 COUNTERS["places_memoized"] += 1
+                if epoch != self._epoch:
+                    COUNTERS["places_memoized_xpart"] += 1
                 return m, t0
         return None
 
@@ -156,7 +200,7 @@ class ConstructionMemo:
         # rejected plus the slot it took (see module docstring)
         b0, b1 = (anchor, t0 + k) if forward else (t0, anchor)
         lst = self._place.setdefault((direction, vb, k, anchor), [])
-        lst.append((b0, b1, self._window_digest(b0, b1), m, t0))
+        lst.append((b0, b1, self._window_digest(b0, b1), m, t0, self._epoch))
         if len(lst) > PLACE_ENTRY_CAP:
             del lst[0]
 

@@ -16,6 +16,14 @@ persistent `TaskPool` maintains incrementally (no per-heartbeat object
 rebuilds; see "online data path" in docs/architecture.md).
 `Matcher.find_tasks_for_machine` is the object-list compatibility wrapper
 over the same core.
+
+The bundling loop's own float ops stay numpy float64 on purpose: picks,
+overbook flags and EMA observations are *decisions* and must be
+bit-identical to the historical matcher.  The skip-only front half of a
+heartbeat — which machines could start anything at all — goes through the
+kernel-dispatch layer instead (`core/engine/kernels.
+machines_with_candidates`, called by `sim/cluster.py`), where any sound
+superset implementation is decision-exact.
 """
 
 from __future__ import annotations

@@ -89,15 +89,28 @@ class Space:
         # copy of the overwritten cells) — restoring copies the exact bits
         # back, so rollback is float-exact (no subtract/re-add drift).
         self._undo: list[tuple[int, int, np.ndarray]] = []
-        # optional mirror of the placement list (core/memo.py keeps its
-        # content digests exact through commits AND rollbacks via these
-        # two callbacks)
-        self.observer = None
+        # optional mirrors of the grid/placement state.  Each observer gets
+        #   on_commit(task, machine, start, k, v)    after every commit
+        #   on_restore(n_placed, lo, hi)             after every restore,
+        # where [lo, hi) is the logical tick range whose cell values were
+        # rewritten (None/None when nothing was undone).  core/memo.py keeps
+        # its content digests exact through these; the jit engine keeps a
+        # device-resident grid mirror in sync the same way.
+        self.observers: list = []
+
+    # ------------------------------------------------------------------
+    def add_observer(self, obs) -> None:
+        if obs not in self.observers:
+            self.observers.append(obs)
+
+    def remove_observer(self, obs) -> None:
+        if obs in self.observers:
+            self.observers.remove(obs)
 
     # ------------------------------------------------------------------
     def clone(self) -> "Space":
         s = Space.__new__(Space)
-        s.observer = None      # digests mirror ONE space; clones start fresh
+        s.observers = []       # mirrors track ONE space; clones start fresh
         s.version = self.version
         s.m, s.d, s.tick, s.T, s.off = self.m, self.d, self.tick, self.T, self.off
         s.avail = self.avail.copy()
@@ -134,18 +147,23 @@ class Space:
         the shrink — needed when commits recorded after the snapshot will be
         replayed into the (possibly grown) region right away.
         """
+        lo = hi = None   # logical range of rewritten cells, for observers
         for machine, start, vals in reversed(self._undo[snap.n_undo:]):
             ps = start + self.off
             self.avail[machine, ps : ps + len(vals), :] = vals
+            if lo is None or start < lo:
+                lo = start
+            if hi is None or start + len(vals) > hi:
+                hi = start + len(vals)
         del self._undo[snap.n_undo:]
         del self.placements[snap.n_placed:]
-        if self.observer is not None:
-            self.observer.on_restore(snap.n_placed)
         self.version += 1
         if not keep_extent and (self.T != snap.T or self.off != snap.off):
-            lo = self.off - snap.off   # growth only ever extends, off >= snap.off
-            self.avail = np.ascontiguousarray(self.avail[:, lo : lo + snap.T, :])
+            shift = self.off - snap.off  # growth only ever extends, off >= snap.off
+            self.avail = np.ascontiguousarray(self.avail[:, shift : shift + snap.T, :])
             self.T, self.off = snap.T, snap.off
+        for obs in self.observers:
+            obs.on_restore(snap.n_placed, lo, hi)
         self._min_start = snap.min_start
         self._max_end = snap.max_end
 
@@ -301,8 +319,8 @@ class Space:
             raise RuntimeError("over-committed space")
         p = Placement(task, machine, start, start + k)
         self.placements.append(p)
-        if self.observer is not None:
-            self.observer.on_commit(task, machine, start, k)
+        for obs in self.observers:
+            obs.on_commit(task, machine, start, k, v)
         self._min_start = start if self._min_start is None else min(self._min_start, start)
         self._max_end = start + k if self._max_end is None else max(self._max_end, start + k)
         return p

@@ -1,0 +1,12 @@
+"""Placement-scan Pallas ops: windowed feasibility scan + heartbeat match.
+
+Follows the repo kernel convention:
+  ref.py    — pure-jnp oracle
+  kernel.py — Pallas kernels (TPU target, interpret-validated)
+  ops.py    — jit'd entry: kernel on TPU, interpret elsewhere
+
+Registered as the ``pallas`` implementations of the ``scan`` and
+``machines_with_candidates`` ops in ``core/engine/kernels.py``.
+"""
+
+from . import kernel, ops, ref  # noqa: F401

@@ -1,0 +1,110 @@
+"""Placement-scan Pallas kernels (TPU target, interpret-validated).
+
+Two kernels back the scheduler's accelerator path:
+
+``scan_bitmaps`` — the windowed feasibility scan.  One program per task
+row: the whole (m, L, d) window sits in VMEM (the builder's windows are a
+few hundred ticks over a handful of machines — tens of KB), the demand row
+and duration arrive per-program, and the run-length test is one cumsum
+along the tick axis followed by a *scalar-start* dynamic slice: per-row
+durations come from SMEM, so the shifted-cumsum subtraction needs no
+gather (gathers lower poorly on TPU; ``pl.ds`` with an SMEM scalar is
+cheap).  All comparisons are float32-vs-float32 (demands pre-rounded with
+``ceil32`` by the caller) and run counting is int32, so the bitmaps are
+bit-identical to the numpy and XLA implementations.
+
+``heartbeat_eligible`` — the online matcher's machine-eligibility test.
+One program per candidate block: the candidate's rounded demand row is
+compared against the three per-machine threshold matrices (fit / rigid /
+fungible-with-slack, dims selected by {0,1} masks so the kernel shape does
+not depend on the config's dim subsets).
+
+Tiling note: the arrays here are small and oddly shaped for the MXU
+(machines ~O(10), resources d=4); the kernels are written for correctness
+under both interpret mode and Mosaic's small-array padding, not for peak
+TPU throughput — the scan is launch-latency-bound, which is exactly what
+the device-resident session amortizes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scan_kernel(ks_ref, tlive_ref, win_ref, vs_ref, out_ref, *,
+                 W: int, L: int):
+    k = ks_ref[pl.program_id(0)]
+    tlive = tlive_ref[0]
+    win = win_ref[...]                                   # (m, L, d)
+    v = vs_ref[0]                                        # (d,)
+    ok = (win >= v[None, None, :]).all(axis=2)           # (m, L)
+    live = jax.lax.broadcasted_iota(jnp.int32, (1, L), 1) < tlive
+    ok = ok & live
+    c = jnp.cumsum(ok.astype(jnp.int32), axis=1)         # (m, L)
+    cz = jnp.concatenate(
+        [jnp.zeros((win.shape[0], 1), jnp.int32), c], axis=1)  # (m, L+1)
+    # run[w] = cz[w + k] - cz[w]: the k-shift is a scalar dynamic slice,
+    # no per-row gather (k comes from SMEM)
+    hi = jax.lax.dynamic_slice(cz, (0, k), (win.shape[0], W))
+    run = hi - cz[:, :W]                                 # (m, W)
+    out_ref[0] = (run == k).astype(jnp.int8).T           # (W, m)
+
+
+def scan_bitmaps(win: jax.Array, Vs: jax.Array, ks: jax.Array, t_live,
+                 W: int, *, interpret: bool = True) -> jax.Array:
+    """win (m, L, d) f32; Vs (g, d) f32; ks (g,) i32 -> (g, W, m) int8.
+
+    Requires L >= W + max(ks) (the dynamic k-slice must stay in bounds);
+    the caller pads the window and masks the padding via ``t_live``.
+    """
+    m, L, d = win.shape
+    g = Vs.shape[0]
+    kern = functools.partial(_scan_kernel, W=W, L=L)
+    grid = (g,)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((g,), lambda i: (0,)),              # ks (SMEM-ish)
+            pl.BlockSpec((1,), lambda i: (0,)),              # t_live
+            pl.BlockSpec((m, L, d), lambda i: (0, 0, 0)),    # full window
+            pl.BlockSpec((1, d), lambda i: (i, 0)),          # demand row
+        ],
+        out_specs=pl.BlockSpec((1, W, m), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, W, m), jnp.int8),
+        interpret=interpret,
+    )(ks, jnp.asarray([t_live], jnp.int32), win, Vs)
+
+
+def _elig_kernel(dem_ref, tf_ref, tr_ref, tg_ref, out_ref):
+    dm = dem_ref[0][None, :]                             # (1, d)
+    fits = (dm <= tf_ref[...]).all(axis=1)               # (m,)
+    rigid = (dm <= tr_ref[...]).all(axis=1)
+    fung = (dm <= tg_ref[...]).all(axis=1)
+    out_ref[0] = (fits | (rigid & fung)).astype(jnp.int8)
+
+
+def heartbeat_eligible(dem32: jax.Array, thr_fit: jax.Array,
+                       thr_fung: jax.Array, fd_mask: jax.Array,
+                       rd_mask: jax.Array, gd_mask: jax.Array, *,
+                       interpret: bool = True) -> jax.Array:
+    """dem32 (n, d); thr_* (m, d); masks (d,) f32 {0,1} -> (n, m) int8."""
+    n, d = dem32.shape
+    m = thr_fit.shape[0]
+    inf = jnp.float32(jnp.inf)
+    tf = jnp.where(fd_mask > 0, thr_fit, inf)
+    tr = jnp.where(rd_mask > 0, thr_fit, inf)
+    tg = jnp.where(gd_mask > 0, thr_fung, inf)
+    full = pl.BlockSpec((m, d), lambda i: (0, 0))
+    return pl.pallas_call(
+        _elig_kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, d), lambda i: (i, 0)), full, full, full],
+        out_specs=pl.BlockSpec((1, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.int8),
+        interpret=interpret,
+    )(dem32, tf, tr, tg)

@@ -1,0 +1,37 @@
+"""Jit'd entry: Pallas kernel on TPU, interpret elsewhere, ref fallback."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from . import kernel, ref
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+@partial(jax.jit, static_argnames=("W", "use_kernel"))
+def scan_bitmaps(win, Vs, ks, t_live, *, W: int, use_kernel: bool = True):
+    """Feasible-start bitmaps (g, W, m) int8; see kernel.scan_bitmaps."""
+    if not use_kernel:
+        return ref.scan_bitmaps(win, Vs, ks, t_live, W)
+    return kernel.scan_bitmaps(win, Vs, ks, t_live, W,
+                               interpret=not _on_tpu())
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def heartbeat_eligible(dem32, thr_fit, thr_fung, fd_mask, rd_mask, gd_mask,
+                       *, use_kernel: bool = True):
+    """Sound-superset heartbeat eligibility (n, m) int8."""
+    if not use_kernel:
+        return ref.heartbeat_eligible(dem32, thr_fit, thr_fung,
+                                      fd_mask, rd_mask, gd_mask)
+    return kernel.heartbeat_eligible(dem32, thr_fit, thr_fung,
+                                     fd_mask, rd_mask, gd_mask,
+                                     interpret=not _on_tpu())

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for the placement-scan ops.
+
+Semantics mirror the numpy kernels in ``core/engine/kernels.py``:
+
+  * ``scan_bitmaps`` — feasible-start bitmaps: bit (g, w, machine) says
+    whether task g's demand fits machine for ks[g] consecutive ticks
+    starting at window offset w, counting only ticks < t_live.
+  * ``heartbeat_eligible`` — sound-superset heartbeat eligibility over
+    directed-rounded float32 operands (see the dispatch layer's module
+    docstring for the soundness argument).
+
+Both are exact integer/boolean pipelines over float32 comparisons, so the
+Pallas kernels must match them bit-for-bit (tests/test_placement_kernels).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def scan_bitmaps(win: jax.Array, Vs: jax.Array, ks: jax.Array,
+                 t_live, W: int) -> jax.Array:
+    """win (m, L, d) f32; Vs (g, d) f32; ks (g,) i32 -> (g, W, m) int8.
+
+    Requires L >= W + max(ks) so every run read stays in bounds; ticks at
+    index >= t_live never count toward a run (grid-edge truncation).
+    """
+    m, L, _d = win.shape
+    ok = (win[None, :, :, :] >= Vs[:, None, None, :]).all(axis=3)  # (g, m, L)
+    ok = ok & (jnp.arange(L) < t_live)[None, None, :]
+    c = jnp.cumsum(ok.astype(jnp.int32), axis=2)
+    cz = jnp.pad(c, ((0, 0), (0, 0), (1, 0)))                      # (g, m, L+1)
+    ends = jnp.arange(W)[None, :] + ks[:, None]                    # (g, W)
+    take = jnp.broadcast_to(ends[:, None, :], (Vs.shape[0], m, W))
+    run = jnp.take_along_axis(cz, take, axis=2) - cz[:, :, :W]
+    good = run == ks[:, None, None]                                # (g, m, W)
+    return jnp.swapaxes(good, 1, 2).astype(jnp.int8)               # (g, W, m)
+
+
+def heartbeat_eligible(dem32: jax.Array, thr_fit: jax.Array,
+                       thr_fung: jax.Array, fd_mask: jax.Array,
+                       rd_mask: jax.Array, gd_mask: jax.Array) -> jax.Array:
+    """dem32 (n, d); thr_* (m, d); *_mask (d,) f32 {0,1} -> (n, m) int8.
+
+    eligible = fits-on-all-fit-dims OR (rigid dims fit AND fungible dims
+    fit within slack); masked-out dims compare against +inf.
+    """
+    inf = jnp.float32(jnp.inf)
+    tf = jnp.where(fd_mask > 0, thr_fit, inf)[None, :, :]
+    tr = jnp.where(rd_mask > 0, thr_fit, inf)[None, :, :]
+    tg = jnp.where(gd_mask > 0, thr_fung, inf)[None, :, :]
+    dm = dem32[:, None, :]
+    fits = (dm <= tf).all(axis=2)
+    rigid = (dm <= tr).all(axis=2)
+    fung = (dm <= tg).all(axis=2)
+    return (fits | (rigid & fung)).astype(jnp.int8)

@@ -138,6 +138,74 @@ class TestWindowedPlaceMemo:
         assert memo.place_get(FORWARD, vb, 3, 0) is None
 
 
+class TestCrossPartitionMemo:
+    def test_periodic_dag_hits_across_partitions_bit_identical(self):
+        """A recurring-pipeline DAG (identical phases behind barriers)
+        splits into identical sub-builds; the content-addressed place memo
+        of period 1 must serve periods 2..P — and stay bit-identical to
+        the no-memo build on every backend."""
+        from repro.core.memo import reset_counters
+        from repro.sim.workload import periodic_dag
+
+        dag = periodic_dag(np.random.default_rng(2))
+        assert len(partition_totally_ordered(dag)) > 3
+        reset_counters()
+        memo = build_schedule(dag, 4, memoize=True)
+        assert COUNTERS["places_memoized_xpart"] > 0, \
+            "cross-partition lever is dead on its home workload"
+        plain = build_schedule(dag, 4, memoize=False)
+        ref = build_schedule(dag, 4, memoize=False, backend="reference")
+        for other in (plain, ref):
+            assert memo.makespan == other.makespan
+            assert np.array_equal(memo.start, other.start)
+            assert np.array_equal(memo.machine, other.machine)
+
+    def test_attach_keeps_place_memo_drops_pass_memo(self):
+        s1 = Space(2, 1, 32)
+        memo = ConstructionMemo(s1)
+        vb = np.float32(0.5).tobytes()
+        memo.place_put(FORWARD, vb, 2, 0, True, m=0, t0=0)
+        memo.pass_put(memo.pass_key(np.array([0]), FORWARD), 2, [(0, 0, 0)])
+        assert len(memo._pass) == 1
+        s2 = Space(2, 1, 32)
+        memo.attach(s2)
+        assert memo.space is s2 and memo._n == 0 and memo.ckey == 0
+        assert len(memo._pass) == 0, "pass plans must not cross partitions"
+        # the place entry survives and now counts as a cross-partition hit
+        before = COUNTERS["places_memoized_xpart"]
+        assert memo.place_get(FORWARD, vb, 2, 0) == (0, 0)
+        assert COUNTERS["places_memoized_xpart"] == before + 1
+
+    def test_duplicate_slot_digest_multiplicity(self):
+        """Two identical tasks legally sharing one (machine, start) slot:
+        the additive digest must distinguish 0, 1 and 2 copies (an XOR
+        multiset hash cancels the pair — the bug class the periodic
+        workload exposed)."""
+        space = Space(1, 1, 32)
+        memo = ConstructionMemo(space)
+        v = np.array([0.3])
+        d0 = memo._window_digest(0, 8)
+        space.commit(0, 0, 2, 3, v)
+        d1 = memo._window_digest(0, 8)
+        space.commit(1, 0, 2, 3, v)      # identical content, same slot
+        d2 = memo._window_digest(0, 8)
+        assert d0 != d1 and d1 != d2 and d0 != d2
+
+    def test_digest_is_content_addressed_not_task_addressed(self):
+        """Same (machine, start, k, demand) committed under different task
+        ids must digest identically — that is what makes cross-partition
+        hits sound."""
+        a, b = Space(1, 1, 32), Space(1, 1, 32)
+        ma, mb = ConstructionMemo(a), ConstructionMemo(b)
+        a.commit(3, 0, 2, 3, np.array([0.4]))
+        b.commit(7, 0, 2, 3, np.array([0.4]))   # different task id
+        assert ma.ckey == mb.ckey
+        b2 = Space(1, 1, 32)
+        mb2 = ConstructionMemo(b2)
+        b2.commit(7, 0, 2, 3, np.array([0.5]))  # different demand
+        assert mb2.ckey != ma.ckey
+
+
 class TestDegenerateDags:
     def test_zero_task_dag(self):
         d = DAG(duration=np.empty(0), demand=np.empty((0, 2)),

@@ -1,0 +1,412 @@
+"""Kernel-dispatch layer tests (core/engine/kernels.py + kernels/placement_scan).
+
+Three contracts, each locked here:
+
+  * the windowed feasibility scan is BIT-IDENTICAL across the numpy, xla
+    and pallas (interpret mode) implementations over the full engine
+    corpus's grid states — float32 compare + integer run counting leave
+    no room for drift, and ``ceil32`` makes the float32 demand rounding
+    exact (hypothesis property test);
+  * the accelerated heartbeat ops are sound SUPERSETS of the exact numpy
+    masks (directed rounding can only add eligibility, never drop it),
+    which makes them decision-exact for their skip-only consumers — the
+    full simulator produces identical results under every implementation;
+  * the jit backend's device-resident session (persistent grid mirror,
+    async lazy rows) returns exactly what the numpy kernel returns, under
+    commits, rollbacks and growth in both directions.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import DAG, Space, build_schedule
+from repro.core.engine import JitBackend, kernels, packing
+from repro.core.engine.base import ceil32
+
+HAVE_JAX = kernels.have_jax()
+needs_jax = pytest.mark.skipif(not HAVE_JAX, reason="jax unavailable")
+
+
+def _cluttered_space(seed, m=None, d=None, horizon=None, commits=30):
+    rng = np.random.default_rng(seed)
+    m = m or int(rng.integers(1, 9))
+    d = d or int(rng.integers(1, 5))
+    s = Space(m=m, d=d, horizon=horizon or int(rng.integers(32, 200)))
+    for t in range(commits):
+        v = rng.uniform(0.1, 0.6, s.d)
+        k = int(rng.integers(1, 12))
+        mm, t0 = s.earliest_fit(v, k, int(rng.integers(0, 60)))
+        s.commit(t, mm, t0, k, v)
+    return s, rng
+
+
+class TestScanParity:
+    """All scan implementations agree bit-for-bit."""
+
+    @needs_jax
+    def test_random_grids_all_impls(self):
+        for seed in range(8):
+            s, rng = _cluttered_space(seed)
+            g = int(rng.integers(1, 30))
+            Vs = ceil32(rng.uniform(0.2, 0.8, (g, s.d)))
+            ks = rng.integers(1, 160, g)   # crosses the LONG_K bucket edge
+            plo = int(rng.integers(0, 10))
+            phi = int(rng.integers(plo + 5, s.T))
+            for rev in (False, True):
+                ref = kernels.scan_starts(s.avail, Vs, ks, plo, phi, rev)
+                xla = kernels._scan_xla(s.avail, Vs, ks, plo, phi, rev)
+                assert np.array_equal(ref, xla), f"xla != numpy (seed {seed})"
+
+    @needs_jax
+    def test_pallas_interpret_matches_numpy(self):
+        for seed in range(4):
+            s, rng = _cluttered_space(seed, commits=20)
+            g = int(rng.integers(1, 12))
+            Vs = ceil32(rng.uniform(0.2, 0.8, (g, s.d)))
+            ks = rng.integers(1, 12, g)
+            phi = min(s.T, 40)
+            for rev in (False, True):
+                ref = kernels.scan_starts(s.avail, Vs, ks, 0, phi, rev)
+                pal = kernels._scan_pallas(s.avail, Vs, ks, 0, phi, rev)
+                assert np.array_equal(ref, pal), f"pallas != numpy (seed {seed})"
+
+    @needs_jax
+    def test_pallas_ref_oracle_matches_kernel(self):
+        """kernel.py (interpret) vs ref.py on identical padded operands."""
+        from repro.kernels.placement_scan import kernel as psk, ref as psr
+
+        rng = np.random.default_rng(7)
+        m, L, d, g, W = 3, 96, 2, 8, 48
+        win = rng.uniform(0.0, 1.0, (m, L, d)).astype(np.float32)
+        Vs = rng.uniform(0.2, 0.8, (g, d)).astype(np.float32)
+        ks = rng.integers(1, 40, g).astype(np.int32)
+        a = np.asarray(psk.scan_bitmaps(win, Vs, ks, 80, W, interpret=True))
+        b = np.asarray(psr.scan_bitmaps(win, Vs, ks, 80, W))
+        assert np.array_equal(a != 0, b != 0)
+
+    def test_dispatch_env_selection_and_fallback(self, monkeypatch):
+        monkeypatch.setenv(kernels.KERNELS_ENV, "scan=xla")
+        impl, _fn = kernels.resolve("scan")
+        assert impl == ("xla" if HAVE_JAX else "numpy")
+        monkeypatch.setenv(kernels.KERNELS_ENV, "all=numpy")
+        assert kernels.active() == {op: "numpy" for op in kernels.OPS}
+        if HAVE_JAX:
+            # all=<impl> must not accelerate the decision-capable ops —
+            # those require an explicit per-op opt-in
+            monkeypatch.setenv(kernels.KERNELS_ENV, "all=xla")
+            act = kernels.active()
+            assert act["scan"] == act["machines_with_candidates"] == "xla"
+            for op in kernels.EXPLICIT_ONLY:
+                assert act[op] == "numpy"
+            monkeypatch.setenv(kernels.KERNELS_ENV, "heartbeat_masks=xla")
+            assert kernels.active()["heartbeat_masks"] == "xla"
+        monkeypatch.setenv(kernels.KERNELS_ENV, "scan=nope")
+        with pytest.raises(ValueError):
+            kernels.resolve("scan")
+        monkeypatch.setenv(kernels.KERNELS_ENV, "bogus_op=numpy")
+        with pytest.raises(ValueError):
+            kernels.resolve("scan")
+        monkeypatch.delenv(kernels.KERNELS_ENV)
+        # pack_score / heartbeat_masks stay numpy unless explicitly pinned
+        assert kernels.resolve("pack_score")[0] == "numpy"
+        assert kernels.resolve("heartbeat_masks")[0] == "numpy"
+
+    @needs_jax
+    def test_dispatch_routes_scan_through_xla(self, monkeypatch):
+        monkeypatch.setenv(kernels.KERNELS_ENV, "scan=xla")
+        s, rng = _cluttered_space(11, commits=15)
+        Vs = ceil32(rng.uniform(0.2, 0.8, (3, s.d)))
+        ks = rng.integers(1, 8, 3)
+        got = kernels.scan(s.avail, Vs, ks, 0, 30, False)
+        ref = kernels.scan_starts(s.avail, Vs, ks, 0, 30, False)
+        assert np.array_equal(got, ref)
+        assert kernels.PROFILE.get("scan.xla", [0])[0] > 0
+
+
+class TestCeil32Exactness:
+    def test_seeded_boundaries(self):
+        rng = np.random.default_rng(0)
+        a = rng.uniform(0, 1, 4096).astype(np.float32)
+        v = a.astype(np.float64) + rng.uniform(-1e-9, 1e-9, 4096)
+        assert np.array_equal(a >= v, a >= ceil32(v))
+
+    def test_hypothesis_boundary_exactness(self):
+        """For any float32 grid cell a and float64 demand v:
+        (a >= v) == (a >= ceil32(v)) — the scan's float32 compare is exact."""
+        hypothesis = pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        f32 = st.floats(min_value=0.0, max_value=2.0, width=32,
+                        allow_nan=False)
+        ulp = st.integers(min_value=-4, max_value=4)
+        off = st.floats(min_value=-1e-7, max_value=1e-7, allow_nan=False)
+
+        @settings(max_examples=300, deadline=None)
+        @given(f32, ulp, off)
+        def check(a32, n, eps):
+            a = np.float32(a32)
+            # adversarial demand: a few float64 ulps around the grid value
+            v = np.float64(a)
+            for _ in range(abs(n)):
+                v = np.nextafter(v, np.inf if n > 0 else -np.inf)
+            v = v + eps
+            c = ceil32(np.asarray([v]))[0]
+            assert bool(a >= v) == bool(a >= c)
+
+        check()
+
+
+class TestHeartbeatSuperset:
+    def _rand_state(self, rng, n, m, d=4):
+        avail = rng.uniform(-0.05, 1.0, (m, d))
+        dem = rng.uniform(0.0, 0.9, (n, d))
+        return avail, dem
+
+    @needs_jax
+    def test_superset_property_seeded(self):
+        fd, rd, gd = np.arange(4), np.array([0, 1]), np.array([2, 3])
+        rng = np.random.default_rng(2)
+        for trial in range(40):
+            n, m = int(rng.integers(1, 20)), int(rng.integers(1, 40))
+            avail, dem = self._rand_state(rng, n, m)
+            slack = float(rng.uniform(0.0, 0.5))
+            ob = bool(rng.integers(0, 2))
+            exact, any_exact = packing.machines_with_candidates(
+                avail, dem, fd, rd, gd, slack, ob)
+            sup, any_sup = kernels._machines_with_candidates_xla(
+                avail, dem, fd, rd, gd, slack, ob)
+            assert (exact <= sup).all(), "xla dropped an eligible pair"
+            assert (any_exact <= any_sup).all()
+            pal, any_pal = kernels._machines_with_candidates_pallas(
+                avail, dem, fd, rd, gd, slack, ob)
+            assert (exact <= pal).all(), "pallas dropped an eligible pair"
+            assert np.array_equal(sup, pal), "xla and pallas disagree"
+
+    @needs_jax
+    def test_superset_property_hypothesis(self):
+        hypothesis = pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        fd, rd, gd = np.arange(4), np.array([0, 1]), np.array([2, 3])
+        finite = st.floats(min_value=0.0, max_value=1.0, allow_nan=False)
+
+        @settings(max_examples=60, deadline=None)
+        @given(st.integers(0, 2**31 - 1), finite, finite)
+        def check(seed, a0, d0):
+            rng = np.random.default_rng(seed)
+            avail, dem = self._rand_state(rng, 4, 6)
+            # plant an exact-boundary pair: demand == avail on dim 0
+            avail[0, 0] = a0
+            dem[0, 0] = a0
+            dem[1, 0] = d0
+            exact, _ = packing.machines_with_candidates(
+                avail, dem, fd, rd, gd, 0.25, True)
+            sup, _ = kernels._machines_with_candidates_xla(
+                avail, dem, fd, rd, gd, 0.25, True)
+            assert (exact <= sup).all()
+
+        check()
+
+    @needs_jax
+    def test_heartbeat_masks_xla_union_superset(self):
+        fd, rd, gd = np.arange(4), np.array([0, 1]), np.array([2, 3])
+        rng = np.random.default_rng(6)
+        for _ in range(10):
+            avail, dem = self._rand_state(rng, 8, 12)
+            fits_e, over_e = packing.heartbeat_masks(avail, dem, fd, rd, gd,
+                                                     0.25, True)
+            fits_x, over_x = kernels._heartbeat_masks_xla(avail, dem, fd, rd,
+                                                          gd, 0.25, True)
+            # only the union is contract-bearing (see kernels module doc)
+            assert ((fits_e | over_e) <= (fits_x | over_x)).all()
+            assert (fits_e <= fits_x).all()
+
+    @needs_jax
+    def test_fits_mask_and_pack_score_xla_shapes(self):
+        rng = np.random.default_rng(8)
+        avail = rng.uniform(0, 1, (5, 4))
+        dem = rng.uniform(0, 0.8, (3, 4))
+        # fits_mask xla is a superset of the exact mask, all shape variants
+        assert (packing.fits_mask(avail, dem)
+                <= kernels._fits_mask_xla(avail, dem)).all()
+        assert (packing.fits_mask(avail[0], dem[0])
+                <= kernels._fits_mask_xla(avail[0], dem[0])).all()
+        assert kernels._fits_mask_xla(avail, dem, dims=np.empty(0, int)).all()
+        got = kernels._fits_mask_xla(avail, dem, dims=[0, 2], slack=0.1)
+        assert got.shape == (3, 5)
+        # pack_score xla: float32 — close to, not identical with, the oracle
+        np.testing.assert_allclose(kernels._pack_score_xla(avail, dem),
+                                   packing.pack_score(avail, dem), rtol=1e-5)
+        np.testing.assert_allclose(
+            kernels._pack_score_xla(avail[0], dem, clip=True),
+            packing.pack_score(avail[0], dem, clip=True), rtol=1e-5)
+
+    @needs_jax
+    def test_empty_candidate_batch_shapes(self):
+        fd, rd, gd = np.arange(4), np.array([0, 1]), np.array([2, 3])
+        avail = np.ones((3, 4))
+        dem = np.empty((0, 4))
+        for fn in (kernels._machines_with_candidates_xla,
+                   kernels._machines_with_candidates_pallas):
+            elig, any_m = fn(avail, dem, fd, rd, gd, 0.25, True)
+            assert elig.shape == (0, 3) and any_m.shape == (3,)
+            assert not any_m.any()
+        fits, over = kernels._heartbeat_masks_xla(avail, dem, fd, rd, gd,
+                                                  0.25, True)
+        assert fits.shape == over.shape == (0, 3)
+
+    @needs_jax
+    def test_sim_decisions_identical_under_xla_heartbeat(self, monkeypatch):
+        """The whole simulator — picks, JCTs, makespan — is bit-identical
+        when the heartbeat eligibility runs through the xla superset
+        implementation (the skip-only consumer argument)."""
+        from repro.sim import make_workload, run_workload
+
+        dags = make_workload("tpcds", 4, seed=5)
+        monkeypatch.delenv(kernels.KERNELS_ENV, raising=False)
+        base = run_workload(dags, "dagps", n_machines=12, interarrival=5.0,
+                            seed=5)
+        monkeypatch.setenv(kernels.KERNELS_ENV,
+                           "machines_with_candidates=xla")
+        xla = run_workload(dags, "dagps", n_machines=12, interarrival=5.0,
+                           seed=5)
+        assert base.makespan == xla.makespan
+        assert np.array_equal(base.jcts(), xla.jcts())
+        assert kernels.PROFILE.get(
+            "machines_with_candidates.xla", [0])[0] > 0
+
+
+@needs_jax
+class TestDeviceResidentSession:
+    def _drain(self, goods, g):
+        """Materialize a scan_kernel result (ndarray or lazy loaders)."""
+        if isinstance(goods, np.ndarray):
+            return goods
+        return np.stack([goods[i]() for i in range(g)])
+
+    def test_device_scan_matches_numpy_under_mutation(self, monkeypatch):
+        from repro.core.engine import jit as J
+
+        monkeypatch.setattr(J, "MIN_DEVICE_G", 1)
+        be = JitBackend()
+        rng = np.random.default_rng(9)
+        s = Space(m=4, d=3, horizon=64)
+        snaps = []
+        for round_ in range(60):
+            op = rng.random()
+            if op < 0.5:
+                v = rng.uniform(0.1, 0.5, 3)
+                k = int(rng.integers(1, 10))
+                mm, t0 = s.earliest_fit(v, k, int(rng.integers(0, 40)))
+                s.commit(round_, mm, t0, k, v)
+            elif op < 0.6:
+                (s._grow_front if rng.random() < 0.5 else s._grow_back)()
+            elif op < 0.75 or not snaps:
+                snaps.append(s.snapshot())
+            else:
+                s.restore(snaps.pop())
+            g = int(rng.integers(2, 12))
+            Vs = ceil32(rng.uniform(0.2, 0.7, (g, 3)))
+            ks = rng.integers(1, 12, g)
+            plo = int(rng.integers(0, max(s.T - 10, 1)))
+            phi = int(rng.integers(plo + 2, s.T))
+            rev = bool(rng.integers(0, 2))
+            got = self._drain(be.scan_kernel(s, Vs, ks, plo, phi, rev), g)
+            ref = kernels.scan_starts(s.avail, Vs, ks, plo, phi, rev)
+            assert np.array_equal(got, ref), f"device != numpy (round {round_})"
+
+    def test_async_rows_capture_launch_state(self, monkeypatch):
+        """A lazy row materialized AFTER later commits must reflect the
+        grid as of the launch, exactly like a synchronous scan would."""
+        from repro.core.engine import jit as J
+
+        monkeypatch.setattr(J, "MIN_DEVICE_G", 1)
+        be = JitBackend()
+        s = Space(m=2, d=1, horizon=32)
+        Vs = ceil32(np.full((3, 1), 0.6))
+        ks = np.array([2, 2, 2])
+        goods = be.scan_kernel(s, Vs, ks, 0, 16, False)
+        ref = kernels.scan_starts(s.avail, Vs, ks, 0, 16, False)
+        s.commit(0, 0, 0, 16, np.array([1.0]))   # machine 0 now fully busy
+        got = self._drain(goods, 3)
+        assert np.array_equal(got, ref), "lazy row leaked post-launch state"
+
+    def test_min_batch_one_single_task_scan(self, monkeypatch):
+        """REPRO_JIT_MIN_BATCH=1 (the accelerator setting) must not crash
+        g=1 scans — the hybrid split needs a peer row, so singletons take
+        the numpy path regardless of the threshold."""
+        from repro.core.engine import jit as J
+
+        monkeypatch.setattr(J, "MIN_DEVICE_G", 1)
+        be = JitBackend()
+        s = Space(m=2, d=1, horizon=32)
+        Vs = ceil32(np.full((1, 1), 0.5))
+        got = be.scan_kernel(s, Vs, np.array([3]), 0, 16, False)
+        ref = kernels.scan_starts(s.avail, Vs, np.array([3]), 0, 16, False)
+        assert np.array_equal(self._drain(got, 1), ref)
+
+    def test_warm_rebuild_compiles_nothing(self):
+        """Steady state: after one warm-up build of a DAG shape, repeat
+        builds hit only cached scan/update buckets — zero compiles, zero
+        evictions (the invariant behind the bench's jit_retraces row;
+        first builds compile their buffer-length buckets on demand, which
+        the bench's untimed warm-up absorbs)."""
+        from repro.sim.workload import production_dag
+        from repro.core import build_schedule as bs
+
+        dag = production_dag(np.random.default_rng(5), scale=0.35, share=3)
+        bs(dag, 3, backend="jit")          # warm-up: compiles on demand
+        n0 = kernels.XLA_STATS["compiles"]
+        e0 = kernels.XLA_STATS["evictions"]
+        bs(dag, 3, backend="jit")
+        assert kernels.XLA_STATS["compiles"] == n0, "bucket cache thrashed"
+        assert kernels.XLA_STATS["evictions"] == e0
+
+    def test_jit_build_parity_device_path_forced(self, monkeypatch):
+        from repro.core.engine import jit as J
+        from repro.sim.workload import production_dag
+
+        monkeypatch.setattr(J, "MIN_DEVICE_G", 2)
+        J.reset_profile()
+        dag = production_dag(np.random.default_rng(3), scale=0.35, share=3)
+        bat = build_schedule(dag, 3, ticks=96, backend="batched")
+        jit = build_schedule(dag, 3, ticks=96, backend="jit")
+        assert bat.makespan == jit.makespan
+        assert np.array_equal(bat.start, jit.start)
+        assert np.array_equal(bat.machine, jit.machine)
+        assert J.PROFILE["device_calls"] > 0, "device path never exercised"
+
+    def test_build_parity_under_forced_pallas_dispatch(self, monkeypatch):
+        """End-to-end: a build whose batched scans route through the
+        Pallas interpret kernels is bit-identical to the numpy build.
+        (Tiny DAG — interpret mode is orders of magnitude slower.)"""
+        rng = np.random.default_rng(4)
+        n = 12
+        dag = DAG(duration=rng.uniform(1, 6, n),
+                  demand=rng.uniform(0.1, 0.6, (n, 2)),
+                  stage_of=np.repeat(np.arange(4), 3),
+                  parents=[np.empty(0, np.int64)] * 3
+                  + [np.array([i - 3]) for i in range(3, n)])
+        monkeypatch.delenv(kernels.KERNELS_ENV, raising=False)
+        base = build_schedule(dag, 3, ticks=64, backend="batched")
+        monkeypatch.setenv(kernels.KERNELS_ENV, "scan=pallas")
+        pal = build_schedule(dag, 3, ticks=64, backend="batched")
+        assert base.makespan == pal.makespan
+        assert np.array_equal(base.start, pal.start)
+        assert np.array_equal(base.machine, pal.machine)
+        assert kernels.PROFILE.get("scan.pallas", [0])[0] > 0
+
+    def test_bucket_cache_bounded(self):
+        cache = kernels._BucketCache(lambda *k: object(), cap=4)
+        before = kernels.XLA_STATS["compiles"]
+        for i in range(10):
+            cache.get((i,))
+        assert len(cache) == 4
+        assert kernels.XLA_STATS["compiles"] - before == 10
+        assert kernels.XLA_STATS["evictions"] >= 6
+        # re-getting a cached key neither compiles nor evicts
+        n = kernels.XLA_STATS["compiles"]
+        cache.get((9,))
+        assert kernels.XLA_STATS["compiles"] == n

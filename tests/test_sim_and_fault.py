@@ -94,8 +94,10 @@ def test_profile_phase_times():
                        profile=True)
     pt = res.phase_times
     assert pt is not None
-    assert set(pt) == {"build", "match", "event", "total"}
+    assert set(pt) == {"build", "match", "event", "total", "heartbeat"}
     assert pt["total"] >= pt["build"] + pt["match"] - 1e-6
+    # the heartbeat kernel runs inside the match phase
+    assert pt["heartbeat"] <= pt["match"] + 1e-6
     assert all(v >= 0.0 for v in pt.values())
     # profiling must not perturb outputs
     plain = run_workload(dags, "dagps", n_machines=8, interarrival=5.0, seed=2)
