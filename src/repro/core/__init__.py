@@ -1,9 +1,10 @@
 """The paper's primary contribution: DAGPS scheduling (offline §4 + online §5 + bounds §6)."""
-from .dag import DAG, from_stage_graph
+from .dag import DAG, dag_digest, from_stage_graph
 from .space import Space, SpaceSnapshot
 from .engine import (BatchedBackend, JitBackend, PlacementBackend,
                      ReferenceBackend, available_backends, get_backend)
 from .builder import Schedule, build_schedule, partition_totally_ordered
+from .buildsvc import BuildHandle, BuildService, build_many
 from .memo import ConstructionMemo, counters_snapshot, reset_counters
 from .bounds import all_bounds, cp_length, mod_cp, new_lb, t_work
 from .baselines import (

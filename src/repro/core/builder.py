@@ -258,13 +258,13 @@ class _Placer:
             hit = memo.pass_get(pass_key)
             if hit is not None:
                 span, plan = hit
-                COUNTERS["passes_replayed"] += 1
+                COUNTERS.add("passes_replayed")
                 if limit is not None and span >= limit:
                     return False   # the live pass would abort mid-way
                 for t, m, t0 in plan:   # replay is commit-only: no searches
                     self._replay_commit(t, m, t0)
                 return True
-        COUNTERS["passes_run"] += 1
+        COUNTERS.add("passes_run")
         n_before = len(sp.placements)
         forward = direction == FORWARD
         in_subset = np.zeros(dag.n, dtype=bool)
@@ -319,7 +319,7 @@ class _Placer:
                 m, t0 = hit
                 self._replay_commit(t, m, t0)
             else:
-                COUNTERS["places_evaluated"] += 1
+                COUNTERS.add("places_evaluated")
                 key = (int(dag.stage_of[t]), float(anchor), self.vb64[t])
                 m, t0 = sess.place(t, demand[t], k, anchor, key, peers_fn, cap)
                 if memo is not None and m >= 0:
@@ -632,7 +632,7 @@ def _build_one(dag, m, ticks, n_long, n_frag, max_candidates, backend,
     for ci, t_mask in enumerate(cands):
         if best_span is not None and best_span <= lb:
             # the incumbent is provably unbeatable (strict-< consider)
-            COUNTERS["candidates_lb_skipped"] += len(cands) - ci
+            COUNTERS.add("candidates_lb_skipped", len(cands) - ci)
             break
         t_mask, o_mask, p_mask, c_mask = dag.split_subsets(t_mask)
         t_ids, o_ids = np.nonzero(t_mask)[0], np.nonzero(o_mask)[0]
@@ -752,7 +752,7 @@ def _try_orders(space, base, o_ids, p_ids, c_ids, t_mask,
                         bound_gate["hits"] += 1
                     # every remaining sibling subtree is abandoned (same
                     # all-skipped semantics as candidates_lb_skipped)
-                    COUNTERS["variants_bound_skipped"] += len(kids) - j
+                    COUNTERS.add("variants_bound_skipped", len(kids) - j)
                     break
             op, ids = segs[name]
             snap = space.snapshot()

@@ -13,11 +13,42 @@ the troublesome-task closure (§4.1), the subset split and NewLB (§6) all use.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Iterable, Sequence
 
 import numpy as np
 
 NRES = 4  # cores, memory, network, disk (paper §2.1)
+
+
+def dag_digest(dag: "DAG") -> bytes:
+    """Canonical 128-bit content digest of a DAG.
+
+    The one digest shared by the simulator's schedule cache, the build
+    service's dedup front (core/buildsvc.py) and bench harnesses:
+    ``build_schedule`` is a deterministic function of DAG *content*, so
+    equal digests may share one constructed schedule exactly.
+
+    Covers everything construction reads — per-task duration, demand,
+    stage and the dependency structure — and nothing it does not (names,
+    cached closures).  Parent lists are hashed as sorted id sets: edge
+    insertion order is presentation, not content (every consumer treats
+    a parent row as a set), so permuted-but-equal inputs collide by
+    design.  Task *ids* stay positional: schedules are id-indexed, so two
+    DAGs must only collide when every id means the same task — permuting
+    identical sibling tasks leaves all arrays (and the digest) unchanged,
+    while permuting distinguishable tasks changes them.
+    """
+    h = hashlib.blake2b(digest_size=16)
+    h.update(np.int64(dag.n).tobytes())
+    h.update(np.int64(dag.d).tobytes())
+    h.update(dag.duration.tobytes())
+    h.update(dag.demand.tobytes())
+    h.update(np.asarray(dag.stage_of, dtype=np.int64).tobytes())
+    for p in dag.parents:
+        h.update(np.sort(np.asarray(p, dtype=np.int64)).tobytes())
+        h.update(b";")
+    return h.digest()
 
 
 def _pack_reach(n: int, adj: Sequence[np.ndarray]) -> np.ndarray:

@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import abc
 import os
+import threading
 import typing
 from typing import TYPE_CHECKING, Callable, Sequence
 
@@ -173,6 +174,9 @@ class PlacementBackend(abc.ABC):
 
 _REGISTRY: dict[str, Callable[[], PlacementBackend]] = {}
 _INSTANCES: dict[str, PlacementBackend] = {}
+# backends are stateless-shareable, but the check-then-create below must
+# still be atomic so concurrent builds resolve ONE instance per name
+_INSTANCES_LOCK = threading.Lock()
 
 #: env var consulted when build_schedule is not given an explicit backend
 BACKEND_ENV = "REPRO_PLACEMENT_BACKEND"
@@ -195,6 +199,8 @@ def get_backend(which: str | PlacementBackend | None = None) -> PlacementBackend
     if name not in _REGISTRY:
         raise ValueError(f"unknown placement backend {name!r}; "
                          f"have {sorted(_REGISTRY)}")
-    if name not in _INSTANCES:
-        _INSTANCES[name] = _REGISTRY[name]()
-    return _INSTANCES[name]
+    with _INSTANCES_LOCK:
+        inst = _INSTANCES.get(name)
+        if inst is None:
+            inst = _INSTANCES[name] = _REGISTRY[name]()
+    return inst

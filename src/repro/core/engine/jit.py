@@ -38,6 +38,8 @@ imported, and ``get_backend("jit")`` then raises at session time.
 from __future__ import annotations
 
 import os
+import threading
+import time
 
 import numpy as np
 
@@ -57,21 +59,63 @@ except Exception:  # pragma: no cover - exercised only on jax-less installs
 
 
 #: batches smaller than this run the numpy scan instead (outcome-identical;
-#: on CPU hosts the device launch overhead dominates below ~16 rows — on
-#: real accelerators lower it via REPRO_JIT_MIN_BATCH)
-MIN_DEVICE_G = int(os.environ.get("REPRO_JIT_MIN_BATCH", "16"))
+#: on CPU hosts the device launch overhead dominates below ~16 rows, while
+#: a real accelerator amortizes a launch over ~4).  ``None`` means "not
+#: resolved yet": ``min_device_g()`` consults REPRO_JIT_MIN_BATCH first and
+#: otherwise auto-tunes by the detected jax platform.  Tests monkeypatch
+#: this module attribute directly with an int.
+MIN_DEVICE_G: int | None = None
+
+
+def _detect_min_batch() -> int:
+    """Default device batch floor: ~4 on real accelerators, 16 on CPU."""
+    env = os.environ.get("REPRO_JIT_MIN_BATCH")
+    if env:
+        return int(env)
+    if not _HAVE_JAX:
+        return 16
+    try:
+        platform = jax.default_backend()
+    except Exception:  # pragma: no cover - backend init failure
+        return 16
+    return 4 if platform != "cpu" else 16
+
+
+def min_device_g() -> int:
+    """Resolved device batch floor (cached in ``MIN_DEVICE_G``)."""
+    global MIN_DEVICE_G
+    if MIN_DEVICE_G is None:
+        MIN_DEVICE_G = _detect_min_batch()
+    return MIN_DEVICE_G
+
 
 #: profile counters surfaced in the construction bench rows
 PROFILE = {"device_calls": 0, "fallback_calls": 0, "sync_cells": 0,
            "scan_seconds": 0.0}
 
+#: guards PROFILE: concurrent builds (core/buildsvc.py thread mode) run
+#: device sessions from worker threads and unlocked ``+=`` drops counts
+_PROF_LOCK = threading.Lock()
+
+
+def _prof_add(key: str, n) -> None:
+    with _PROF_LOCK:
+        PROFILE[key] += n
+
 
 def reset_profile() -> None:
-    for k in PROFILE:
-        PROFILE[k] = 0.0 if k == "scan_seconds" else 0
+    with _PROF_LOCK:
+        for k in PROFILE:
+            PROFILE[k] = 0.0 if k == "scan_seconds" else 0
 
 
-_UPDATE_FNS: "kernels._BucketCache | None" = None
+# eager construct (a lazy ``if X is None`` init races under threads); the
+# builder lambda touches jax only when a key is actually built
+_UPDATE_FNS = kernels._BucketCache(
+    lambda *k: jax.jit(
+        lambda buf, slab, idx: lax.dynamic_update_slice(
+            buf, slab, (0, idx, 0)),
+        donate_argnums=0))
 
 
 def _update_fn(m: int, Sb: int, d: int, Tb: int):
@@ -82,13 +126,6 @@ def _update_fn(m: int, Sb: int, d: int, Tb: int):
     length Tb is part of the trace signature — both slab and buffer sit
     on coarse ladders, so the key set stays small).
     """
-    global _UPDATE_FNS
-    if _UPDATE_FNS is None:
-        _UPDATE_FNS = kernels._BucketCache(
-            lambda *k: jax.jit(
-                lambda buf, slab, idx: lax.dynamic_update_slice(
-                    buf, slab, (0, idx, 0)),
-                donate_argnums=0))
     return _UPDATE_FNS.get((m, Sb, d, Tb))
 
 
@@ -213,7 +250,7 @@ class DeviceGrid:
                 sp.avail[:, h0 + sp.off : h1 + sp.off, :])
         fn = _update_fn(sp.m, Sb, sp.d, self.Tb)
         self.buf = fn(self.buf, slab, np.int32(u0 - self.base))
-        PROFILE["sync_cells"] += sp.m * Sb * sp.d
+        _prof_add("sync_cells", sp.m * Sb * sp.d)
         if self.s0 >= self.s1:
             self.s0, self.s1 = u0, u1
         else:
@@ -239,8 +276,6 @@ class DeviceGrid:
         (jax arrays are immutable), so later commits/restores cannot leak
         into the result; the session's version/edge logic treats the bitmap
         exactly like a synchronous scan of the same state."""
-        import time
-
         t0 = time.perf_counter()
         sp = self.space
         m, T, d = sp.avail.shape
@@ -256,12 +291,12 @@ class DeviceGrid:
         Vs_p[:g] = ceil32(np.asarray(Vs))
         ks_p = np.ones(gb, dtype=np.int32)
         ks_p[:g] = ks
-        kernels.XLA_STATS["scan_calls"] += 1
+        kernels.stat_add("scan_calls")
         fn = kernels.scan_fn_for(m, d, gb, Lb, Wb, self.Tb)
         dev = fn(self.buf, np.int32(lo_l - self.base),
                  np.int32(hi_l - lo_l), Vs_p, ks_p)
-        PROFILE["device_calls"] += 1
-        PROFILE["scan_seconds"] += time.perf_counter() - t0
+        _prof_add("device_calls", 1)
+        _prof_add("scan_seconds", time.perf_counter() - t0)
         return _DeviceRows(dev, W, m, reverse)
 
 
@@ -298,6 +333,9 @@ class JitBackend(BatchedBackend):
 
     #: (m, d, buffer-bucket) triples already compiled this process
     _prewarmed: set[tuple[int, int, int]] = set()
+    #: held across a prewarm so concurrent sessions (build service) don't
+    #: duplicate the compile work — late arrivals wait on the winner
+    _prewarm_lock = threading.Lock()
 
     @classmethod
     def available(cls) -> bool:
@@ -321,22 +359,23 @@ class JitBackend(BatchedBackend):
         if not _HAVE_JAX:
             return
         Tb = DeviceGrid.alloc_len(T if T is not None else 0)
-        if (m, d, Tb) in cls._prewarmed:
-            return
-        cls._prewarmed.add((m, d, Tb))
-        # compile the buckets real sessions hit: device launches carry the
-        # g-1 peer rows of batches >= MIN_DEVICE_G, so gb starts at
-        # pad8(max(MIN_DEVICE_G, 2) - 1), and the first-window shape is
-        # (Wb=WINDOW0, Lb=Wb+{SHORT_K,LONG_K})
-        gb0 = kernels.pad8(max(MIN_DEVICE_G, 2) - 1)
-        buf = jnp.ones((m, Tb, d), dtype=jnp.float32)
-        for gb in (gb0, gb0 + 8):
-            Vs = np.full((gb, d), 2.0, dtype=np.float32)
-            ks = np.ones(gb, dtype=np.int32)
-            for kmax in (kernels.SHORT_K, kernels.LONG_K):
-                _gb, Lb, Wb = kernels.scan_buckets(gb, WINDOW0, kmax)
-                np.asarray(kernels.scan_fn_for(m, d, gb, Lb, Wb, Tb)(
-                    buf, np.int32(0), np.int32(16), Vs, ks))
+        with cls._prewarm_lock:
+            if (m, d, Tb) in cls._prewarmed:
+                return
+            cls._prewarmed.add((m, d, Tb))
+            # compile the buckets real sessions hit: device launches carry
+            # the g-1 peer rows of batches >= min_device_g(), so gb starts
+            # at pad8(max(min_device_g(), 2) - 1), and the first-window
+            # shape is (Wb=WINDOW0, Lb=Wb+{SHORT_K,LONG_K})
+            gb0 = kernels.pad8(max(min_device_g(), 2) - 1)
+            buf = jnp.ones((m, Tb, d), dtype=jnp.float32)
+            for gb in (gb0, gb0 + 8):
+                Vs = np.full((gb, d), 2.0, dtype=np.float32)
+                ks = np.ones(gb, dtype=np.int32)
+                for kmax in (kernels.SHORT_K, kernels.LONG_K):
+                    _gb, Lb, Wb = kernels.scan_buckets(gb, WINDOW0, kmax)
+                    np.asarray(kernels.scan_fn_for(m, d, gb, Lb, Wb, Tb)(
+                        buf, np.int32(0), np.int32(16), Vs, ks))
 
     @staticmethod
     def mirror(space) -> DeviceGrid:
@@ -351,11 +390,11 @@ class JitBackend(BatchedBackend):
         if not _HAVE_JAX:  # pragma: no cover
             raise RuntimeError("placement backend 'jit' requires jax")
         g = len(ks)
-        if g < max(MIN_DEVICE_G, 2):
+        if g < max(min_device_g(), 2):
             # outcome-identical numpy fallback: launch overhead beats the
             # tensor work for tiny batches, and the hybrid split below
             # needs at least one peer row (see module docstring)
-            PROFILE["fallback_calls"] += 1
+            _prof_add("fallback_calls", 1)
             return kernels.scan(space.avail, Vs, ks, plo, phi, reverse)
         # hybrid split: row 0 — the task the session walks immediately —
         # runs through the numpy g=1 fast path so the caller never blocks

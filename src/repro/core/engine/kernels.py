@@ -40,6 +40,7 @@ Exactness contract per op (docs/architecture.md "Kernel layer"):
 from __future__ import annotations
 
 import os
+import threading
 import time
 from typing import Callable, Sequence
 
@@ -64,13 +65,27 @@ IMPLS = ("pallas", "xla", "numpy")   # fallback order, strongest first
 #: per-(op, impl) dispatch accounting: {"op.impl": [calls, seconds]}
 PROFILE: dict[str, list] = {}
 
+#: one lock for every shared accounting structure in this module (PROFILE,
+#: XLA_STATS): concurrent builds (core/buildsvc.py thread mode) dispatch
+#: kernels from worker threads, and unlocked ``+=`` drops increments.
+#: Kernel calls are tensor-sized, so the lock is noise next to the work.
+_STATS_LOCK = threading.Lock()
+
 
 def reset_profile() -> None:
-    PROFILE.clear()
+    with _STATS_LOCK:
+        PROFILE.clear()
 
 
 def profile_snapshot() -> dict[str, tuple[int, float]]:
-    return {k: (int(v[0]), float(v[1])) for k, v in PROFILE.items()}
+    with _STATS_LOCK:
+        return {k: (int(v[0]), float(v[1])) for k, v in PROFILE.items()}
+
+
+def stat_add(key: str, n: int = 1) -> None:
+    """Atomically bump one XLA_STATS counter (shared with core/engine/jit)."""
+    with _STATS_LOCK:
+        XLA_STATS[key] += n
 
 
 # ----------------------------------------------------------------------
@@ -232,23 +247,32 @@ XLA_STATS = {"compiles": 0, "evictions": 0, "scan_calls": 0}
 
 
 class _BucketCache:
-    """Bounded LRU of jitted functions keyed by static shape buckets."""
+    """Bounded LRU of jitted functions keyed by static shape buckets.
+
+    Thread-safe: concurrent build sessions share these caches, so the
+    pop/build/reinsert sequence runs under one per-cache lock (unlocked,
+    two racing gets could both build — double-counting compiles — or
+    corrupt the dict).  Holding the lock across ``build`` also means one
+    key compiles once, with late arrivals waiting on the winner.
+    """
 
     def __init__(self, build: Callable, cap: int = BUCKET_CAP):
         self._build = build
         self._cap = cap
         self._fns: dict[tuple, Callable] = {}
+        self._lock = threading.Lock()
 
     def get(self, key: tuple) -> Callable:
-        fn = self._fns.pop(key, None)
-        if fn is None:
-            if len(self._fns) >= self._cap:
-                self._fns.pop(next(iter(self._fns)))
-                XLA_STATS["evictions"] += 1
-            XLA_STATS["compiles"] += 1
-            fn = self._build(*key)
-        self._fns[key] = fn          # (re)append = most recently used
-        return fn
+        with self._lock:
+            fn = self._fns.pop(key, None)
+            if fn is None:
+                if len(self._fns) >= self._cap:
+                    self._fns.pop(next(iter(self._fns)))
+                    stat_add("evictions")
+                stat_add("compiles")
+                fn = self._build(*key)
+            self._fns[key] = fn      # (re)append = most recently used
+            return fn
 
     def __len__(self) -> int:
         return len(self._fns)
@@ -311,15 +335,14 @@ def _build_scan_fn(m: int, d: int, gb: int, Lb: int, Wb: int, Tb: int):
     return jax.jit(scan)
 
 
-_SCAN_FNS: _BucketCache | None = None
+# eagerly constructed (cheap — jitting happens per key inside get): a lazy
+# ``global X; if X is None`` init is a check-then-act race under threads
+_SCAN_FNS = _BucketCache(_build_scan_fn)
 
 
 def scan_fn_for(m: int, d: int, gb: int, Lb: int, Wb: int,
                 Tb: int) -> Callable:
     """Compiled scan for one shape bucket (shared with the jit backend)."""
-    global _SCAN_FNS
-    if _SCAN_FNS is None:
-        _SCAN_FNS = _BucketCache(_build_scan_fn)
     return _SCAN_FNS.get((m, d, gb, Lb, Wb, Tb))
 
 
@@ -340,7 +363,7 @@ def _scan_xla(avail, Vs, ks, plo, phi, reverse=False):
     Vs_p[:g] = ceil32(np.asarray(Vs))
     ks_p = np.ones(gb, dtype=np.int32)
     ks_p[:g] = ks
-    XLA_STATS["scan_calls"] += 1
+    stat_add("scan_calls")
     fn = scan_fn_for(m, d, gb, Lb, Wb, Lb)   # buffer == window here
     good = np.asarray(fn(jnp.asarray(win_p), np.int32(0), np.int32(L),
                          Vs_p, ks_p))
@@ -407,9 +430,6 @@ def _eligible_superset_np(dem32, thr_fit, thr_fung, fd, rd, gd):
     return eligible, eligible.any(axis=0)
 
 
-_ELIG_FNS: _BucketCache | None = None
-
-
 def _build_elig_fn(n_dims_key):
     def elig(dem32, thr_fit, thr_fung, fd_mask, rd_mask, gd_mask):
         # dims enter as (d,) float32 {0, 1} masks: a masked-out dim
@@ -425,6 +445,9 @@ def _build_elig_fn(n_dims_key):
         eligible = fits | (rigid & fung)
         return eligible, eligible.any(axis=0)
     return jax.jit(elig)
+
+
+_ELIG_FNS = _BucketCache(_build_elig_fn)
 
 
 def _eligibility_launch_args(avail, demands, fit_dims, rigid_dims,
@@ -467,9 +490,6 @@ def _machines_with_candidates_xla(avail, demands, fit_dims, rigid_dims,
     if empty is not None:
         return empty
     dem32, thr_fit, thr_fung, masks = args
-    global _ELIG_FNS
-    if _ELIG_FNS is None:
-        _ELIG_FNS = _BucketCache(_build_elig_fn)
     fn = _ELIG_FNS.get((dem32.shape[1],))
     eligible, any_m = fn(dem32, thr_fit, thr_fung, *masks)
     return np.asarray(eligible), np.asarray(any_m)
@@ -492,9 +512,6 @@ def _heartbeat_masks_xla(avail, demands, fit_dims, rigid_dims, fungible_dims,
         # (eligible, machine_any (m,)) pair of machines_with_candidates
         return empty[0], np.zeros_like(empty[0])
     dem32, thr_fit, thr_fung, masks = args
-    global _ELIG_FNS
-    if _ELIG_FNS is None:
-        _ELIG_FNS = _BucketCache(_build_elig_fn)
     fn = _ELIG_FNS.get((dem32.shape[1],))
     eligible, _any = fn(dem32, thr_fit, thr_fung, *masks)
     eligible = np.asarray(eligible)
@@ -620,7 +637,12 @@ _REQ_CACHE: tuple[str, dict] | None = None
 
 
 def _requested() -> dict[str, str]:
-    """Parsed REPRO_KERNELS, cached per raw env value (dispatch-hot)."""
+    """Parsed REPRO_KERNELS, cached per raw env value (dispatch-hot).
+
+    Thread-safety: the cache is one tuple assigned in a single bytecode
+    op after being fully built, and parsing is a pure function of ``raw``
+    — two racing threads at worst both parse and assign equal values.
+    """
     global _REQ_CACHE
     raw = os.environ.get(KERNELS_ENV, "")
     if _REQ_CACHE is not None and _REQ_CACHE[0] == raw:
@@ -670,15 +692,17 @@ def active() -> dict[str, str]:
 def _dispatch(op: str, *args, **kwargs):
     impl, fn = resolve(op)
     key = f"{op}.{impl}"
-    slot = PROFILE.get(key)
-    if slot is None:
-        slot = PROFILE[key] = [0, 0.0]
     t0 = time.perf_counter()
     try:
         return fn(*args, **kwargs)
     finally:
-        slot[0] += 1
-        slot[1] += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        with _STATS_LOCK:
+            slot = PROFILE.get(key)
+            if slot is None:
+                slot = PROFILE[key] = [0, 0.0]
+            slot[0] += 1
+            slot[1] += dt
 
 
 # -- public dispatching entry points -----------------------------------

@@ -53,29 +53,66 @@ odds, ~2^-64 per lookup pair).
 
 from __future__ import annotations
 
+import threading
+
 import numpy as np
+
+
+class Counters:
+    """Thread-safe accounting counters (``d[k]`` reads, ``add`` writes).
+
+    The build service (core/buildsvc.py) runs builds concurrently, and a
+    bare ``dict[k] += 1`` is a read-modify-write that drops increments
+    under threads.  ``add`` is the one mutation path and takes the lock;
+    plain ``[]`` reads stay lock-free (a torn read of an int cannot
+    happen under CPython, and the benches only ever read quiescent or
+    monotone values).
+    """
+
+    def __init__(self, names):
+        self._lock = threading.Lock()
+        self._d = dict.fromkeys(names, 0)
+
+    def add(self, key: str, n: int = 1) -> None:
+        with self._lock:
+            self._d[key] += n
+
+    def __getitem__(self, key: str) -> int:
+        return self._d[key]
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._d
+
+    def reset(self) -> None:
+        with self._lock:
+            for k in self._d:
+                self._d[k] = 0
+
+    def snapshot(self) -> dict[str, int]:
+        with self._lock:
+            return dict(self._d)
+
 
 # counters threaded into benchmarks/bench_scheduling.py: the bench JSON
 # reports placements-evaluated vs placements-memoized per scenario.
-COUNTERS = {
-    "places_evaluated": 0,   # live backend searches
-    "places_memoized": 0,    # windowed place-memo hits
-    "places_memoized_xpart": 0,  # ...of which hit an entry recorded by an
-                                 # earlier partition of the same DAG
-    "passes_run": 0,         # live place_pass executions
-    "passes_replayed": 0,    # pass-memo plan replays (incl. fail shortcuts)
-    "variants_bound_skipped": 0,   # order-variant subtrees pruned by bound
-    "candidates_lb_skipped": 0,    # candidates skipped at the tick LB
-}
+COUNTERS = Counters((
+    "places_evaluated",      # live backend searches
+    "places_memoized",       # windowed place-memo hits
+    "places_memoized_xpart",  # ...of which hit an entry recorded by an
+                              # earlier partition of the same DAG
+    "passes_run",            # live place_pass executions
+    "passes_replayed",       # pass-memo plan replays (incl. fail shortcuts)
+    "variants_bound_skipped",  # order-variant subtrees pruned by bound
+    "candidates_lb_skipped",   # candidates skipped at the tick LB
+))
 
 
 def reset_counters() -> None:
-    for k in COUNTERS:
-        COUNTERS[k] = 0
+    COUNTERS.reset()
 
 
 def counters_snapshot() -> dict[str, int]:
-    return dict(COUNTERS)
+    return COUNTERS.snapshot()
 
 
 _M1 = 0x9E3779B97F4A7C15
@@ -188,9 +225,9 @@ class ConstructionMemo:
             return None
         for b0, b1, dig, m, t0, epoch in lst:
             if self._window_digest(b0, b1) == dig:
-                COUNTERS["places_memoized"] += 1
+                COUNTERS.add("places_memoized")
                 if epoch != self._epoch:
-                    COUNTERS["places_memoized_xpart"] += 1
+                    COUNTERS.add("places_memoized_xpart")
                 return m, t0
         return None
 

@@ -84,13 +84,16 @@ def schedule_cluster(jobs: list[TPUJob], n_slices: int = 32,
                      interarrival: float = 60.0, seed: int = 0,
                      policy: str = "dagps",
                      placement_backend: str | None = None,
+                     build_workers: int | None = 1,
                      profile: bool = False):
     """Gang-schedule the jobs' stage DAGs onto pod slices with DAGPS.
 
     ``placement_backend`` selects the offline construction engine
     (reference / batched / jit) for the schemes that build preferred
-    schedules; ``profile`` collects per-phase wall-clock timings on the
-    returned result.
+    schedules; ``build_workers`` overlaps per-arrival construction across
+    a core.buildsvc worker pool (>1 or None = CPU count; decisions stay
+    bit-identical); ``profile`` collects per-phase wall-clock timings on
+    the returned result.
     """
     rng = np.random.default_rng(seed)
     arrivals = []
@@ -100,5 +103,6 @@ def schedule_cluster(jobs: list[TPUJob], n_slices: int = 32,
         t += float(rng.exponential(interarrival))
     cfg = SimConfig(n_machines=n_slices, seed=seed,
                     build_machines=max(n_slices // 8, 2),
-                    placement_backend=placement_backend, profile=profile)
+                    placement_backend=placement_backend,
+                    build_workers=build_workers, profile=profile)
     return ClusterSim(cfg, scheme(policy)).run(arrivals)

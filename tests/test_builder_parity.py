@@ -86,6 +86,45 @@ class TestMemoParity:
         assert builder._memo_enabled(False) is False  # explicit arg wins
 
 
+class TestBuildServiceParity:
+    """The concurrent build service (core/buildsvc.py) must be invisible
+    in the output: pooled + deduplicated construction is bit-identical to
+    a serial build_schedule loop, across backends and memo modes."""
+
+    def test_build_many_equals_serial_loop(self):
+        from repro.core.buildsvc import BuildService
+
+        backends = ["reference", "batched"]
+        if JitBackend.available():
+            backends.append("jit")
+        corpus = _corpus()[:2] + _corpus()[-1:]
+        for be in backends:
+            for memoize in (True, False):
+                serial = [build_schedule(dag, m, ticks=ticks, backend=be,
+                                         memoize=memoize)
+                          for _n, dag, m, ticks in corpus]
+                with BuildService(workers=2, mode="thread") as svc:
+                    handles = [svc.submit(dag, m, ticks=ticks, backend=be,
+                                          memoize=memoize)
+                               for _n, dag, m, ticks in corpus]
+                    pooled = [h.result() for h in handles]
+                for (name, *_), s, p in zip(corpus, serial, pooled):
+                    _assert_same(s, p,
+                                 f"({name}, backend={be}, memo={memoize})")
+
+    def test_process_mode_equals_serial_loop(self):
+        """Process workers rebuild the Schedule from the slim wire tuple —
+        diff it against the in-process build bit for bit."""
+        from repro.core.buildsvc import build_many
+
+        corpus = _corpus()[:3]
+        dags = [dag for _n, dag, _m, _t in corpus]
+        serial = [build_schedule(dag, 3, ticks=96) for dag in dags]
+        pooled = build_many(dags, 3, workers=2, mode="process", ticks=96)
+        for (name, *_), s, p in zip(corpus, serial, pooled):
+            _assert_same(s, p, f"({name}, mode=process)")
+
+
 def _golden_corpus():
     """Smaller fixed corpus for the committed golden arrays."""
     out = []

@@ -1,0 +1,316 @@
+"""Concurrent build service: digest dedup, worker-pool parity, and the
+thread-safety hardening of the shared engine state it leans on.
+
+Determinism contract: build_schedule is a pure function of (DAG content,
+m, knobs), so the service's worker pool and dedup front must be invisible
+in the output — every test here diffs against a plain serial loop.  The
+concurrency smokes hammer the state that used to be single-thread-only:
+kernels.PROFILE dispatch accounting, the XLA bucket LRU, memo.COUNTERS.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import build_schedule
+from repro.core.buildsvc import BuildService, build_many
+from repro.core.dag import DAG, dag_digest
+from repro.core.engine import JitBackend, kernels
+from repro.core.engine.base import ceil32
+from repro.core.memo import COUNTERS
+from repro.sim import clear_schedule_cache, run_workload
+from repro.sim.workload import production_dag
+
+
+def _dag_copy(dag, parents=None, duration=None, demand=None, stage_of=None):
+    return DAG(
+        duration=dag.duration.copy() if duration is None else duration,
+        demand=dag.demand.copy() if demand is None else demand,
+        stage_of=dag.stage_of.copy() if stage_of is None else stage_of,
+        parents=[p.copy() for p in dag.parents] if parents is None else parents,
+        name=dag.name,
+    )
+
+
+def _assert_same_schedule(a, b, ctx=""):
+    assert a.makespan == b.makespan, f"makespan differs {ctx}"
+    assert np.array_equal(a.start, b.start), f"starts differ {ctx}"
+    assert np.array_equal(a.machine, b.machine), f"machines differ {ctx}"
+    assert np.array_equal(a.order, b.order), f"order differs {ctx}"
+
+
+class TestDagDigest:
+    def _base(self):
+        return production_dag(np.random.default_rng(0), scale=0.35, share=3)
+
+    def test_equal_content_collides(self):
+        dag = self._base()
+        assert dag_digest(dag) == dag_digest(_dag_copy(dag))
+
+    def test_parent_row_order_is_presentation_not_content(self):
+        """Edge insertion order within a parents row must not change the
+        digest: every consumer treats the row as a set."""
+        dag = self._base()
+        perm = [p[::-1].copy() for p in dag.parents]
+        assert any(len(p) > 1 for p in perm), "corpus DAG lost its joins"
+        assert dag_digest(dag) == dag_digest(_dag_copy(dag, parents=perm))
+
+    def test_permuted_identical_siblings_collide(self):
+        """Inserting interchangeable stage siblings in a different order
+        is a content no-op — all id-indexed arrays come out equal — and
+        must collide; permuting *distinguishable* tasks relabels ids and
+        must not (schedules are id-indexed)."""
+        def stage_dag(sib_durs):
+            n = 1 + len(sib_durs)
+            return DAG(duration=np.array([4.0] + list(sib_durs)),
+                       demand=np.vstack([[0.5, 0.2]] * n),
+                       stage_of=np.array([0] + [1] * len(sib_durs)),
+                       parents=[np.empty(0, np.int64)]
+                       + [np.array([0])] * len(sib_durs))
+
+        a = stage_dag([1.0, 1.0, 1.0])
+        b = stage_dag([1.0, 1.0, 1.0])     # siblings "inserted" in any order
+        assert dag_digest(a) == dag_digest(b)
+        c = stage_dag([1.0, 2.0, 1.0])
+        d = stage_dag([2.0, 1.0, 1.0])     # distinguishable: ids now differ
+        assert dag_digest(c) != dag_digest(d)
+
+    def test_differing_demand_and_duration_do_not_collide(self):
+        dag = self._base()
+        dem = dag.demand.copy()
+        dem[0, 0] = min(dem[0, 0] + 0.01, 1.0)
+        assert dag_digest(dag) != dag_digest(_dag_copy(dag, demand=dem))
+        dur = dag.duration.copy()
+        dur[1] += 0.5
+        assert dag_digest(dag) != dag_digest(_dag_copy(dag, duration=dur))
+
+    def test_differing_structure_does_not_collide(self):
+        dag = self._base()
+        stage = dag.stage_of.copy()
+        stage[-1] = stage[-2]
+        assert dag_digest(dag) != dag_digest(_dag_copy(dag, stage_of=stage))
+        parents = [p.copy() for p in dag.parents]
+        victim = next(i for i, p in enumerate(parents) if len(p) > 1)
+        parents[victim] = parents[victim][:-1]
+        assert dag_digest(dag) != dag_digest(_dag_copy(dag, parents=parents))
+
+    def test_simulator_cache_and_service_share_the_digest(self):
+        """One canonical digest: the service's dedup key and the sim
+        cache key must start from the same bytes."""
+        dag = self._base()
+        svc = BuildService(workers=1, mode="serial")
+        assert svc.key_for(dag, 3)[0] == dag_digest(dag)
+
+
+class TestBuildService:
+    def _dags(self, n=4):
+        return [production_dag(np.random.default_rng(s), scale=0.35, share=3)
+                for s in range(n)]
+
+    @pytest.mark.parametrize("mode", ["serial", "thread", "process"])
+    def test_build_many_parity(self, mode):
+        dags = self._dags(3)
+        serial = [build_schedule(d, 3, ticks=96) for d in dags]
+        got = build_many(dags, 3, workers=2, mode=mode, ticks=96)
+        for s, g, d in zip(serial, got, dags):
+            _assert_same_schedule(s, g, f"(mode={mode})")
+            assert g.dag is d, "Schedule must rebind the submitted DAG"
+
+    def test_dedup_front(self):
+        dag = self._dags(1)[0]
+        twin = _dag_copy(dag)
+        with BuildService(workers=2, mode="thread") as svc:
+            a = svc.submit(dag, 3, ticks=96)
+            b = svc.submit(dag, 3, ticks=96)       # same object
+            c = svc.submit(twin, 3, ticks=96)      # equal content
+            d = svc.submit(dag, 4, ticks=96)       # different share: rebuild
+            _assert_same_schedule(a.result(), b.result())
+            _assert_same_schedule(a.result(), c.result())
+            assert c.result().dag is twin
+            assert svc.stats["submitted"] == 4
+            assert svc.stats["built"] == 2
+            assert svc.stats["deduped"] == 2
+            d.result()
+
+    def test_completed_entries_serve_as_cache(self):
+        dag = self._dags(1)[0]
+        with BuildService(workers=2, mode="thread") as svc:
+            first = svc.submit(dag, 3, ticks=96)
+            first.result()                      # finished and retired
+            again = svc.submit(dag, 3, ticks=96)
+            assert svc.stats["built"] == 1
+            _assert_same_schedule(first.result(), again.result())
+
+    def test_knobs_partition_the_key(self):
+        dag = self._dags(1)[0]
+        svc = BuildService(workers=1, mode="serial")
+        keys = {svc.key_for(dag, 3),
+                svc.key_for(dag, 3, ticks=128),
+                svc.key_for(dag, 3, memoize=False),
+                svc.key_for(dag, 3, backend="reference"),
+                svc.key_for(dag, 4)}
+        assert len(keys) == 5
+        with pytest.raises(TypeError):
+            svc.key_for(dag, 3, bogus_knob=1)
+
+    def test_shutdown_rejects_new_work(self):
+        svc = BuildService(workers=1, mode="serial")
+        svc.shutdown()
+        with pytest.raises(RuntimeError):
+            svc.submit(self._dags(1)[0], 3)
+
+    def test_bad_mode_and_workers(self):
+        with pytest.raises(ValueError):
+            BuildService(workers=2, mode="fibers")
+        with pytest.raises(ValueError):
+            BuildService(workers=0)
+
+    def test_build_and_clear_cache(self):
+        dag = self._dags(1)[0]
+        with BuildService(workers=1, mode="serial") as svc:
+            a = svc.build(dag, 3, ticks=96)
+            svc.clear_cache()
+            b = svc.build(dag, 3, ticks=96)
+            assert svc.stats["built"] == 2      # cache dropped in between
+            _assert_same_schedule(a, b)
+
+    def test_env_defaults(self, monkeypatch):
+        from repro.core import buildsvc
+
+        monkeypatch.setenv(buildsvc.WORKERS_ENV, "3")
+        monkeypatch.setenv(buildsvc.MODE_ENV, "thread")
+        svc = BuildService()
+        assert svc.workers == 3 and svc.mode == "thread"
+        monkeypatch.delenv(buildsvc.WORKERS_ENV)
+        assert buildsvc.default_workers() >= 1
+        monkeypatch.setenv(buildsvc.MP_ENV, "fork")
+        assert buildsvc._default_mp_context().get_start_method() == "fork"
+
+
+class TestSimIntegration:
+    def test_build_workers_bit_identical(self):
+        """The whole point: overlapped construction changes wall clock
+        only — every scheduling decision matches the serial path."""
+        dags = [production_dag(np.random.default_rng(60 + s), scale=0.35,
+                               share=3) for s in range(6)]
+        kw = dict(n_machines=20, interarrival=4.0, seed=9, build_machines=3)
+        clear_schedule_cache()
+        base = run_workload(dags, "dagps", **kw)
+        clear_schedule_cache()
+        par = run_workload(dags, "dagps", build_workers=2, **kw)
+        assert np.array_equal(base.jcts(), par.jcts())
+        assert base.makespan == par.makespan
+        clear_schedule_cache()
+        nocache = run_workload(dags, "dagps", build_workers=2,
+                               schedule_cache=False, **kw)
+        assert np.array_equal(base.jcts(), nocache.jcts())
+
+    def test_non_dagps_schemes_skip_the_service(self):
+        dags = [production_dag(np.random.default_rng(70), scale=0.35, share=3)]
+        res = run_workload(dags, "tez", n_machines=10, seed=1,
+                           build_workers=4)
+        assert len(res.jobs) == 1
+
+
+class TestThreadSafetyHardening:
+    def test_counters_add_is_atomic(self):
+        base = COUNTERS["places_evaluated"]
+        n_threads, n_adds = 8, 5000
+
+        def work():
+            for _ in range(n_adds):
+                COUNTERS.add("places_evaluated")
+
+        ts = [threading.Thread(target=work) for _ in range(n_threads)]
+        [t.start() for t in ts]
+        [t.join() for t in ts]
+        assert COUNTERS["places_evaluated"] == base + n_threads * n_adds
+
+    def test_dispatch_profile_counts_exact_under_threads(self):
+        kernels.reset_profile()
+        avail = np.ones((4, 64, 2), dtype=np.float32)
+        Vs = ceil32(np.full((3, 2), 0.4))
+        ks = np.array([2, 3, 4])
+        n_threads, n_calls = 8, 40
+        ref = kernels.scan_starts(avail, Vs, ks, 0, 32)
+        errs = []
+
+        def work():
+            try:
+                for _ in range(n_calls):
+                    got = kernels.scan(avail, Vs, ks, 0, 32)
+                    assert np.array_equal(got, ref)
+            except Exception as e:  # pragma: no cover - failure path
+                errs.append(e)
+
+        ts = [threading.Thread(target=work) for _ in range(n_threads)]
+        [t.start() for t in ts]
+        [t.join() for t in ts]
+        assert not errs
+        snap = kernels.profile_snapshot()
+        total = sum(calls for key, (calls, _s) in snap.items()
+                    if key.startswith("scan."))
+        assert total == n_threads * n_calls, "dispatch accounting dropped calls"
+
+    def test_bucket_cache_builds_each_key_once(self):
+        built = []
+        cache = kernels._BucketCache(
+            lambda *k: built.append(k) or object(), cap=16)
+        barrier = threading.Barrier(8)
+
+        def work():
+            barrier.wait()
+            for i in range(4):
+                cache.get((i,))
+
+        ts = [threading.Thread(target=work) for _ in range(8)]
+        [t.start() for t in ts]
+        [t.join() for t in ts]
+        assert sorted(built) == [(0,), (1,), (2,), (3,)]
+
+    def test_concurrent_builds_all_backends(self):
+        """Thread-mode hammer across every backend at once — the jit
+        sessions exercise per-Space device mirrors and the shared compile
+        caches under real concurrency; outputs must equal solo builds."""
+        backends = ["reference", "batched"]
+        if JitBackend.available():
+            backends.append("jit")
+        dags = [production_dag(np.random.default_rng(s), scale=0.35, share=3)
+                for s in range(3)]
+        expect = {be: [build_schedule(d, 3, ticks=96, backend=be)
+                       for d in dags] for be in backends}
+        with BuildService(workers=4, mode="thread") as svc:
+            handles = [(be, i, svc.submit(d, 3, ticks=96, backend=be))
+                       for be in backends for i, d in enumerate(dags)]
+            for be, i, h in handles:
+                _assert_same_schedule(expect[be][i], h.result(),
+                                      f"(backend={be}, dag={i})")
+
+
+class TestMinBatchAutotune:
+    def test_env_override_wins(self, monkeypatch):
+        from repro.core.engine import jit as J
+
+        monkeypatch.setattr(J, "MIN_DEVICE_G", None)
+        monkeypatch.setenv("REPRO_JIT_MIN_BATCH", "7")
+        assert J.min_device_g() == 7
+
+    def test_auto_by_platform(self, monkeypatch):
+        from repro.core.engine import jit as J
+
+        if not J._HAVE_JAX:
+            pytest.skip("requires jax")
+        monkeypatch.delenv("REPRO_JIT_MIN_BATCH", raising=False)
+        monkeypatch.setattr(J.jax, "default_backend", lambda: "tpu")
+        monkeypatch.setattr(J, "MIN_DEVICE_G", None)
+        assert J.min_device_g() == 4      # real accelerator: low floor
+        monkeypatch.setattr(J.jax, "default_backend", lambda: "cpu")
+        monkeypatch.setattr(J, "MIN_DEVICE_G", None)
+        assert J.min_device_g() == 16     # CPU host: launch overhead wins
+
+    def test_monkeypatched_constant_is_honored(self, monkeypatch):
+        from repro.core.engine import jit as J
+
+        monkeypatch.setattr(J, "MIN_DEVICE_G", 3)
+        assert J.min_device_g() == 3
