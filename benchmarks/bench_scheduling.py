@@ -334,7 +334,7 @@ def bench_online_large() -> None:
         if common.PROFILE:
             emit_phases(f"s8_online_large_{tag}", res.phase_times)
             emit(f"s8_online_large_{tag}_heartbeat_kernel", 0.0,
-                 kernels.active()["machines_with_candidates"])
+                 kernels.heartbeat_impl("machines_with_candidates", n_m))
         if sch == "dagps":
             res_dagps = res
     # build-service variant: identical scenario with per-arrival
@@ -394,6 +394,67 @@ def bench_online_churn() -> None:
         emit_phases("s9_online_churn_dagps", res.phase_times)
 
 
+def bench_online_sharded() -> None:
+    """s10: sharded heartbeat matching at 2k-10k+ machines.
+
+    Scaling ladder at fixed machines-per-shard (2048) over one fixed job
+    population: shard count grows with the cluster, so each shard's
+    batched eligibility launch covers a constant machine slice and
+    per-heartbeat (wave) match latency must stay flat in m (within
+    noise) — the `_match_us_per_wave` rows are the flatness evidence.
+    Decisions are bit-identical across shard counts (the sharded wave
+    pins pick order to one global matcher; tests/test_shard.py), so
+    `derived` median JCTs double as an output-stability check.  Per-shard
+    heartbeat-kernel seconds and the auto-selected impl (xla at >=
+    `kernels.heartbeat_device_min_m()` machines per launch) are emitted
+    as counter rows.  Quick mode runs one 2-shard 2048-machine row for
+    the CI regression gate.
+    """
+    from repro.core.engine import kernels
+    from benchmarks import common
+
+    n_j = 120 if common.QUICK else 200
+    dags = online_mix_workload(n_j, seed=88)
+    sizes = ((2048, 2),) if common.QUICK else ((2048, 1), (4096, 2),
+                                               (10240, 5))
+    for n_m, n_shards in sizes:
+        t0 = time.perf_counter()
+        res = run_workload(dags, "dagps", n_machines=n_m, interarrival=0.5,
+                           seed=88, build_machines=4,
+                           matcher_shards=n_shards, profile=common.PROFILE)
+        dt = time.perf_counter() - t0
+        emit(f"s10_online_sharded_m{n_m}_s{n_shards}_dagps", dt * 1e6,
+             round(float(np.median(res.jcts())), 1))
+        ss = res.shard_stats
+        emit(f"s10_online_sharded_m{n_m}_waves", 0.0, ss["waves"])
+        emit(f"s10_online_sharded_m{n_m}_heartbeat_kernel", 0.0,
+             kernels.heartbeat_impl("machines_with_candidates",
+                                    (n_m + n_shards - 1) // n_shards))
+        if common.PROFILE:
+            emit_phases(f"s10_online_sharded_m{n_m}", res.phase_times)
+            # flatness metrics, both per heartbeat wave.  `match_us_per_wave`
+            # is raw matcher seconds / waves: on a single-core host it sums
+            # the per-shard kernel launches serially.  `critical_wave_us`
+            # removes that serialization artifact — non-kernel match time
+            # plus the *slowest* shard's kernel time, i.e. the wave latency
+            # with one core per shard (the launches release the GIL) — and
+            # is the number that must stay flat as m grows at fixed
+            # machines-per-shard.  Both sit far below the regression gate's
+            # absolute floor, so they are informational (the wall row above
+            # is the gated one).
+            waves = max(ss["waves"], 1)
+            per_wave = res.phase_times["match"] / waves * 1e6
+            emit(f"s10_online_sharded_m{n_m}_match_us_per_wave", per_wave,
+                 round(per_wave, 1))
+            ksum, kmax = sum(ss["kernel_secs"]), max(ss["kernel_secs"])
+            crit = (res.phase_times["match"] - ksum + kmax) / waves * 1e6
+            emit(f"s10_online_sharded_m{n_m}_critical_wave_us", crit,
+                 round(crit, 1))
+            for k, sec in enumerate(ss["kernel_secs"]):
+                emit(f"s10_online_sharded_m{n_m}_shard{k}_kernel_secs",
+                     0.0, sec)
+
+
 ALL = [bench_jct, bench_makespan, bench_fairness, bench_alternatives,
        bench_lowerbound, bench_sensitivity, bench_domains, bench_construction,
-       bench_online_large, bench_online_churn]
+       bench_online_large, bench_online_churn, bench_online_sharded]

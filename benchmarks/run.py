@@ -66,6 +66,7 @@ def main() -> None:
         "construction": [bench_scheduling.bench_construction],
         "online_large": [bench_scheduling.bench_online_large],
         "online_churn": [bench_scheduling.bench_online_churn],
+        "online_sharded": [bench_scheduling.bench_online_sharded],
         "pipeline": [bench_systems.bench_pipeline],
         "roofline": [bench_systems.bench_roofline],
         "kernels": [bench_systems.bench_kernels],

@@ -35,6 +35,10 @@ def main():
                     help="overlap offline constructions across this many "
                          "build-service workers (0 = auto/CPU count; "
                          "decisions are bit-identical to serial)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="online-matcher machine shards (0 = auto by "
+                         "slice count; decisions are bit-identical for "
+                         "any shard count)")
     ap.add_argument("--profile", action="store_true",
                     help="print per-phase wall-clock timings")
     args = ap.parse_args()
@@ -52,6 +56,7 @@ def main():
                                interarrival=args.interarrival, policy=policy,
                                placement_backend=args.backend,
                                build_workers=args.build_workers or None,
+                               matcher_shards=args.shards or None,
                                profile=args.profile)
         jcts = res.jcts()
         print(f"{policy:10s}: median JCT {np.median(jcts):8.1f}s  "

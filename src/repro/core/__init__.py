@@ -15,3 +15,4 @@ from .online import (
     CandidateBatch, DeficitCounters, JobView, Matcher, MatcherConfig,
     PendingTask, TaskPool, drf_fairness, slot_fairness,
 )
+from .shard import ShardPlan, ShardedMatcher, auto_shards, route_exposure

@@ -62,6 +62,27 @@ OPS = ("scan", "fits_mask", "pack_score", "heartbeat_masks",
 EXPLICIT_ONLY = ("fits_mask", "pack_score", "heartbeat_masks")
 IMPLS = ("pallas", "xla", "numpy")   # fallback order, strongest first
 
+#: the two heartbeat-wave eligibility ops are machine-skip filters: every
+#: consumer in the repo uses them only to decide which machines to visit
+#: (never which task to pick), so the sound-superset accelerated impls are
+#: safe defaults once the machine axis is large enough to amortize launch
+#: overhead.  Above ``heartbeat_device_min_m()`` machines they auto-select
+#: xla; an explicit REPRO_KERNELS pin for the op always wins.  Note the
+#: heartbeat_masks caveat still applies: the auto-selected xla impl is
+#: sound only for ``fits | over`` union consumers.
+HEARTBEAT_AUTO_OPS = ("heartbeat_masks", "machines_with_candidates")
+#: env var overriding the auto-promotion threshold (int, machine count)
+HEARTBEAT_MIN_M_ENV = "REPRO_HEARTBEAT_DEVICE_MIN_M"
+_HEARTBEAT_DEFAULT_MIN_M = 1536
+
+
+def heartbeat_device_min_m() -> int:
+    """Machine count at/above which heartbeat ops auto-select xla."""
+    raw = os.environ.get(HEARTBEAT_MIN_M_ENV, "")
+    if raw:
+        return int(raw)
+    return _HEARTBEAT_DEFAULT_MIN_M
+
 #: per-(op, impl) dispatch accounting: {"op.impl": [calls, seconds]}
 PROFILE: dict[str, list] = {}
 
@@ -684,13 +705,39 @@ def resolve(op: str) -> tuple[str, Callable]:
     raise RuntimeError(f"no implementation available for kernel op {op!r}")
 
 
+def resolve_heartbeat(op: str, n_machines: int) -> tuple[str, Callable]:
+    """Machine-count-aware resolution for the heartbeat eligibility ops.
+
+    An explicit REPRO_KERNELS pin for ``op`` always wins (including a pin
+    to numpy).  Otherwise, at ``n_machines >= heartbeat_device_min_m()``
+    the xla sound-superset impl is selected when available; below the
+    threshold (or without jax) resolution falls through to the normal
+    chain, which lands on the exact numpy oracle.
+    """
+    if op not in HEARTBEAT_AUTO_OPS:
+        raise ValueError(f"not a heartbeat op: {op!r}; have {HEARTBEAT_AUTO_OPS}")
+    if op not in _requested() and n_machines >= heartbeat_device_min_m():
+        ent = _REGISTRY.get((op, "xla"))
+        if ent is not None and ent[1]():
+            return "xla", ent[0]
+    return resolve(op)
+
+
+def heartbeat_impl(op: str, n_machines: int) -> str:
+    """Impl name a heartbeat dispatch would pick at this machine count."""
+    return resolve_heartbeat(op, n_machines)[0]
+
+
 def active() -> dict[str, str]:
-    """op -> impl actually selected right now (env + availability)."""
+    """op -> impl actually selected right now (env + availability).
+
+    For the HEARTBEAT_AUTO_OPS this reports the below-threshold (small-m)
+    selection; use :func:`heartbeat_impl` for a machine-count-aware view.
+    """
     return {op: resolve(op)[0] for op in OPS}
 
 
-def _dispatch(op: str, *args, **kwargs):
-    impl, fn = resolve(op)
+def _call_profiled(op: str, impl: str, fn: Callable, *args, **kwargs):
     key = f"{op}.{impl}"
     t0 = time.perf_counter()
     try:
@@ -703,6 +750,11 @@ def _dispatch(op: str, *args, **kwargs):
                 slot = PROFILE[key] = [0, 0.0]
             slot[0] += 1
             slot[1] += dt
+
+
+def _dispatch(op: str, *args, **kwargs):
+    impl, fn = resolve(op)
+    return _call_profiled(op, impl, fn, *args, **kwargs)
 
 
 # -- public dispatching entry points -----------------------------------
@@ -722,13 +774,18 @@ def pack_score(avail, demand, clip=False):
 
 def heartbeat_masks(avail, demands, fit_dims, rigid_dims, fungible_dims,
                     overbook_slack=0.0, use_overbooking=True):
-    return _dispatch("heartbeat_masks", avail, demands, fit_dims, rigid_dims,
-                     fungible_dims, overbook_slack, use_overbooking)
+    avail = np.asarray(avail)
+    impl, fn = resolve_heartbeat("heartbeat_masks", avail.shape[0])
+    return _call_profiled("heartbeat_masks", impl, fn, avail, demands,
+                          fit_dims, rigid_dims, fungible_dims,
+                          overbook_slack, use_overbooking)
 
 
 def machines_with_candidates(avail, demands, fit_dims, rigid_dims,
                              fungible_dims, overbook_slack=0.0,
                              use_overbooking=True):
-    return _dispatch("machines_with_candidates", avail, demands, fit_dims,
-                     rigid_dims, fungible_dims, overbook_slack,
-                     use_overbooking)
+    avail = np.asarray(avail)
+    impl, fn = resolve_heartbeat("machines_with_candidates", avail.shape[0])
+    return _call_profiled("machines_with_candidates", impl, fn, avail,
+                          demands, fit_dims, rigid_dims, fungible_dims,
+                          overbook_slack, use_overbooking)

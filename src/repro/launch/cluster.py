@@ -85,6 +85,7 @@ def schedule_cluster(jobs: list[TPUJob], n_slices: int = 32,
                      policy: str = "dagps",
                      placement_backend: str | None = None,
                      build_workers: int | None = 1,
+                     matcher_shards: int | None = None,
                      profile: bool = False):
     """Gang-schedule the jobs' stage DAGs onto pod slices with DAGPS.
 
@@ -92,8 +93,10 @@ def schedule_cluster(jobs: list[TPUJob], n_slices: int = 32,
     (reference / batched / jit) for the schemes that build preferred
     schedules; ``build_workers`` overlaps per-arrival construction across
     a core.buildsvc worker pool (>1 or None = CPU count; decisions stay
-    bit-identical); ``profile`` collects per-phase wall-clock timings on
-    the returned result.
+    bit-identical); ``matcher_shards`` partitions the online matcher's
+    machine axis (None = auto by slice count; any value is bit-identical,
+    see core/shard.py); ``profile`` collects per-phase wall-clock timings
+    on the returned result.
     """
     rng = np.random.default_rng(seed)
     arrivals = []
@@ -104,5 +107,6 @@ def schedule_cluster(jobs: list[TPUJob], n_slices: int = 32,
     cfg = SimConfig(n_machines=n_slices, seed=seed,
                     build_machines=max(n_slices // 8, 2),
                     placement_backend=placement_backend,
-                    build_workers=build_workers, profile=profile)
+                    build_workers=build_workers,
+                    matcher_shards=matcher_shards, profile=profile)
     return ClusterSim(cfg, scheme(policy)).run(arrivals)

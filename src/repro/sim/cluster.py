@@ -16,10 +16,12 @@ Scheme presets mirror §8.1's compared schemes.
 
 The event loop runs on the vectorized online data path (see
 docs/architecture.md): a persistent `TaskPool` replaces per-heartbeat
-candidate rebuilds, the `machines_with_candidates` kernel — dispatched
-through `core/engine/kernels.py`, so 1k+-machine heartbeats can run as
-one accelerated launch — batches the machine-eligibility test for a
-whole heartbeat, run records live in a SoA
+candidate rebuilds, heartbeat waves route through the sharded matcher
+(`core/shard.py` — one batched `machines_with_candidates` eligibility
+launch per machine shard, fanned out over a thread pool, auto-selecting
+the accelerated sound-superset kernels at large m, decisions pinned to
+one global `Matcher` so any shard count is bit-identical), run records
+live in a SoA
 `_RunTable` indexed by the heap's integer payloads, and offline builds are
 memoized by DAG content digest — all bit-identical to the object-list
 implementation this replaced (tests/test_online_parity.py,
@@ -48,6 +50,7 @@ from ..core.online import (
     drf_fairness,
     slot_fairness,
 )
+from ..core.shard import ShardedMatcher
 
 # event codes (heap entries are (time, seq, code, int_arg) — payloads live in
 # side tables indexed by the int arg, never in per-event tuples/dicts)
@@ -182,6 +185,12 @@ class SimConfig:
     #: decisions (build_schedule is deterministic and construction is
     #: instantaneous in sim time), wall-clock overlapped
     build_workers: int | None = 1
+    #: machine shards for the online matcher (core/shard.py): 1 = one
+    #: flat shard; None = auto (ceil(n_machines / REPRO_SHARD_MACHINES,
+    #: default 2048/shard)).  Any value yields bit-identical decisions —
+    #: sharding changes only how eligibility launches are batched and how
+    #: deficit ledgers are bookkept (merged + rebalanced every wave).
+    matcher_shards: int | None = None
     profile: bool = False          # collect per-phase wall-clock timings
 
 
@@ -209,6 +218,9 @@ class SimResult:
     #: per-phase wall-clock seconds (build / match / event / total) when
     #: SimConfig.profile is set, else None
     phase_times: dict[str, float] | None = None
+    #: sharded-matcher accounting (n_shards / waves / picks / handoffs /
+    #: per-shard heartbeat-kernel seconds), always collected
+    shard_stats: dict | None = None
 
     def jcts(self) -> np.ndarray:
         return np.array([j.jct for j in self.jobs])
@@ -340,9 +352,10 @@ class ClusterSim:
         groups = sorted({g for (_, _, g) in arrivals})
         shares = {g: 1.0 for g in groups}
         mcfg = self.spec.matcher
-        matcher = Matcher(mcfg, capacity=float(M), shares=shares)
-        fd, rigid, fung = matcher.fit_dim_split()
-        ob_slack = mcfg.max_overbook - 1.0
+        smatcher = ShardedMatcher(mcfg, M, shares,
+                                  n_shards=cfg.matcher_shards,
+                                  capacity=float(M))
+        matcher = smatcher.matcher
 
         jobs: dict[int, _Job] = {}
         pool = TaskPool(d=d, expose=cfg.expose_per_job)
@@ -367,7 +380,7 @@ class ClusterSim:
         prof = {"build": 0.0, "match": 0.0} if cfg.profile else None
         t_run0 = time.perf_counter() if cfg.profile else 0.0
         # heartbeat-kernel accounting: seconds spent inside the dispatched
-        # machines_with_candidates op (a subset of the match phase), so the
+        # heartbeat eligibility ops (a subset of the match phase), so the
         # bench rows can attribute matcher time to the kernel layer
         kprof0 = kernels.profile_snapshot() if cfg.profile else None
 
@@ -448,6 +461,8 @@ class ClusterSim:
             picks = matcher.match_batch(m, avail[m], batch)
             for i, _over in picks:
                 start_task(jobs[int(batch.job[i])], int(batch.tid[i]), m, now)
+                smatcher.record_allocation(m, int(batch.grp[i]),
+                                           mcfg.fairness(batch.dem[i]))
 
         # concurrent multi-job construction (core/buildsvc.py): submit every
         # arrival's build up front and let the event loop consume completed
@@ -470,37 +485,15 @@ class ClusterSim:
             batch = pool.refresh()
             if batch is None or len(batch) == 0:
                 return
-            # one shot over all (candidate, machine) pairs: a machine whose
+            # one heartbeat wave through the sharded matcher: one batched
+            # eligibility launch per machine shard (a machine whose
             # eligibility column is empty cannot pick anything, so skipping
-            # its matcher call is decision-free (no deficit/EMA mutation).
-            # Routed through the kernel-dispatch layer: any sound superset
-            # of the exact eligibility yields identical decisions, which is
-            # what lets the accelerated implementations serve 1k+-machine
-            # heartbeats in one batched launch (see kernels module doc).
-            eligible, machine_any = kernels.machines_with_candidates(
-                avail, batch.dem, fd, rigid, fung, ob_slack,
-                mcfg.use_overbooking)
-            active = np.ones(len(batch), dtype=bool)
-            n_active = len(batch)
-            order = np.argsort(-avail.sum(axis=1))
-            # visit only machines that can possibly pick: dead, drained, or
-            # candidate-less machines are guaranteed matcher no-ops
-            ok = (alive[order] & (avail[order] > 1e-9).any(axis=1)
-                  & machine_any[order])
-            for m in order[ok].tolist():
-                if n_active == 0:
-                    break
-                if not (eligible[:, m] & active).any():
-                    continue
-                idx = np.flatnonzero(active)
-                sub = batch.take(idx)
-                picks = matcher.match_batch(m, avail[m], sub)
-                for i, _over in picks:
-                    gi = int(idx[i])
-                    start_task(jobs[int(batch.job[gi])], int(batch.tid[gi]),
-                               m, now)
-                    active[gi] = False
-                n_active -= len(picks)
+            # its matcher call is decision-free), decisions pinned to the
+            # single global matcher — bit-identical for any shard count.
+            smatcher.match_wave(
+                avail, alive, batch,
+                lambda gi, m: start_task(jobs[int(batch.job[gi])],
+                                         int(batch.tid[gi]), m, now))
 
         try:
             while events:
@@ -565,6 +558,7 @@ class ClusterSim:
             self._builds = {}
             if svc is not None:
                 svc.shutdown(wait=False)
+            smatcher.close()
         makespan = max((j.finish for j in results), default=0.0)
         phase_times = None
         if prof is not None:
@@ -573,12 +567,17 @@ class ClusterSim:
                            "event": max(total - prof["build"] - prof["match"], 0.0),
                            "total": total}
             kprof1 = kernels.profile_snapshot()
+            # both heartbeat eligibility ops count: above the auto-promotion
+            # threshold the dispatched impl is heartbeat_masks-/mwc-xla and
+            # must stay visible in the bench JSON
             hb = sum(sec - kprof0.get(key, (0, 0.0))[1]
                      for key, (_calls, sec) in kprof1.items()
-                     if key.startswith("machines_with_candidates."))
+                     if key.startswith(("machines_with_candidates.",
+                                        "heartbeat_masks.")))
             phase_times["heartbeat"] = hb
         return SimResult(results, makespan, usage_samples, allocations,
-                         spec_launches, requeued, phase_times)
+                         spec_launches, requeued, phase_times,
+                         smatcher.stats())
 
 
 def run_workload(

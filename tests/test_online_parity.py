@@ -248,6 +248,80 @@ def test_machine_skip_layer_is_exact():
             assert machine_any[mi] == want.any()
 
 
+def _wave_oracle(matcher, avail, alive, batch):
+    """Verbatim pre-shard `sim/cluster.py` match_all loop (one wave)."""
+    cfg = matcher.cfg
+    fd, rigid, fung = matcher.fit_dim_split()
+    eligible, machine_any = packing.machines_with_candidates(
+        avail, batch.dem, fd, rigid, fung, cfg.max_overbook - 1.0,
+        cfg.use_overbooking)
+    active = np.ones(len(batch), dtype=bool)
+    n_active = len(batch)
+    order = np.argsort(-avail.sum(axis=1))
+    ok = (alive[order] & (avail[order] > 1e-9).any(axis=1)
+          & machine_any[order])
+    started = []
+    for m in order[ok].tolist():
+        if n_active == 0:
+            break
+        if not (eligible[:, m] & active).any():
+            continue
+        idx = np.flatnonzero(active)
+        picks = matcher.match_batch(m, avail[m], batch.take(idx))
+        for i, _over in picks:
+            gi = int(idx[i])
+            started.append((gi, m))
+            avail[m] -= batch.dem[gi]
+            active[gi] = False
+        n_active -= len(picks)
+    return started
+
+
+def test_sharded_wave_parity_all_shard_counts():
+    """ShardedMatcher.match_wave ≡ the legacy inline wave, for 1/2/4 shards.
+
+    Several consecutive waves against carried-over matcher state (EMA +
+    deficits + mutated avail): the sharded wave must produce the same
+    (candidate, machine) starts in the same order, leave the global
+    matcher in the same state, and keep the merged shard ledgers equal
+    to the global deficit counters.
+    """
+    from repro.core.shard import ShardedMatcher
+
+    for seed in range(8):
+        rng = np.random.default_rng(1000 + seed)
+        tasks, jobs, cfg, shares, _ = _random_heartbeat(rng)
+        batch = _batch_from(tasks, jobs)
+        M = int(rng.integers(5, 40))
+        avail0 = rng.uniform(0.0, 1.2, (M, 4))
+        alive = rng.random(M) < 0.9
+        oracle = Matcher(cfg, capacity=float(M), shares=shares)
+        o_avail = avail0.copy()
+        want = [_wave_oracle(oracle, o_avail, alive, batch)
+                for _ in range(3)]
+        for n_shards in (1, 2, 4):
+            sm = ShardedMatcher(cfg, M, shares, n_shards=n_shards,
+                                capacity=float(M))
+            s_avail = avail0.copy()
+            with sm:
+                for wave in range(3):
+                    got = []
+
+                    def cb(gi, m):
+                        got.append((gi, m))
+                        s_avail[m] -= batch.dem[gi]
+
+                    sm.match_wave(s_avail, alive, batch, cb)
+                    assert got == want[wave], (seed, n_shards, wave)
+            np.testing.assert_array_equal(s_avail, o_avail)
+            assert sm.matcher._ema_score == oracle._ema_score
+            assert sm.matcher._ema_srpt == oracle._ema_srpt
+            assert sm.matcher.deficits.deficit == oracle.deficits.deficit
+            merged = sm.merged_deficits()
+            for g, v in oracle.deficits.deficit.items():
+                assert merged.get(g, 0.0) == pytest.approx(v, abs=1e-9)
+
+
 def test_taskpool_matches_fresh_rebuild():
     """Incremental TaskPool refresh ≡ rebuilding candidates from scratch."""
     rng = np.random.default_rng(7)

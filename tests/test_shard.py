@@ -1,0 +1,398 @@
+"""Sharded online matcher (core/shard.py): routing, handoff, parity.
+
+Three layers of coverage:
+
+  * structural properties of the machine partition and exposure routing,
+  * deficit-handoff algebra against the single-shard oracle — seeded
+    deterministic versions always run; hypothesis versions ride along
+    when the plugin is installed (repo convention, see test_property.py),
+  * end-to-end shard-count invariance of simulator decisions (the
+    acceptance bar: 1 vs 2 vs 4 shards bit-identical JCT/makespan),
+    including under churn and with the accelerated eligibility kernels
+    force-promoted at every machine count.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import kernels, packing
+from repro.core.online import (
+    CandidateBatch,
+    DeficitCounters,
+    Matcher,
+    MatcherConfig,
+)
+from repro.core.shard import (
+    ShardPlan,
+    ShardedMatcher,
+    auto_shards,
+    route_exposure,
+)
+from repro.sim.cluster import run_workload
+from repro.sim.workload import online_mix_workload
+
+
+def _random_batch(rng, n_jobs=6, per_job=(1, 9), d=4):
+    """CandidateBatch with contiguous per-job runs, TaskPool-style."""
+    dem, pri, srpt, grp, job, tid = [], [], [], [], [], []
+    for j in range(n_jobs):
+        r = int(rng.integers(*per_job))
+        dem.append(rng.uniform(0.05, 0.45, size=(r, d)))
+        pri.append(rng.uniform(0.1, 1.0, size=r))
+        srpt.append(np.full(r, float(rng.uniform(1.0, 50.0))))
+        grp.append(np.full(r, int(rng.integers(0, 3)), dtype=np.int64))
+        job.append(np.full(r, j, dtype=np.int64))
+        tid.append(np.arange(r, dtype=np.int64))
+    n = sum(len(p) for p in pri)
+    return CandidateBatch(
+        dem=np.concatenate(dem), pri=np.concatenate(pri),
+        srpt=np.concatenate(srpt), grp=np.concatenate(grp),
+        loc=np.full(n, -1, dtype=np.int64), job=np.concatenate(job),
+        tid=np.concatenate(tid))
+
+
+# ----------------------------------------------------------------------
+# partition + routing structure
+# ----------------------------------------------------------------------
+
+def test_shard_plan_partitions_machines():
+    for m, n in [(1, 1), (7, 3), (64, 4), (100, 7), (5, 9)]:
+        plan = ShardPlan(m, n)
+        assert plan.n_shards == min(n, m)
+        assert int(plan.sizes.sum()) == m
+        assert plan.sizes.max() - plan.sizes.min() <= 1
+        # slices tile [0, m) and shard_of agrees with them
+        seen = []
+        for s, sl in enumerate(plan.slices()):
+            seen.extend(range(sl.start, sl.stop))
+            for mm in (sl.start, sl.stop - 1):
+                assert plan.shard_of(mm) == s
+        assert seen == list(range(m))
+        assert np.isclose(plan.fracs.sum(), 1.0)
+
+
+def test_auto_shards_scales_with_machine_count(monkeypatch):
+    monkeypatch.setenv("REPRO_SHARD_MACHINES", "2048")
+    assert auto_shards(64) == 1
+    assert auto_shards(2048) == 1
+    assert auto_shards(2049) == 2
+    assert auto_shards(10240) == 5
+    monkeypatch.setenv("REPRO_SHARD_MACHINES", "512")
+    assert auto_shards(2048) == 4
+
+
+def test_route_exposure_partitions_proportionally():
+    rng = np.random.default_rng(7)
+    for trial in range(20):
+        batch = _random_batch(rng, n_jobs=int(rng.integers(1, 8)))
+        plan = ShardPlan(int(rng.integers(4, 65)), int(rng.integers(1, 5)))
+        routed = route_exposure(batch, plan)
+        assert len(routed) == plan.n_shards
+        # exact partition of all rows
+        allr = np.concatenate(routed)
+        assert sorted(allr.tolist()) == list(range(len(batch)))
+        # within each shard, candidate order is preserved
+        for r in routed:
+            assert (np.diff(r) > 0).all() if len(r) > 1 else True
+        # per-job quotas match largest-remainder proportionality
+        for j in np.unique(batch.job):
+            r = int((batch.job == j).sum())
+            counts = np.array([int((batch.job[ri] == j).sum())
+                               for ri in routed])
+            assert counts.sum() == r
+            exact = plan.fracs * r
+            # floor quota respected, and each shard within 1 of exact
+            assert (counts >= np.floor(exact).astype(int)).all()
+            assert (np.abs(counts - exact) < 1.0 + 1e-9).all()
+
+
+def test_route_exposure_spanning_job_slices_every_shard():
+    # one big job across 4 equal shards: every shard gets exactly 1/4
+    rng = np.random.default_rng(3)
+    batch = _random_batch(rng, n_jobs=1, per_job=(16, 17))
+    plan = ShardPlan(64, 4)
+    routed = route_exposure(batch, plan)
+    assert [len(r) for r in routed] == [4, 4, 4, 4]
+
+
+# ----------------------------------------------------------------------
+# deficit handoff vs the single-shard oracle
+# ----------------------------------------------------------------------
+
+def _mk_sharded(n_machines, n_shards, shares, kappa=0.1):
+    cfg = MatcherConfig(kappa=kappa)
+    return ShardedMatcher(cfg, n_machines, shares, n_shards=n_shards)
+
+
+def _merged_trace_case(seed, n_shards, n_groups, n_steps, handoff_every):
+    """Route one allocation trace to shards; merged must track the oracle."""
+    rng = np.random.default_rng(seed)
+    shares = {g: float(rng.uniform(0.5, 2.0)) for g in range(n_groups)}
+    C = 40.0
+    sm = _mk_sharded(40, n_shards, shares)
+    oracle = DeficitCounters(shares, capacity=C, kappa=sm.cfg.kappa)
+    for step in range(n_steps):
+        g = int(rng.integers(n_groups))
+        w = float(rng.uniform(0.1, 1.5))
+        s = int(rng.integers(sm.plan.n_shards))
+        sm.shard_matchers[s].deficits.allocated(g, w)
+        oracle.allocated(g, w)
+        if handoff_every and step % handoff_every == 0:
+            before = sm.merged_deficits()
+            sm.deficit_handoff()
+            after = sm.merged_deficits()
+            # handoff redistributes, never creates/destroys deficit
+            for g2 in shares:
+                assert after[g2] == pytest.approx(before[g2], abs=1e-9)
+            # post-handoff: shard ledgers are capacity-proportional slices
+            for shard, frac in zip(sm.shard_matchers, sm.plan.fracs):
+                for g2, v in shard.deficits.deficit.items():
+                    assert v == pytest.approx(after[g2] * frac, abs=1e-9)
+        merged = sm.merged_deficits()
+        for g2 in shares:
+            assert merged[g2] == pytest.approx(oracle.deficit[g2], abs=1e-8)
+    # trigger equivalence at handoff points: each shard's local must_serve
+    # agrees with the global counter once ledgers are rebalanced
+    sm.deficit_handoff()
+    oracle_d = {g: sm.merged_deficits()[g] for g in shares}
+    glob = DeficitCounters(shares, capacity=C, kappa=sm.cfg.kappa)
+    glob.deficit.update(oracle_d)
+    for shard in sm.shard_matchers:
+        assert shard.deficits.must_serve() == glob.must_serve()
+
+
+def test_merged_deficits_track_single_shard_oracle():
+    for seed in range(12):
+        rng = np.random.default_rng(100 + seed)
+        _merged_trace_case(seed, n_shards=int(rng.integers(1, 5)),
+                           n_groups=int(rng.integers(1, 5)),
+                           n_steps=60, handoff_every=int(rng.integers(0, 9)))
+
+
+def test_sharded_bound_with_enforcement():
+    """Serve-on-trigger keeps merged deficits within the composed bound.
+
+    Single-shard bound (test_property.py): kappa*C + one allocation
+    quantum.  Across N shards with per-wave handoff, local views go
+    stale by at most one wave of allocations, so the composition slack
+    is (N * allocs_per_wave + 1) * w_max on top of kappa*C.
+    """
+    for seed in range(8):
+        rng = np.random.default_rng(500 + seed)
+        n_shards = int(rng.integers(1, 5))
+        n_groups = int(rng.integers(2, 5))
+        shares = {g: 1.0 for g in range(n_groups)}
+        kappa, C, w_max, per_wave = 0.1, 40.0, 0.8, 2
+        sm = _mk_sharded(40, n_shards, shares, kappa=kappa)
+        peak = 0.0
+        for _wave in range(80):
+            for s, shard in enumerate(sm.shard_matchers):
+                for _ in range(per_wave):
+                    g = shard.deficits.must_serve()
+                    if g is None:
+                        g = int(rng.integers(n_groups))
+                    shard.deficits.allocated(g, float(rng.uniform(0.1, w_max)))
+                    peak = max(peak, max(sm.merged_deficits().values()))
+            sm.deficit_handoff()
+        slack = (n_shards * per_wave + 1) * w_max
+        assert peak <= kappa * C + slack + 1e-9
+
+
+def test_handoff_nets_out_opposite_sign_deficits():
+    # shard A over-serves group 0, shard B under-serves it: merged is 0,
+    # so after handoff neither shard spuriously fires must_serve
+    shares = {0: 1.0, 1: 1.0}
+    sm = _mk_sharded(20, 2, shares, kappa=0.05)
+    a, b = (m.deficits for m in sm.shard_matchers)
+    for _ in range(40):
+        a.allocated(0, 1.0)   # A serves only group 0 -> deficit[1] grows on A
+        b.allocated(1, 1.0)   # B serves only group 1 -> deficit[0] grows on B
+    assert a.must_serve() is not None and b.must_serve() is not None
+    sm.deficit_handoff()
+    merged = sm.merged_deficits()
+    assert all(abs(v) < 1e-9 for v in merged.values())
+    assert all(m.deficits.must_serve() is None for m in sm.shard_matchers)
+
+
+# hypothesis variants (skip cleanly when the plugin is absent) ----------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HYP = True
+except ImportError:          # pragma: no cover - plugin-less envs
+    _HYP = False
+
+if _HYP:
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 4), st.integers(1, 4),
+           st.integers(0, 8))
+    def test_hypothesis_merged_deficits_track_oracle(seed, n_shards,
+                                                     n_groups, handoff_every):
+        _merged_trace_case(seed, n_shards, n_groups, n_steps=40,
+                           handoff_every=handoff_every)
+
+
+# ----------------------------------------------------------------------
+# eligibility fan-out
+# ----------------------------------------------------------------------
+
+def test_sharded_eligibility_equals_global_launch():
+    rng = np.random.default_rng(11)
+    for n_shards in (1, 2, 4):
+        batch = _random_batch(rng, n_jobs=5)
+        avail = rng.uniform(0.0, 1.0, size=(37, 4))
+        avail[:10] *= 0.05
+        sm = _mk_sharded(37, n_shards, {0: 1.0, 1: 1.0, 2: 1.0})
+        with sm:
+            elig, any_ = sm.eligibility(avail, batch.dem)
+        fd, rigid, fung = sm.matcher.fit_dim_split()
+        ref_e, ref_a = packing.machines_with_candidates(
+            avail, batch.dem, fd, rigid, fung,
+            sm.cfg.max_overbook - 1.0, sm.cfg.use_overbooking)
+        assert (elig == ref_e).all()
+        assert (any_ == ref_a).all()
+
+
+@pytest.mark.skipif(not kernels.have_jax(), reason="needs jax")
+def test_sharded_eligibility_superset_under_forced_xla(monkeypatch):
+    # promote the accelerated impls at every machine count: the sharded
+    # launch must stay a sound superset of the exact oracle per column
+    monkeypatch.setenv(kernels.HEARTBEAT_MIN_M_ENV, "1")
+    rng = np.random.default_rng(13)
+    batch = _random_batch(rng, n_jobs=5)
+    avail = rng.uniform(0.0, 1.0, size=(48, 4))
+    sm = _mk_sharded(48, 3, {0: 1.0, 1: 1.0, 2: 1.0})
+    with sm:
+        elig, any_ = sm.eligibility(avail, batch.dem)
+    fd, rigid, fung = sm.matcher.fit_dim_split()
+    ref_e, ref_a = packing.machines_with_candidates(
+        avail, batch.dem, fd, rigid, fung,
+        sm.cfg.max_overbook - 1.0, sm.cfg.use_overbooking)
+    assert not (ref_e & ~elig).any()       # superset of exact eligibility
+    assert not (ref_a & ~any_).any()
+
+
+# ----------------------------------------------------------------------
+# kernel auto-promotion (satellite: PR 4 follow-up)
+# ----------------------------------------------------------------------
+
+@pytest.mark.skipif(not kernels.have_jax(), reason="needs jax")
+def test_heartbeat_auto_promotes_above_threshold(monkeypatch):
+    monkeypatch.delenv(kernels.KERNELS_ENV, raising=False)
+    monkeypatch.setenv(kernels.HEARTBEAT_MIN_M_ENV, "64")
+    for op in kernels.HEARTBEAT_AUTO_OPS:
+        assert kernels.heartbeat_impl(op, 63) == "numpy"
+        assert kernels.heartbeat_impl(op, 64) == "xla"
+        assert kernels.heartbeat_impl(op, 10240) == "xla"
+
+
+@pytest.mark.skipif(not kernels.have_jax(), reason="needs jax")
+def test_heartbeat_env_pin_beats_auto_promotion(monkeypatch):
+    monkeypatch.setenv(kernels.HEARTBEAT_MIN_M_ENV, "1")
+    monkeypatch.setenv(kernels.KERNELS_ENV,
+                       "machines_with_candidates=numpy")
+    assert kernels.heartbeat_impl("machines_with_candidates", 10240) == "numpy"
+    # un-pinned op still auto-promotes
+    assert kernels.heartbeat_impl("heartbeat_masks", 10240) == "xla"
+
+
+@pytest.mark.skipif(not kernels.have_jax(), reason="needs jax")
+def test_heartbeat_dispatch_profiles_promoted_impl(monkeypatch):
+    monkeypatch.setenv(kernels.HEARTBEAT_MIN_M_ENV, "8")
+    kernels.reset_profile()
+    rng = np.random.default_rng(0)
+    avail = rng.uniform(0.2, 1.0, size=(16, 4))
+    dem = rng.uniform(0.05, 0.3, size=(5, 4))
+    fd = np.arange(4)
+    kernels.machines_with_candidates(avail, dem, fd, np.array([0, 1]),
+                                     np.array([2, 3]), 0.25, True)
+    kernels.machines_with_candidates(avail[:4], dem, fd, np.array([0, 1]),
+                                     np.array([2, 3]), 0.25, True)
+    prof = kernels.profile_snapshot()
+    assert prof["machines_with_candidates.xla"][0] == 1
+    assert prof["machines_with_candidates.numpy"][0] == 1
+
+
+def test_active_reports_small_m_selection(monkeypatch):
+    monkeypatch.delenv(kernels.KERNELS_ENV, raising=False)
+    # the m-agnostic view stays the exact oracle for the heartbeat ops
+    assert kernels.active()["machines_with_candidates"] == "numpy"
+    assert kernels.active()["heartbeat_masks"] == "numpy"
+
+
+# ----------------------------------------------------------------------
+# end-to-end shard-count invariance (acceptance bar)
+# ----------------------------------------------------------------------
+
+def _decision_key(res):
+    return ([(j.job_id, repr(j.jct)) for j in
+             sorted(res.jobs, key=lambda j: j.job_id)],
+            repr(res.makespan))
+
+
+def test_sim_decisions_invariant_across_shard_counts():
+    dags = online_mix_workload(10, seed=4)
+    keys = {}
+    for shards in (1, 2, 4):
+        res = run_workload(dags, "dagps", n_machines=64, interarrival=1.0,
+                           n_groups=3, seed=4, build_machines=4,
+                           matcher_shards=shards)
+        assert res.shard_stats["n_shards"] == shards
+        keys[shards] = _decision_key(res)
+    assert keys[1] == keys[2] == keys[4]
+
+
+def test_sim_decisions_invariant_under_churn():
+    # failures + stragglers + speculation exercise the _JOIN single-machine
+    # rematch path and the requeue bookkeeping under sharding
+    dags = online_mix_workload(8, seed=9)
+    keys = {}
+    for shards in (1, 3):
+        res = run_workload(dags, "dagps", n_machines=48, interarrival=2.0,
+                           n_groups=2, seed=9, build_machines=4,
+                           matcher_shards=shards, straggle_prob=0.1,
+                           failure_rate=0.002, repair_time=30.0)
+        keys[shards] = _decision_key(res)
+    assert keys[1] == keys[3]
+
+
+@pytest.mark.skipif(not kernels.have_jax(), reason="needs jax")
+def test_sim_decisions_invariant_under_forced_xla(monkeypatch):
+    # sound-superset eligibility end-to-end: promoting the accelerated
+    # kernels at every machine count must not change a single decision
+    dags = online_mix_workload(6, seed=2)
+    base = run_workload(dags, "dagps", n_machines=32, interarrival=1.5,
+                        n_groups=2, seed=2, build_machines=4,
+                        matcher_shards=2)
+    monkeypatch.setenv(kernels.HEARTBEAT_MIN_M_ENV, "1")
+    forced = run_workload(dags, "dagps", n_machines=32, interarrival=1.5,
+                          n_groups=2, seed=2, build_machines=4,
+                          matcher_shards=2)
+    assert _decision_key(base) == _decision_key(forced)
+
+
+def test_routed_wave_starts_valid_disjoint_tasks():
+    # distributed mode smoke: picks are disjoint rows, machines stay in
+    # the owning shard, avail never goes rigid-negative
+    rng = np.random.default_rng(21)
+    batch = _random_batch(rng, n_jobs=8, per_job=(2, 7))
+    avail = rng.uniform(0.3, 1.0, size=(40, 4))
+    alive = np.ones(40, dtype=bool)
+    sm = _mk_sharded(40, 4, {g: 1.0 for g in range(3)})
+    started = []
+
+    def cb(row, machine):
+        started.append((row, machine))
+        avail[machine] -= batch.dem[row]
+        np.clip(avail[machine], 0.0, None, out=avail[machine])
+
+    with sm:
+        n = sm.match_wave_routed(avail, alive, batch, cb)
+    assert n == len(started) > 0
+    rows = [r for r, _m in started]
+    assert len(rows) == len(set(rows))
+    routed = route_exposure(batch, sm.plan)
+    for row, machine in started:
+        assert sm.plan.shard_of(machine) == next(
+            s for s, ri in enumerate(routed) if row in ri)
+    assert sm.handoffs == 1
