@@ -455,6 +455,61 @@ def bench_online_sharded() -> None:
                      0.0, sec)
 
 
+def bench_degraded() -> None:
+    """s11: matching under a quarantined eligibility shard (core/faults.py).
+
+    A raise-all plan on shard 0 fails its first launch, quarantines it
+    (quarantine_after=1, probes off) and serves every later wave from the
+    conservative all-eligible mask — the worst sustained degraded mode the
+    recovery policy can park in.  The gated wall row is the degraded run;
+    the healthy run rides along for the overhead ratio, and
+    ``decisions_equal`` asserts the superset-soundness claim end-to-end:
+    degraded decisions are bit-identical (backoff pinned to 0 so the row
+    times extra mask work, not injected sleeps).
+    """
+    from repro.core import FaultPlan, RecoveryPolicy
+    from benchmarks import common
+
+    n_m, n_j = (1024, 80) if common.QUICK else (2048, 120)
+    dags = online_mix_workload(n_j, seed=88)
+    kw = dict(n_machines=n_m, interarrival=0.5, seed=88, build_machines=4,
+              matcher_shards=2, profile=common.PROFILE)
+    # warm the schedule cache so both timed legs pay zero construction
+    run_workload(dags, "dagps", **kw)
+    t0 = time.perf_counter()
+    healthy = run_workload(dags, "dagps", **kw)
+    dt_h = time.perf_counter() - t0
+    emit(f"s11_degraded_healthy_m{n_m}_j{n_j}_dagps", dt_h * 1e6,
+         round(float(np.median(healthy.jcts())), 1))
+    plan = FaultPlan.parse("seed=1;shard_launch:raise@1,shard=0")
+    rec = RecoveryPolicy(launch_timeout=None, launch_retries=0, backoff=0.0,
+                         backoff_cap=0.0, quarantine_after=1,
+                         probe_every=10 ** 9)
+    t0 = time.perf_counter()
+    degraded = run_workload(dags, "dagps", fault_plan=plan, recovery=rec,
+                            **kw)
+    dt_d = time.perf_counter() - t0
+    emit(f"s11_degraded_m{n_m}_j{n_j}_dagps", dt_d * 1e6,
+         round(float(np.median(degraded.jcts())), 1))
+    # counter rows (us_per_call 0: not re-gated)
+    emit("s11_degraded_overhead_ratio", 0.0,
+         round(dt_d / max(dt_h, 1e-9), 2))
+    emit("s11_degraded_decisions_equal", 0.0, int(
+        [repr(j.jct) for j in sorted(degraded.jobs, key=lambda j: j.job_id)]
+        == [repr(j.jct) for j in sorted(healthy.jobs, key=lambda j: j.job_id)]
+        and repr(degraded.makespan) == repr(healthy.makespan)))
+    fs = degraded.fault_stats
+    emit("s11_degraded_injections", 0.0,
+         fs["injections"].get("shard_launch.raise", 0))
+    emit("s11_degraded_quarantines", 0.0, fs["shard"]["quarantines"])
+    emit("s11_degraded_quarantined_launches", 0.0,
+         fs["shard"]["quarantined_launches"])
+    if common.PROFILE:
+        emit_phases("s11_degraded_dagps", degraded.phase_times)
+        emit("s11_degraded_recovery_secs", 0.0, fs["recovery_secs"])
+
+
 ALL = [bench_jct, bench_makespan, bench_fairness, bench_alternatives,
        bench_lowerbound, bench_sensitivity, bench_domains, bench_construction,
-       bench_online_large, bench_online_churn, bench_online_sharded]
+       bench_online_large, bench_online_churn, bench_online_sharded,
+       bench_degraded]

@@ -67,6 +67,7 @@ def main() -> None:
         "online_large": [bench_scheduling.bench_online_large],
         "online_churn": [bench_scheduling.bench_online_churn],
         "online_sharded": [bench_scheduling.bench_online_sharded],
+        "degraded": [bench_scheduling.bench_degraded],
         "pipeline": [bench_systems.bench_pipeline],
         "roofline": [bench_systems.bench_roofline],
         "kernels": [bench_systems.bench_kernels],

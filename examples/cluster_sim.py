@@ -41,6 +41,22 @@ def main():
                          "any shard count)")
     ap.add_argument("--profile", action="store_true",
                     help="print per-phase wall-clock timings")
+    ap.add_argument("--fault-plan", default=None, metavar="SPEC",
+                    help="fault-injection plan spec (core/faults.py "
+                         "grammar), e.g. "
+                         "'seed=7;shard_launch:raise@0.3;"
+                         "heartbeat:drop@0.05' — exact-recoverable seams "
+                         "reproduce the healthy decisions bit-for-bit")
+    ap.add_argument("--heartbeat-period", type=float, default=None,
+                    help="simulated machine heartbeat period in seconds "
+                         "(enables heartbeat-loss semantics: suspicion, "
+                         "declared-lost requeue, rejoin on flap)")
+    ap.add_argument("--hb-suspect-after", type=float, default=None,
+                    help="silence before a machine stops receiving tasks "
+                         "(default 2.5 heartbeat periods)")
+    ap.add_argument("--hb-lost-after", type=float, default=None,
+                    help="silence before a machine is declared lost and "
+                         "its tasks requeue (default 5 periods)")
     args = ap.parse_args()
 
     archs = ["granite3_8b", "gemma2_2b", "mixtral_8x7b", "rwkv6_7b",
@@ -57,15 +73,26 @@ def main():
                                placement_backend=args.backend,
                                build_workers=args.build_workers or None,
                                matcher_shards=args.shards or None,
-                               profile=args.profile)
+                               profile=args.profile,
+                               fault_plan=args.fault_plan,
+                               heartbeat_period=args.heartbeat_period,
+                               hb_suspect_after=args.hb_suspect_after,
+                               hb_lost_after=args.hb_lost_after)
         jcts = res.jcts()
         print(f"{policy:10s}: median JCT {np.median(jcts):8.1f}s  "
               f"p75 {np.percentile(jcts, 75):8.1f}s  makespan {res.makespan:8.1f}s")
         if args.profile and res.phase_times:
             pt = res.phase_times
             print(f"{'':10s}  phases: build {pt['build']:.2f}s  "
-                  f"match {pt['match']:.2f}s  event {pt['event']:.2f}s  "
-                  f"total {pt['total']:.2f}s")
+                  f"match {pt['match']:.2f}s  recovery {pt['recovery']:.2f}s  "
+                  f"event {pt['event']:.2f}s  total {pt['total']:.2f}s")
+        if args.fault_plan or args.heartbeat_period:
+            fs = res.fault_stats or {}
+            hb = fs.get("heartbeat", {})
+            print(f"{'':10s}  faults: injected {fs.get('injections', {})}  "
+                  f"shard {fs.get('shard', {})}")
+            if args.heartbeat_period:
+                print(f"{'':10s}  heartbeats: {hb}")
 
 
 if __name__ == "__main__":

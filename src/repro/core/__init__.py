@@ -1,5 +1,6 @@
 """The paper's primary contribution: DAGPS scheduling (offline §4 + online §5 + bounds §6)."""
 from .dag import DAG, dag_digest, from_stage_graph
+from .faults import FaultPlan, FaultSpec, InjectedFault, RecoveryPolicy
 from .space import Space, SpaceSnapshot
 from .engine import (BatchedBackend, JitBackend, PlacementBackend,
                      ReferenceBackend, available_backends, get_backend)

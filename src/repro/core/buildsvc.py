@@ -55,6 +55,7 @@ from typing import Sequence
 
 import numpy as np
 
+from . import faults
 from .builder import Schedule, build_schedule
 from .dag import DAG, dag_digest
 from .engine import get_backend
@@ -119,13 +120,22 @@ def _default_mp_context():
 # worker side
 # ----------------------------------------------------------------------
 
-def _build_slim(dag: DAG, m: int, kw: dict) -> tuple:
+def _build_slim(dag: DAG, m: int, kw: dict,
+                fault_key: tuple | None = None) -> tuple:
     """One build, returned as the slim array tuple BuildHandle rebinds.
 
     Module-level so process pools can pickle it; also the single code
     path for every mode (serial/thread pools call it too), keeping the
     three modes trivially output-identical.
+
+    ``fault_key = (digest_hex, attempt)`` is set only on *pool* attempts:
+    it arms the ``build_worker`` injection seam (process workers inherit
+    a plan through REPRO_FAULTS).  Inline/serial builds never inject —
+    they are the trusted final resort of the retry policy.
     """
+    if fault_key is not None:
+        faults.maybe_fail("build_worker", digest=fault_key[0],
+                          attempt=fault_key[1])
     s = build_schedule(dag, m, **kw)
     return (s.order, s.start, s.machine, float(s.makespan), float(s.tick),
             s.trouble_mask, s.label)
@@ -168,6 +178,18 @@ _KNOB_DEFAULTS = {
 }
 
 
+def _complete(out: Future, result=None, exc=None) -> None:
+    """Complete a supervised future, tolerating a lost shutdown race
+    (already cancelled / already completed)."""
+    try:
+        if exc is not None:
+            out.set_exception(exc)
+        elif not out.done():
+            out.set_result(result)
+    except Exception:
+        pass
+
+
 class BuildService:
     """A worker pool + digest-dedup front over ``build_schedule``.
 
@@ -178,7 +200,8 @@ class BuildService:
     """
 
     def __init__(self, workers: int | None = None, mode: str | None = None,
-                 cache_cap: int = 1024):
+                 cache_cap: int = 1024,
+                 recovery: faults.RecoveryPolicy | None = None):
         self.workers = workers if workers is not None else default_workers()
         if self.workers < 1:
             raise ValueError("workers must be >= 1")
@@ -188,25 +211,35 @@ class BuildService:
             raise ValueError(f"unknown build-service mode {mode!r}; "
                              f"have {MODES}")
         self.mode = mode
+        self.recovery = recovery or faults.RecoveryPolicy()
         self._cache_cap = max(cache_cap, 1)
         self._lock = threading.Lock()
         self._futures: dict[tuple, Future] = {}   # dedup front + result cache
         self._pool = None
         self._closed = False
-        self.stats = {"submitted": 0, "built": 0, "deduped": 0}
+        #: digest_hex -> worker-crash count; quarantined digests build inline
+        self._crashes: dict[str, int] = {}
+        self._poison: set[str] = set()
+        #: pending retry timers -> their re-dispatch args (drained on shutdown)
+        self._timers: dict[threading.Timer, tuple] = {}
+        self.stats = {"submitted": 0, "built": 0, "deduped": 0,
+                      "retries": 0, "worker_crashes": 0,
+                      "quarantined_digests": 0, "inline_fallbacks": 0,
+                      "recovery_secs": 0.0}
 
     # ------------------------------------------------------------------
     def _ensure_pool(self):
-        if self._pool is None and self.mode != "serial":
-            if self.mode == "thread":
-                self._pool = ThreadPoolExecutor(
-                    max_workers=self.workers,
-                    thread_name_prefix="buildsvc")
-            else:
-                self._pool = ProcessPoolExecutor(
-                    max_workers=self.workers,
-                    mp_context=_default_mp_context())
-        return self._pool
+        with self._lock:
+            if self._pool is None and self.mode != "serial":
+                if self.mode == "thread":
+                    self._pool = ThreadPoolExecutor(
+                        max_workers=self.workers,
+                        thread_name_prefix="buildsvc")
+                else:
+                    self._pool = ProcessPoolExecutor(
+                        max_workers=self.workers,
+                        mp_context=_default_mp_context())
+            return self._pool
 
     def key_for(self, dag: DAG, m: int, backend=None,
                 memoize: bool | None = None, **knobs) -> tuple:
@@ -247,34 +280,134 @@ class BuildService:
             if fut is not None and not fut.cancelled() and not (
                     fut.done() and fut.exception() is not None):
                 # dedup hit — a *failed* entry is dropped instead, so a
-                # transient worker death (OOM kill, broken pool) never
-                # poisons its key: the next submit retries the build
+                # deterministic build error never poisons its key: the
+                # next submit retries the build
                 self.stats["deduped"] += 1
                 self._futures[key] = fut     # re-append = most recently used
                 return BuildHandle(fut, dag, key)
             self.stats["built"] += 1
-            if self.mode == "serial":
-                fut = Future()
-            else:
-                try:
-                    fut = self._ensure_pool().submit(_build_slim, dag, m, kw)
-                except BrokenExecutor:
-                    # dispose the broken pool and retry once on a fresh one
-                    self._pool.shutdown(wait=False)
-                    self._pool = None
-                    fut = self._ensure_pool().submit(_build_slim, dag, m, kw)
+            # supervised future: pool attempts complete it indirectly, so
+            # every dedup sharer survives worker crashes and retries — the
+            # caller-visible future only ever fails on a deterministic
+            # build error (reproduced by the inline fallback)
+            fut = Future()
             if len(self._futures) >= self._cache_cap:
                 self._futures.pop(next(iter(self._futures)))
             self._futures[key] = fut
-        if self.mode == "serial":
-            try:
-                fut.set_result(_build_slim(dag, m, kw))
-            except Exception as exc:
-                fut.set_exception(exc)
-            except BaseException as exc:  # KeyboardInterrupt/SystemExit:
-                fut.set_exception(exc)    # unblock any dedup sharer ...
-                raise                     # ... but never swallow the cancel
+        self._dispatch(key, fut, dag, m, kw, attempt=0)
         return BuildHandle(fut, dag, key)
+
+    # -- supervised dispatch (retry / quarantine / inline fallback) ----
+
+    def _dispatch(self, key: tuple, out: Future, dag: DAG, m: int,
+                  kw: dict, attempt: int) -> None:
+        """Route one build attempt: pool while the retry budget and the
+        digest's crash record allow, guaranteed inline otherwise."""
+        digest = key[0].hex()
+        with self._lock:
+            inline = (self.mode == "serial" or self._closed
+                      or digest in self._poison
+                      or attempt > self.recovery.build_retries)
+            fallback = inline and self.mode != "serial"
+        if inline:
+            self._finish_inline(out, dag, m, kw, fallback=fallback)
+            return
+        try:
+            pool = self._ensure_pool()
+            wfut = pool.submit(_build_slim, dag, m, kw, (digest, attempt))
+        except BrokenExecutor:
+            self._note_worker_crash(digest, None)
+            self._retry_later(key, out, dag, m, kw, attempt + 1)
+            return
+        except RuntimeError:
+            # pool shut down under us — the fallback still owes a result
+            self._finish_inline(out, dag, m, kw, fallback=True)
+            return
+
+        def _done(f: Future) -> None:
+            if f.cancelled():               # pool torn down mid-attempt
+                self._finish_inline(out, dag, m, kw, fallback=True)
+                return
+            exc = f.exception()
+            if exc is None:
+                _complete(out, result=f.result())
+                return
+            if isinstance(exc, BrokenExecutor):
+                # worker died (os._exit, OOM kill): every in-flight
+                # attempt on the pool fails with it; dispose the pool
+                # once and let each attempt retry with backoff
+                self._note_worker_crash(digest, f)
+            with self._lock:
+                self.stats["retries"] += 1
+            self._retry_later(key, out, dag, m, kw, attempt + 1)
+
+        wfut.add_done_callback(_done)
+
+    def _note_worker_crash(self, digest: str, wfut: Future | None) -> None:
+        """Record one crash against a digest; quarantine crash-loopers.
+
+        Attribution is conservative: a broken pool fails every in-flight
+        digest, so innocents sharing the pool with a poison DAG may also
+        accumulate counts — they just fall back inline (still exact).
+        """
+        with self._lock:
+            self.stats["worker_crashes"] += 1
+            n = self._crashes[digest] = self._crashes.get(digest, 0) + 1
+            if (n >= max(self.recovery.quarantine_after, 1)
+                    and digest not in self._poison):
+                self._poison.add(digest)
+                self.stats["quarantined_digests"] += 1
+            pool, self._pool = self._pool, None
+        if pool is not None:
+            pool.shutdown(wait=False)
+
+    def _retry_later(self, key: tuple, out: Future, dag: DAG, m: int,
+                     kw: dict, attempt: int) -> None:
+        rec = self.recovery
+        delay = min(rec.backoff * (2.0 ** (attempt - 1)), rec.backoff_cap)
+        with self._lock:
+            closed = self._closed
+            if not closed and delay > 0:
+                self.stats["recovery_secs"] += delay
+        if closed or delay <= 0:
+            self._dispatch(key, out, dag, m, kw, attempt)
+            return
+        timer = threading.Timer(delay, self._fire_retry)
+        timer.args = (timer,)
+        timer.daemon = True
+        with self._lock:
+            if self._closed:                # raced with shutdown: no timer
+                self._finish_inline(out, dag, m, kw, fallback=True)
+                return
+            self._timers[timer] = (key, out, dag, m, kw, attempt)
+        timer.start()
+
+    def _fire_retry(self, timer: threading.Timer) -> None:
+        with self._lock:
+            args = self._timers.pop(timer, None)
+        if args is not None:
+            self._dispatch(*args)
+
+    def _finish_inline(self, out: Future, dag: DAG, m: int, kw: dict,
+                       fallback: bool = False) -> None:
+        """The guaranteed last resort: build on the calling thread.
+
+        Never injected (no fault_key), so every submission eventually
+        resolves — with the schedule, or with the build's own
+        deterministic error.
+        """
+        if fallback:
+            with self._lock:
+                self.stats["inline_fallbacks"] += 1
+        try:
+            res = _build_slim(dag, m, kw)
+        except Exception as exc:
+            _complete(out, exc=exc)
+        except BaseException as exc:  # KeyboardInterrupt/SystemExit:
+            _complete(out, exc=exc)   # unblock any dedup sharer ...
+            raise                     # ... but never swallow the cancel
+        else:
+            _complete(out, result=res)
 
     def build(self, dag: DAG, m: int, **kw) -> Schedule:
         return self.submit(dag, m, **kw).result()
@@ -297,6 +430,19 @@ class BuildService:
         with self._lock:
             self._closed = True
             pool, self._pool = self._pool, None
+            timers = list(self._timers.items())
+            self._timers.clear()
+        # drain pending retries so no supervised future is left dangling:
+        # finish inline when waiting, cancel outright otherwise
+        for timer, (key, out, dag, m, kw, attempt) in timers:
+            timer.cancel()
+            if out.done():
+                continue
+            if wait:
+                self._finish_inline(out, dag, m, kw, fallback=True)
+            elif not out.cancel():
+                _complete(out, exc=RuntimeError(
+                    "BuildService shut down before retry"))
         if pool is not None:
             pool.shutdown(wait=wait, cancel_futures=not wait)
 

@@ -46,6 +46,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from .. import faults
 from ..space import runs_of_k
 from . import packing
 from .base import ceil32
@@ -107,6 +108,49 @@ def stat_add(key: str, n: int = 1) -> None:
     """Atomically bump one XLA_STATS counter (shared with core/engine/jit)."""
     with _STATS_LOCK:
         XLA_STATS[key] += n
+
+
+#: sticky runtime demotions: op -> impls that raised at dispatch and are
+#: excluded from resolution until `reset_demotions` (degraded mode —
+#: decision-exact because resolution lands on the numpy oracle, which
+#: defines correct output for every op).  numpy itself is never demoted.
+_DEMOTED: dict[str, set] = {}
+
+
+def demote(op: str, impl: str) -> None:
+    """Sticky-demote one (op, impl) after a dispatch failure.
+
+    Counted in PROFILE under ``"{op}.{impl}.demoted"`` (calls slot; the
+    seconds slot stays 0.0) so bench rows and `SimResult.fault_stats`
+    can report demotion events alongside normal dispatch accounting.
+    """
+    if impl == "numpy":
+        raise ValueError("the numpy oracle cannot be demoted")
+    with _STATS_LOCK:
+        _DEMOTED.setdefault(op, set()).add(impl)
+        key = f"{op}.{impl}.demoted"
+        slot = PROFILE.get(key)
+        if slot is None:
+            slot = PROFILE[key] = [0, 0.0]
+        slot[0] += 1
+
+
+def demoted_impls(op: str) -> frozenset:
+    with _STATS_LOCK:
+        return frozenset(_DEMOTED.get(op, ()))
+
+
+def demotions_snapshot() -> dict[str, int]:
+    """{"op.impl": demotion events} — the delta-able fault_stats view."""
+    with _STATS_LOCK:
+        return {k: int(v[0]) for k, v in PROFILE.items()
+                if k.endswith(".demoted")}
+
+
+def reset_demotions() -> None:
+    """Re-admit every demoted impl (tests / operator re-enable)."""
+    with _STATS_LOCK:
+        _DEMOTED.clear()
 
 
 # ----------------------------------------------------------------------
@@ -693,12 +737,16 @@ def resolve(op: str) -> tuple[str, Callable]:
     """(impl name, callable) for one op, honoring env + availability.
 
     The requested implementation falls back down the IMPLS chain when it
-    is unregistered or reports unavailable; numpy is always registered,
-    so resolution always succeeds.
+    is unregistered, reports unavailable, or has been sticky-demoted
+    after a dispatch failure; numpy is always registered and never
+    demoted, so resolution always succeeds.
     """
     want = _requested().get(op, "numpy")
     start = IMPLS.index(want)
+    demoted = _DEMOTED.get(op, ())
     for impl in IMPLS[start:]:
+        if impl in demoted:
+            continue
         ent = _REGISTRY.get((op, impl))
         if ent is not None and ent[1]():
             return impl, ent[0]
@@ -716,7 +764,8 @@ def resolve_heartbeat(op: str, n_machines: int) -> tuple[str, Callable]:
     """
     if op not in HEARTBEAT_AUTO_OPS:
         raise ValueError(f"not a heartbeat op: {op!r}; have {HEARTBEAT_AUTO_OPS}")
-    if op not in _requested() and n_machines >= heartbeat_device_min_m():
+    if (op not in _requested() and n_machines >= heartbeat_device_min_m()
+            and "xla" not in _DEMOTED.get(op, ())):
         ent = _REGISTRY.get((op, "xla"))
         if ent is not None and ent[1]():
             return "xla", ent[0]
@@ -752,9 +801,35 @@ def _call_profiled(op: str, impl: str, fn: Callable, *args, **kwargs):
             slot[1] += dt
 
 
+def _profile_calls(key: str) -> int:
+    with _STATS_LOCK:
+        slot = PROFILE.get(key)
+        return int(slot[0]) if slot else 0
+
+
+def _run_op(op: str, resolver: Callable[[], tuple[str, Callable]],
+            args, kwargs):
+    """Dispatch with sticky demotion: a non-numpy impl that raises (real
+    bug or injected ``kernel_impl`` fault) is demoted and the op re-
+    resolves down the chain — the numpy oracle terminates the loop, so
+    dispatch always returns the exact answer or propagates a genuine
+    numpy-level error.  The fault seam is keyed by the impl's running
+    call count so probabilistic plans fire per-call, not per-op."""
+    while True:
+        impl, fn = resolver()
+        try:
+            if impl != "numpy":
+                faults.maybe_fail("kernel_impl", op=op, impl=impl,
+                                  call=_profile_calls(f"{op}.{impl}"))
+            return _call_profiled(op, impl, fn, *args, **kwargs)
+        except Exception:
+            if impl == "numpy":
+                raise
+            demote(op, impl)
+
+
 def _dispatch(op: str, *args, **kwargs):
-    impl, fn = resolve(op)
-    return _call_profiled(op, impl, fn, *args, **kwargs)
+    return _run_op(op, lambda: resolve(op), args, kwargs)
 
 
 # -- public dispatching entry points -----------------------------------
@@ -775,17 +850,19 @@ def pack_score(avail, demand, clip=False):
 def heartbeat_masks(avail, demands, fit_dims, rigid_dims, fungible_dims,
                     overbook_slack=0.0, use_overbooking=True):
     avail = np.asarray(avail)
-    impl, fn = resolve_heartbeat("heartbeat_masks", avail.shape[0])
-    return _call_profiled("heartbeat_masks", impl, fn, avail, demands,
-                          fit_dims, rigid_dims, fungible_dims,
-                          overbook_slack, use_overbooking)
+    return _run_op("heartbeat_masks",
+                   lambda: resolve_heartbeat("heartbeat_masks",
+                                             avail.shape[0]),
+                   (avail, demands, fit_dims, rigid_dims, fungible_dims,
+                    overbook_slack, use_overbooking), {})
 
 
 def machines_with_candidates(avail, demands, fit_dims, rigid_dims,
                              fungible_dims, overbook_slack=0.0,
                              use_overbooking=True):
     avail = np.asarray(avail)
-    impl, fn = resolve_heartbeat("machines_with_candidates", avail.shape[0])
-    return _call_profiled("machines_with_candidates", impl, fn, avail,
-                          demands, fit_dims, rigid_dims, fungible_dims,
-                          overbook_slack, use_overbooking)
+    return _run_op("machines_with_candidates",
+                   lambda: resolve_heartbeat("machines_with_candidates",
+                                             avail.shape[0]),
+                   (avail, demands, fit_dims, rigid_dims, fungible_dims,
+                    overbook_slack, use_overbooking), {})

@@ -51,6 +51,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from . import faults
 from .engine import kernels
 from .online import CandidateBatch, Matcher, MatcherConfig
 
@@ -160,9 +161,11 @@ class ShardedMatcher:
 
     def __init__(self, cfg: MatcherConfig, n_machines: int,
                  shares: dict[int, float], n_shards: int | None = None,
-                 capacity: float | None = None):
+                 capacity: float | None = None,
+                 recovery: faults.RecoveryPolicy | None = None):
         self.plan = ShardPlan(n_machines, n_shards)
         self.cfg = cfg
+        self.recovery = recovery or faults.RecoveryPolicy()
         capacity = float(n_machines) if capacity is None else float(capacity)
         self.capacity = capacity
         #: global decision matcher — the single source of pick order
@@ -179,6 +182,20 @@ class ShardedMatcher:
         #: per-shard seconds inside the heartbeat eligibility kernels
         self.kernel_secs = [0.0] * self.plan.n_shards
         self._pool: ThreadPoolExecutor | None = None
+        # -- degraded-mode state (core/faults.py): per-shard launch health
+        n = self.plan.n_shards
+        self.quarantined = [False] * n
+        self._consec_fail = [0] * n
+        self._probe_wait = [0] * n
+        self._any_quarantined = False
+        self.launch_retries = 0      # retried attempts that got another try
+        self.launch_failures = 0     # launches that exhausted every attempt
+        self.quarantine_events = 0
+        self.quarantined_launches = 0  # waves served by the all-eligible mask
+        self.probe_recoveries = 0
+        #: wall-seconds in failed attempts + backoff sleeps + probes
+        #: (phase_recovery in the simulator, not phase_match)
+        self.recovery_secs = 0.0
 
     # -- lifecycle ------------------------------------------------------
 
@@ -203,9 +220,11 @@ class ShardedMatcher:
 
     # -- eligibility fan-out --------------------------------------------
 
-    def _launch(self, s: int, avail_rows: np.ndarray,
-                dem: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    def _launch(self, s: int, avail_rows: np.ndarray, dem: np.ndarray,
+                attempt: int = 0) -> tuple[np.ndarray, np.ndarray]:
         """One shard's batched eligibility launch (timed per shard)."""
+        faults.maybe_fail("shard_launch", shard=s, wave=self.waves,
+                          attempt=attempt)
         cfg = self.cfg
         fd, rigid, fung = self.matcher.fit_dim_split()
         t0 = time.perf_counter()
@@ -215,6 +234,87 @@ class ShardedMatcher:
         self.kernel_secs[s] += time.perf_counter() - t0
         return out
 
+    @staticmethod
+    def _conservative(avail_rows: np.ndarray,
+                      dem: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """The all-eligible fallback mask for one shard's machine slice.
+
+        A sound superset of any real eligibility result — the masks only
+        ever *skip* machines that provably cannot pick (see the kernels
+        exactness contract), so all-True makes the wave visit every
+        machine in the slice and decide identically, just slower.
+        """
+        n = np.atleast_2d(np.asarray(dem)).shape[0]
+        m = avail_rows.shape[0]
+        eligible = np.ones((n, m), dtype=bool)
+        return eligible, eligible.any(axis=0)
+
+    def _timed_attempt(self, s: int, avail_rows: np.ndarray,
+                       dem: np.ndarray, attempt: int):
+        """One guarded attempt, bounded by the policy's launch timeout.
+
+        Runs on the shard executor so a hung launch (thread stuck in a
+        kernel) is abandoned by timeout instead of blocking the wave; an
+        abandoned thread eventually finishes or permanently occupies one
+        pool slot — either way later attempts/waves keep moving, and
+        repeated timeouts land the shard in quarantine.
+        """
+        timeout = self.recovery.launch_timeout
+        if timeout is None:
+            return self._launch(s, avail_rows, dem, attempt)
+        fut = self._executor().submit(self._launch, s, avail_rows, dem,
+                                      attempt)
+        return fut.result(timeout=timeout)
+
+    def _guarded_launch(self, s: int, avail_rows: np.ndarray,
+                        dem: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Degraded-mode launch: retry w/ capped backoff, quarantine after
+        repeated failure, probe-recover on a fixed wave cadence."""
+        rec = self.recovery
+        if self.quarantined[s]:
+            self._probe_wait[s] += 1
+            if self._probe_wait[s] >= max(rec.probe_every, 1):
+                self._probe_wait[s] = 0
+                t0 = time.perf_counter()
+                try:
+                    out = self._timed_attempt(s, avail_rows, dem, attempt=0)
+                except Exception:
+                    out = None
+                self.recovery_secs += time.perf_counter() - t0
+                if out is not None:
+                    self.quarantined[s] = False
+                    self._consec_fail[s] = 0
+                    self.probe_recoveries += 1
+                    self._any_quarantined = any(self.quarantined)
+                    return out
+            self.quarantined_launches += 1
+            return self._conservative(avail_rows, dem)
+        for attempt in range(rec.launch_retries + 1):
+            t0 = time.perf_counter()
+            try:
+                out = self._timed_attempt(s, avail_rows, dem, attempt)
+            except Exception:
+                self.recovery_secs += time.perf_counter() - t0
+                if attempt < rec.launch_retries:
+                    self.launch_retries += 1
+                    delay = min(rec.backoff * (2.0 ** attempt),
+                                rec.backoff_cap)
+                    if delay > 0:
+                        time.sleep(delay)
+                        self.recovery_secs += delay
+            else:
+                self._consec_fail[s] = 0
+                return out
+        self.launch_failures += 1
+        self._consec_fail[s] += 1
+        if self._consec_fail[s] >= max(rec.quarantine_after, 1):
+            self.quarantined[s] = True
+            self._probe_wait[s] = 0
+            self.quarantine_events += 1
+            self._any_quarantined = True
+        self.quarantined_launches += 1
+        return self._conservative(avail_rows, dem)
+
     def eligibility(self, avail: np.ndarray,
                     dem: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         """Sound-superset (eligible (n, m), machine_any (m,)) for a wave.
@@ -223,14 +323,27 @@ class ShardedMatcher:
         there is more than one shard.  Columns are per-machine
         independent, so concatenating the per-shard blocks reproduces a
         single global launch exactly.
+
+        With a fault plan active (core/faults.py) or any shard in
+        quarantine, launches route through the guarded path — per-attempt
+        timeout, capped-backoff retry, quarantine to the conservative
+        all-eligible mask — which is decision-exact by the superset
+        argument.  Without either, the healthy fast path below runs
+        unchanged.
         """
         plan = self.plan
-        if plan.n_shards == 1:
-            return self._launch(0, avail, dem)
         slices = plan.slices()
-        parts = list(self._executor().map(
-            lambda s: self._launch(s, avail[slices[s]], dem),
-            range(plan.n_shards)))
+        if faults.active_plan() is not None or self._any_quarantined:
+            parts = [self._guarded_launch(s, avail[slices[s]], dem)
+                     for s in range(plan.n_shards)]
+        elif plan.n_shards == 1:
+            return self._launch(0, avail, dem)
+        else:
+            parts = list(self._executor().map(
+                lambda s: self._launch(s, avail[slices[s]], dem),
+                range(plan.n_shards)))
+        if plan.n_shards == 1:
+            return parts[0]
         eligible = np.concatenate([p[0] for p in parts], axis=1)
         machine_any = np.concatenate([p[1] for p in parts])
         return eligible, machine_any
@@ -375,4 +488,12 @@ class ShardedMatcher:
             "picks": self.picks,
             "handoffs": self.handoffs,
             "kernel_secs": [round(s, 6) for s in self.kernel_secs],
+            "launch_retries": self.launch_retries,
+            "launch_failures": self.launch_failures,
+            "quarantines": self.quarantine_events,
+            "quarantined_shards": [i for i, q in enumerate(self.quarantined)
+                                   if q],
+            "quarantined_launches": self.quarantined_launches,
+            "probe_recoveries": self.probe_recoveries,
+            "recovery_secs": round(self.recovery_secs, 6),
         }

@@ -86,7 +86,12 @@ def schedule_cluster(jobs: list[TPUJob], n_slices: int = 32,
                      placement_backend: str | None = None,
                      build_workers: int | None = 1,
                      matcher_shards: int | None = None,
-                     profile: bool = False):
+                     profile: bool = False,
+                     fault_plan=None,
+                     heartbeat_period: float | None = None,
+                     hb_suspect_after: float | None = None,
+                     hb_lost_after: float | None = None,
+                     recovery=None):
     """Gang-schedule the jobs' stage DAGs onto pod slices with DAGPS.
 
     ``placement_backend`` selects the offline construction engine
@@ -97,6 +102,12 @@ def schedule_cluster(jobs: list[TPUJob], n_slices: int = 32,
     machine axis (None = auto by slice count; any value is bit-identical,
     see core/shard.py); ``profile`` collects per-phase wall-clock timings
     on the returned result.
+
+    Degraded-mode knobs (core/faults.py + docs/architecture.md):
+    ``fault_plan`` is a ``FaultPlan`` or its spec string, installed for
+    the run; ``heartbeat_period`` (+ ``hb_suspect_after`` /
+    ``hb_lost_after``) turns on heartbeat-loss semantics in the
+    simulator; ``recovery`` is a shared ``RecoveryPolicy``.
     """
     rng = np.random.default_rng(seed)
     arrivals = []
@@ -108,5 +119,10 @@ def schedule_cluster(jobs: list[TPUJob], n_slices: int = 32,
                     build_machines=max(n_slices // 8, 2),
                     placement_backend=placement_backend,
                     build_workers=build_workers,
-                    matcher_shards=matcher_shards, profile=profile)
+                    matcher_shards=matcher_shards, profile=profile,
+                    fault_plan=fault_plan,
+                    heartbeat_period=heartbeat_period,
+                    hb_suspect_after=hb_suspect_after,
+                    hb_lost_after=hb_lost_after,
+                    recovery=recovery)
     return ClusterSim(cfg, scheme(policy)).run(arrivals)

@@ -38,6 +38,7 @@ from typing import Sequence
 
 import numpy as np
 
+from ..core import faults
 from ..core.builder import build_schedule
 from ..core.buildsvc import BuildService
 from ..core.baselines import bfs_order, cp_order, random_order
@@ -53,8 +54,10 @@ from ..core.online import (
 from ..core.shard import ShardedMatcher
 
 # event codes (heap entries are (time, seq, code, int_arg) — payloads live in
-# side tables indexed by the int arg, never in per-event tuples/dicts)
-_ARRIVAL, _FINISH, _SPEC, _FAIL, _JOIN = range(5)
+# side tables indexed by the int arg, never in per-event tuples/dicts).
+# _HB = a machine emits a heartbeat, _HBA = a delayed heartbeat arrives at
+# the scheduler, _HBCHK = the scheduler checks a machine's silence deadline
+_ARRIVAL, _FINISH, _SPEC, _FAIL, _JOIN, _HB, _HBA, _HBCHK = range(8)
 
 
 class _RunTable:
@@ -192,6 +195,27 @@ class SimConfig:
     #: deficit ledgers are bookkept (merged + rebalanced every wave).
     matcher_shards: int | None = None
     profile: bool = False          # collect per-phase wall-clock timings
+    #: heartbeat-loss modeling (None disables it — the seed behavior, in
+    #: which matching waves are implicit and machines never go silent):
+    #: machines emit a heartbeat every `heartbeat_period` sim-seconds; a
+    #: machine silent for `hb_suspect_after` (default 2.5 periods) stops
+    #: receiving new tasks (suspected), and one silent for `hb_lost_after`
+    #: (default 5 periods) is declared lost — its running tasks requeue —
+    #: until a later heartbeat gets through and it rejoins (flap-
+    #: tolerant).  Distinct from `failure_rate` machine *failures*: a
+    #: lost machine's work is intact but unreachable, the paper-level
+    #: partition/GC-pause case.  Losses only occur when a `fault_plan`
+    #: drops or delays heartbeats; healthy heartbeats are decision-
+    #: neutral except for wave timing ties with the finish-drain loop.
+    heartbeat_period: float | None = None
+    hb_suspect_after: float | None = None
+    hb_lost_after: float | None = None
+    #: core.faults.FaultPlan (or its parse() spec string) installed for
+    #: the duration of the run; None leaves any ambient plan (installed
+    #: or REPRO_FAULTS) active
+    fault_plan: object | None = None
+    #: recovery knobs shared by the sharded matcher and build service
+    recovery: faults.RecoveryPolicy | None = None
 
 
 @dataclasses.dataclass
@@ -221,6 +245,10 @@ class SimResult:
     #: sharded-matcher accounting (n_shards / waves / picks / handoffs /
     #: per-shard heartbeat-kernel seconds), always collected
     shard_stats: dict | None = None
+    #: degraded-mode accounting, always collected: plan injections fired
+    #: during the run, shard launch retries/quarantines, build service
+    #: retries/crashes/fallbacks, kernel demotions, heartbeat-loss counts
+    fault_stats: dict | None = None
 
     def jcts(self) -> np.ndarray:
         return np.array([j.jct for j in self.jobs])
@@ -344,6 +372,13 @@ class ClusterSim:
 
     # ------------------------------------------------------------------
     def run(self, arrivals: Sequence[tuple[float, DAG, int]]) -> SimResult:
+        plan = faults.coerce(self.cfg.fault_plan)
+        if plan is None:
+            return self._run(arrivals)
+        with faults.scope(plan):
+            return self._run(arrivals)
+
+    def _run(self, arrivals: Sequence[tuple[float, DAG, int]]) -> SimResult:
         cfg = self.cfg
         rng = np.random.default_rng(cfg.seed)
         M, d = cfg.n_machines, cfg.d
@@ -354,8 +389,14 @@ class ClusterSim:
         mcfg = self.spec.matcher
         smatcher = ShardedMatcher(mcfg, M, shares,
                                   n_shards=cfg.matcher_shards,
-                                  capacity=float(M))
+                                  capacity=float(M),
+                                  recovery=cfg.recovery)
         matcher = smatcher.matcher
+        # degraded-mode accounting baselines (kernel demotions are sticky
+        # process state; injection stats accumulate on a reused plan)
+        ap = faults.active_plan()
+        inj0 = ap.snapshot() if ap is not None else {}
+        dem0 = kernels.demotions_snapshot()
 
         jobs: dict[int, _Job] = {}
         pool = TaskPool(d=d, expose=cfg.expose_per_job)
@@ -366,6 +407,28 @@ class ClusterSim:
         if cfg.failure_rate > 0:
             t_fail = float(rng.exponential(1.0 / cfg.failure_rate))
             heapq.heappush(events, (t_fail, next(counter), _FAIL, 0))
+
+        # heartbeat-loss state (disabled by default: no events scheduled,
+        # no rng consumed, both masks stay all-False — bit-identical to
+        # the implicit-heartbeat seed behavior)
+        hb_period = cfg.heartbeat_period
+        hb_on = hb_period is not None and hb_period > 0
+        suspected = np.zeros(M, dtype=bool)
+        hb_lost = np.zeros(M, dtype=bool)
+        hb_stats = {"beats": 0, "dropped": 0, "delayed": 0, "suspects": 0,
+                    "losses": 0, "rejoins": 0, "requeued": 0,
+                    "forced_rejoins": 0}
+        if hb_on:
+            hb_suspect = cfg.hb_suspect_after or 2.5 * hb_period
+            hb_lost_after = cfg.hb_lost_after or 5.0 * hb_period
+            last_seen = np.zeros(M, dtype=np.float64)
+            beat_no = np.zeros(M, dtype=np.int64)
+            hb_forced = np.zeros(M, dtype=bool)
+            for m in range(M):
+                heapq.heappush(events, (hb_period, next(counter), _HB, m))
+                # arm the silence check up front: a machine whose beats
+                # never arrive at all must still be detected
+                heapq.heappush(events, (hb_suspect, next(counter), _HBCHK, m))
 
         runs = _RunTable()
         task_active: dict[tuple[int, int], list[int]] = {}  # (job,task) -> run_ids
@@ -425,6 +488,19 @@ class ClusterSim:
                 avail[runs.machine[rid]] += \
                     jobs[int(runs.job[rid])].dag.demand[runs.task[rid]]
 
+        def requeue_machine(m: int) -> int:
+            """Kill every live run on a machine and requeue its tasks
+            (shared by hard failures and declared heartbeat losses)."""
+            cnt = 0
+            for rid in runs.live_on(m):
+                rid = int(rid)
+                free_run(rid)
+                job = jobs[int(runs.job[rid])]
+                job.task_requeued(int(runs.task[rid]))
+                pool.mark_dirty(job.job_id)
+                cnt += 1
+            return cnt
+
         def settle_finish(rid: int, now: float) -> None:
             """One task-copy completion: free it, kill speculative siblings,
             advance the DAG, retire the job when done."""
@@ -452,8 +528,15 @@ class ClusterSim:
                 pool.remove_job(job.job_id)
                 incomplete_jobs -= 1
 
+        def matchable() -> np.ndarray:
+            """Machines a wave may serve: alive, and (with heartbeats on)
+            neither suspected nor declared lost."""
+            if not hb_on:
+                return alive
+            return alive & ~suspected & ~hb_lost
+
         def match_machine(m: int, now: float) -> None:
-            if not alive[m]:
+            if not alive[m] or suspected[m] or hb_lost[m]:
                 return
             batch = pool.refresh()
             if batch is None or len(batch) == 0:
@@ -473,13 +556,35 @@ class ClusterSim:
         self._builds = {}
         if self.spec.order_fn == "dagps" and (
                 cfg.build_workers is None or cfg.build_workers > 1):
-            svc = BuildService(workers=cfg.build_workers)
+            svc = BuildService(workers=cfg.build_workers,
+                               recovery=cfg.recovery)
             m_build = self._build_m()
             for k, (_t, dag, _g) in enumerate(arrivals):
                 if cfg.schedule_cache and self._pri_cache_key(dag) in _PRI_CACHE:
                     continue
                 self._builds[k] = svc.submit(
                     dag, m_build, backend=cfg.placement_backend)
+
+        def hb_arrive(m: int, now: float) -> None:
+            """One heartbeat reaches the scheduler: refresh the machine's
+            silence clock, rejoin it if suspected/lost, arm the next
+            silence check."""
+            if not alive[m] or now <= last_seen[m]:
+                return                      # dead machine / stale delayed beat
+            last_seen[m] = now
+            if hb_lost[m]:
+                # rejoin on flap: the machine is fresh capacity again (its
+                # requeued tasks may already be running elsewhere)
+                hb_lost[m] = False
+                suspected[m] = False
+                avail[m] = 1.0
+                hb_stats["rejoins"] += 1
+                timed("match", match_machine, m, now)
+            elif suspected[m]:
+                suspected[m] = False
+                timed("match", match_machine, m, now)
+            heapq.heappush(events, (now + hb_suspect, next(counter),
+                                    _HBCHK, m))
 
         def match_all(now: float) -> None:
             batch = pool.refresh()
@@ -491,7 +596,7 @@ class ClusterSim:
             # its matcher call is decision-free), decisions pinned to the
             # single global matcher — bit-identical for any shard count.
             smatcher.match_wave(
-                avail, alive, batch,
+                avail, matchable(), batch,
                 lambda gi, m: start_task(jobs[int(batch.job[gi])],
                                          int(batch.tid[gi]), m, now))
 
@@ -528,20 +633,14 @@ class ClusterSim:
                     tid = int(runs.task[arg])
                     # only speculate if some machine can host a copy right now
                     dem = job.dag.demand[tid]
-                    fit = np.nonzero(alive & packing.fits_mask(avail, dem))[0]
+                    fit = np.nonzero(matchable() & packing.fits_mask(avail, dem))[0]
                     if len(fit):
                         start_task(job, tid, int(fit[0]), t_now, speculative=True)
                 elif kind == _FAIL:
                     m = int(rng.integers(M))
                     if alive[m]:
                         alive[m] = False
-                        for rid in runs.live_on(m):
-                            rid = int(rid)
-                            free_run(rid)
-                            job = jobs[int(runs.job[rid])]
-                            job.task_requeued(int(runs.task[rid]))
-                            pool.mark_dirty(job.job_id)
-                            requeued += 1
+                        requeued += requeue_machine(m)
                         avail[m] = 0.0
                         heapq.heappush(events, (t_now + cfg.repair_time,
                                                 next(counter), _JOIN, m))
@@ -553,6 +652,83 @@ class ClusterSim:
                     alive[arg] = True
                     avail[arg] = 1.0
                     timed("match", match_machine, arg, t_now)
+                elif kind == _HB:
+                    m = arg
+                    beat = int(beat_no[m])
+                    beat_no[m] += 1
+                    if incomplete_jobs == 0 and pending_arrivals == 0:
+                        continue        # workload done: drain the clock
+                    hb_stats["beats"] += 1
+                    force = False
+                    if (pending_arrivals == 0
+                            and not (~runs.dead[:runs.n]).any()
+                            and not any(ev[2] not in (_HB, _HBA, _HBCHK)
+                                        for ev in events)):
+                        # nothing running, nothing arriving, nothing ahead
+                        # but heartbeats: only a machine recovery can still
+                        # unblock the workload.
+                        if matchable().all():
+                            # every machine already serves, so no beat can
+                            # change state — stop the clock; like the
+                            # no-heartbeat path, unplaceable work ends the
+                            # run with those jobs unfinished
+                            continue
+                        # some machine is unreachable: force its beats
+                        # through even if the plan would swallow them (the
+                        # operator-intervention analogue), so partitioned
+                        # clusters always recover and the sim terminates
+                        force = True
+                    heapq.heappush(events, (t_now + hb_period,
+                                            next(counter), _HB, m))
+                    if not alive[m]:
+                        continue        # hard-failed machines emit nothing
+                    sp = None if hb_forced[m] \
+                        else faults.query("heartbeat", machine=m, beat=beat)
+                    if sp is not None and force:
+                        # sticky: a forced machine's link counts as repaired
+                        # — without this, re-losing it before any task
+                        # longer than hb_lost_after completes would
+                        # livelock a fully partitioned cluster
+                        hb_forced[m] = True
+                        hb_stats["forced_rejoins"] += 1
+                        sp = None
+                    if sp is None:
+                        hb_arrive(m, t_now)
+                    elif sp.kind == "delay":
+                        hb_stats["delayed"] += 1
+                        heapq.heappush(events,
+                                       (t_now + max(sp.delay, 0.0),
+                                        next(counter), _HBA, m))
+                    else:               # drop (and any other kind)
+                        hb_stats["dropped"] += 1
+                elif kind == _HBA:
+                    hb_arrive(arg, t_now)
+                elif kind == _HBCHK:
+                    m = arg
+                    if incomplete_jobs == 0 and pending_arrivals == 0:
+                        continue    # workload done: silence is expected
+                    if not alive[m] or hb_lost[m]:
+                        continue
+                    silent = t_now - last_seen[m]
+                    if silent + 1e-9 >= hb_lost_after:
+                        # declared lost: unreachable, not dead — requeue
+                        # its work and stop counting its capacity until a
+                        # heartbeat gets through again
+                        hb_lost[m] = True
+                        suspected[m] = True
+                        n_req = requeue_machine(m)
+                        hb_stats["requeued"] += n_req
+                        hb_stats["losses"] += 1
+                        avail[m] = 0.0
+                        if n_req:
+                            timed("match", match_all, t_now)
+                    elif silent + 1e-9 >= hb_suspect:
+                        if not suspected[m]:
+                            suspected[m] = True
+                            hb_stats["suspects"] += 1
+                        heapq.heappush(events,
+                                       (last_seen[m] + hb_lost_after,
+                                        next(counter), _HBCHK, m))
 
         finally:
             self._builds = {}
@@ -560,10 +736,20 @@ class ClusterSim:
                 svc.shutdown(wait=False)
             smatcher.close()
         makespan = max((j.finish for j in results), default=0.0)
+        # recovery seconds: shard-launch retries/backoff accrue inside the
+        # match phase, build-retry backoff inside the build phase — pull
+        # both out into their own key so degraded runs don't silently
+        # inflate the phases they happen to block
+        rec_shard = smatcher.recovery_secs
+        rec_build = float(svc.stats["recovery_secs"]) if svc is not None \
+            else 0.0
         phase_times = None
         if prof is not None:
             total = time.perf_counter() - t_run0
-            phase_times = {"build": prof["build"], "match": prof["match"],
+            build_t = max(prof["build"] - rec_build, 0.0)
+            match_t = max(prof["match"] - rec_shard, 0.0)
+            phase_times = {"build": build_t, "match": match_t,
+                           "recovery": rec_shard + rec_build,
                            "event": max(total - prof["build"] - prof["match"], 0.0),
                            "total": total}
             kprof1 = kernels.profile_snapshot()
@@ -575,9 +761,29 @@ class ClusterSim:
                      if key.startswith(("machines_with_candidates.",
                                         "heartbeat_masks.")))
             phase_times["heartbeat"] = hb
+        sstats = smatcher.stats()
+        ap1 = faults.active_plan()
+        inj1 = ap1.snapshot() if ap1 is not None else {}
+        dem1 = kernels.demotions_snapshot()
+        fault_stats = {
+            "injections": {k: v - inj0.get(k, 0) for k, v in inj1.items()
+                           if v - inj0.get(k, 0)},
+            "shard": {k: sstats[k] for k in
+                      ("launch_retries", "launch_failures", "quarantines",
+                       "quarantined_shards", "quarantined_launches",
+                       "probe_recoveries")},
+            "build": {k: svc.stats[k] for k in
+                      ("retries", "worker_crashes", "quarantined_digests",
+                       "inline_fallbacks")} if svc is not None else {},
+            "kernel_demotions": {k: v - dem0.get(k, 0)
+                                 for k, v in dem1.items()
+                                 if v - dem0.get(k, 0)},
+            "heartbeat": hb_stats,
+            "recovery_secs": round(rec_shard + rec_build, 6),
+        }
         return SimResult(results, makespan, usage_samples, allocations,
                          spec_launches, requeued, phase_times,
-                         smatcher.stats())
+                         sstats, fault_stats)
 
 
 def run_workload(

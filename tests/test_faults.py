@@ -1,0 +1,346 @@
+"""Fault-injection harness + degraded-mode recoveries (core/faults.py).
+
+Four layers of coverage:
+
+  * the plan grammar and firing machinery — parse/describe round-trip,
+    deterministic seeded firing, context match filters, max-count,
+    thread-local suppression, env-plan masking,
+  * sharded-matcher launch recovery — retry, hang timeout, quarantine
+    to the conservative all-eligible mask (a sound superset, so exact),
+    probe recovery,
+  * build-service recovery — pool retry, inline fallback, worker-crash
+    supervision (the regression bar: a crash neither hangs
+    ``BuildHandle.result()`` nor loses dedup sharers), poison-digest
+    quarantine,
+  * the acceptance property: any *exact-recoverable* plan reproduces
+    the fault-free simulator decisions bit-for-bit.  Seeded
+    deterministic versions always run; a hypothesis version rides along
+    when the plugin is installed (repo convention, see test_property.py).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import FaultPlan, FaultSpec, InjectedFault, RecoveryPolicy
+from repro.core import build_schedule, faults
+from repro.core.buildsvc import MP_ENV, BuildService
+from repro.core.engine import kernels
+from repro.core.online import MatcherConfig
+from repro.core.shard import ShardedMatcher
+from repro.sim.cluster import run_workload
+from repro.sim.workload import online_mix_workload, production_dag
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+@pytest.fixture(autouse=True)
+def _fault_isolation():
+    """Pin a fault-free baseline (masks any ambient REPRO_FAULTS smoke
+    plan — tests opt back in with an inner scope) and keep the sticky
+    kernel demotions from leaking across tests."""
+    kernels.reset_demotions()
+    with faults.scope(FaultPlan()):
+        yield
+    kernels.reset_demotions()
+
+
+# ----------------------------------------------------------------------
+# plan grammar + firing machinery
+# ----------------------------------------------------------------------
+
+def test_parse_describe_roundtrip():
+    text = ("seed=7;shard_launch:raise@0.3;shard_launch:hang@0.1,delay=0.2;"
+            "build_worker:crash@1,attempt_lt=2;heartbeat:drop@0.05;"
+            "kernel_impl:raise@0.5,count=3,impl=xla")
+    plan = FaultPlan.parse(text)
+    again = FaultPlan.parse(plan.describe())
+    assert again.specs == plan.specs
+    assert again.seed == plan.seed == 7
+    assert again.describe() == plan.describe()
+
+
+def test_firing_is_deterministic_across_instances():
+    def fires(spec_text):
+        plan = FaultPlan.parse(spec_text)
+        return [plan.query("shard_launch", shard=s, wave=w) is not None
+                for s in range(4) for w in range(25)]
+
+    a = fires("seed=11;shard_launch:raise@0.3")
+    b = fires("seed=11;shard_launch:raise@0.3")
+    assert a == b                      # pure function of (seed, seam, ctx)
+    assert 0 < sum(a) < len(a)         # actually probabilistic
+    assert fires("seed=12;shard_launch:raise@0.3") != a
+
+
+def test_match_filters_and_lt_suffix():
+    plan = FaultPlan.parse("seed=0;build_worker:raise@1,digest=abc,attempt_lt=2")
+    assert plan.query("build_worker", digest="abc", attempt=0) is not None
+    assert plan.query("build_worker", digest="abc", attempt=2) is None
+    assert plan.query("build_worker", digest="xyz", attempt=0) is None
+    assert plan.query("shard_launch", shard=0) is None
+
+
+def test_max_count_and_stats():
+    plan = FaultPlan.parse("seed=0;kernel_impl:raise@1,count=2")
+    fired = [plan.query("kernel_impl", op="x", call=i) is not None
+             for i in range(5)]
+    assert fired == [True, True, False, False, False]
+    assert plan.snapshot() == {"kernel_impl.raise": 2}
+
+
+def test_exact_recoverable_classification():
+    exact = FaultPlan.parse(
+        "seed=1;shard_launch:raise@0.5;build_worker:crash;kernel_impl:raise")
+    assert exact.is_exact_recoverable()
+    assert not FaultPlan.parse("seed=1;heartbeat:drop@0.1").is_exact_recoverable()
+    assert FaultPlan().is_exact_recoverable()
+
+
+def test_invalid_seam_and_kind_rejected():
+    with pytest.raises(ValueError):
+        FaultSpec(seam="nope")
+    with pytest.raises(ValueError):
+        FaultSpec(seam="heartbeat", kind="nope")
+
+
+def test_env_plan_and_scope_masking(monkeypatch):
+    monkeypatch.setenv(faults.FAULTS_ENV, "seed=3;kernel_impl:raise@1")
+    with faults.scope(None):                  # env plan visible
+        assert faults.query("kernel_impl", op="o") is not None
+        with faults.scope(FaultPlan()):       # empty plan masks env
+            assert faults.query("kernel_impl", op="o") is None
+    assert faults.query("kernel_impl", op="o") is None   # autouse mask
+
+
+def test_suppressed_disarms_a_seam_on_this_thread():
+    with faults.scope(FaultPlan.parse("seed=0;build_worker:raise@1")):
+        with faults.suppressed("build_worker"):
+            faults.maybe_fail("build_worker", digest="d", attempt=0)
+        with pytest.raises(InjectedFault) as ei:
+            faults.maybe_fail("build_worker", digest="d", attempt=0)
+        assert ei.value.seam == "build_worker"
+
+
+# ----------------------------------------------------------------------
+# sharded-matcher launch recovery (quarantine mask is a sound superset)
+# ----------------------------------------------------------------------
+
+def _elig_setup(seed=3, m=16, n=5):
+    rng = np.random.default_rng(seed)
+    avail = rng.uniform(0.2, 1.0, size=(m, 4))
+    dem = rng.uniform(0.05, 0.3, size=(n, 4))
+    return avail, dem
+
+
+def _mk_matcher(m=16, shards=2, **rec):
+    kw = dict(launch_timeout=5.0, launch_retries=1, backoff=0.001,
+              backoff_cap=0.002, quarantine_after=2, probe_every=2)
+    kw.update(rec)
+    return ShardedMatcher(MatcherConfig(), m, {0: 1.0}, n_shards=shards,
+                          recovery=RecoveryPolicy(**kw))
+
+
+def test_launch_quarantine_probe_cycle_is_exact():
+    """raise-all on shard 0 drives retry -> quarantine -> conservative
+    mask -> probe recovery; every wave's mask stays a superset of the
+    healthy one and the recovered wave is identical to it."""
+    avail, dem = _elig_setup()
+    with _mk_matcher() as sm:
+        el0, any0 = sm.eligibility(avail, dem)       # healthy (empty plan)
+        with faults.scope("seed=1;shard_launch:raise@1,shard=0,count=4"):
+            for _ in range(3):                       # 2 failures + 1 probe wait
+                el, anym = sm.eligibility(avail, dem)
+                assert (el >= el0).all() and (anym >= any0).all()
+            assert sm.quarantined == [True, False]
+            assert sm.launch_failures == 2 and sm.quarantine_events == 1
+            assert sm.launch_retries == 2            # one retry per failure
+            # injection budget exhausted: the next probe recovers shard 0
+            el, anym = sm.eligibility(avail, dem)
+        assert sm.probe_recoveries == 1 and sm.quarantined == [False, False]
+        np.testing.assert_array_equal(el, el0)
+        np.testing.assert_array_equal(anym, any0)
+        assert sm.recovery_secs > 0.0
+
+
+def test_hung_launch_abandoned_by_timeout():
+    avail, dem = _elig_setup(seed=5)
+    with _mk_matcher(launch_timeout=0.1) as sm:
+        el0, any0 = sm.eligibility(avail, dem)
+        with faults.scope("seed=1;shard_launch:hang@1,shard=0,count=1,"
+                          "delay=0.5"):
+            el, anym = sm.eligibility(avail, dem)    # attempt 0 hangs, 1 wins
+        np.testing.assert_array_equal(el, el0)
+        np.testing.assert_array_equal(anym, any0)
+        assert sm.launch_retries == 1 and sm.launch_failures == 0
+        assert sm.recovery_secs >= 0.1
+
+
+# ----------------------------------------------------------------------
+# kernel-dispatch demotion (exact: numpy is the defining oracle)
+# ----------------------------------------------------------------------
+
+@pytest.mark.skipif(not kernels.have_jax(), reason="needs jax")
+def test_kernel_fault_demotes_to_exact_result(monkeypatch):
+    monkeypatch.setenv(kernels.HEARTBEAT_MIN_M_ENV, "1")   # promote xla
+    avail, dem = _elig_setup(seed=7)
+    fd, rigid, fung = np.arange(4), np.array([0, 1]), np.array([2, 3])
+    args = (avail, dem, fd, rigid, fung, 0.25, True)
+    want = kernels.machines_with_candidates(*args)         # healthy xla
+    with faults.scope("seed=1;kernel_impl:raise@1,impl=xla,count=1"):
+        got = kernels.machines_with_candidates(*args)      # faults -> numpy
+    np.testing.assert_array_equal(got[0], want[0])
+    np.testing.assert_array_equal(got[1], want[1])
+    snap = kernels.demotions_snapshot()
+    assert snap.get("machines_with_candidates.xla.demoted") == 1
+    # demotion is sticky: the faulted impl stays off the dispatch chain
+    assert "xla" in kernels.demoted_impls("machines_with_candidates")
+    kernels.machines_with_candidates(*args)
+    assert kernels.demotions_snapshot() == snap            # no re-demotion
+    kernels.reset_demotions()
+    assert not kernels.demoted_impls("machines_with_candidates")
+
+
+# ----------------------------------------------------------------------
+# build-service recovery (supervised futures survive crashes/retries)
+# ----------------------------------------------------------------------
+
+def _build_dag(seed=1):
+    return production_dag(np.random.default_rng(seed), scale=0.3, share=3)
+
+
+def _assert_same_schedule(a, b):
+    assert a.makespan == b.makespan
+    assert np.array_equal(a.start, b.start)
+    assert np.array_equal(a.machine, b.machine)
+    assert np.array_equal(a.order, b.order)
+
+
+_TINY_REC = dict(backoff=0.001, backoff_cap=0.002)
+
+
+def test_build_retries_then_succeeds_and_dedup_shares():
+    dag = _build_dag(1)
+    want = build_schedule(dag, 8)
+    with faults.scope("seed=1;build_worker:raise@1,attempt_lt=2"):
+        with BuildService(workers=2, mode="thread",
+                          recovery=RecoveryPolicy(**_TINY_REC)) as svc:
+            h1 = svc.submit(dag, 8)
+            h2 = svc.submit(dag, 8)                  # dedup sharer
+            _assert_same_schedule(h1.result(timeout=60), want)
+            _assert_same_schedule(h2.result(timeout=60), want)
+    assert svc.stats["retries"] == 2                 # attempts 0 and 1 fail
+    assert svc.stats["deduped"] == 1
+    assert svc.stats["inline_fallbacks"] == 0
+    assert svc.stats["recovery_secs"] > 0
+
+
+def test_exhausted_retries_fall_back_inline():
+    dag = _build_dag(2)
+    want = build_schedule(dag, 8)
+    with faults.scope("seed=1;build_worker:raise@1"):    # every pool attempt
+        with BuildService(workers=2, mode="thread",
+                          recovery=RecoveryPolicy(build_retries=1,
+                                                  **_TINY_REC)) as svc:
+            got = svc.submit(dag, 8).result(timeout=60)
+    _assert_same_schedule(got, want)
+    assert svc.stats["retries"] == 2
+    assert svc.stats["inline_fallbacks"] == 1
+
+
+def test_worker_crash_neither_hangs_nor_loses_sharers(monkeypatch):
+    """Satellite regression bar: a worker process dying mid-build must
+    not hang ``BuildHandle.result()`` and every dedup sharer of the
+    crashed digest still gets its schedule (supervised futures)."""
+    monkeypatch.setenv(MP_ENV, "fork")   # children inherit the env plan live
+    monkeypatch.setenv(faults.FAULTS_ENV,
+                       "seed=1;build_worker:crash@1,attempt_lt=1")
+    dag = _build_dag(3)
+    want = build_schedule(dag, 8)
+    with faults.scope(None):             # parent defers to env, like workers
+        with BuildService(workers=2, mode="process",
+                          recovery=RecoveryPolicy(backoff=0.01,
+                                                  backoff_cap=0.02)) as svc:
+            h1 = svc.submit(dag, 8)
+            h2 = svc.submit(dag, 8)
+            _assert_same_schedule(h1.result(timeout=120), want)
+            _assert_same_schedule(h2.result(timeout=120), want)
+    assert svc.stats["worker_crashes"] >= 1
+    assert svc.stats["deduped"] == 1
+    assert svc.stats["quarantined_digests"] == 0
+
+
+def test_crash_looping_digest_quarantined_to_inline(monkeypatch):
+    monkeypatch.setenv(MP_ENV, "fork")
+    monkeypatch.setenv(faults.FAULTS_ENV, "seed=1;build_worker:crash@1")
+    dag = _build_dag(4)
+    want = build_schedule(dag, 8)
+    with faults.scope(None):
+        with BuildService(workers=1, mode="process",
+                          recovery=RecoveryPolicy(backoff=0.01,
+                                                  backoff_cap=0.02,
+                                                  quarantine_after=2,
+                                                  build_retries=5)) as svc:
+            got = svc.submit(dag, 8).result(timeout=120)
+    _assert_same_schedule(got, want)
+    assert svc.stats["worker_crashes"] == 2
+    assert svc.stats["quarantined_digests"] == 1
+    assert svc.stats["inline_fallbacks"] == 1
+
+
+# ----------------------------------------------------------------------
+# acceptance property: exact-recoverable plans are decision-exact
+# ----------------------------------------------------------------------
+
+_SIM_KW = dict(n_machines=24, interarrival=2.0, n_groups=2, seed=6,
+               build_machines=4, matcher_shards=2)
+_REC = RecoveryPolicy(launch_timeout=5.0, launch_retries=1, backoff=0.001,
+                      backoff_cap=0.002, quarantine_after=2, probe_every=3)
+_HEALTHY_KEY = {}
+
+
+def _decision_key(res):
+    return ([(j.job_id, repr(j.jct)) for j in
+             sorted(res.jobs, key=lambda j: j.job_id)],
+            repr(res.makespan))
+
+
+def _healthy_key():
+    if "key" not in _HEALTHY_KEY:
+        res = run_workload(online_mix_workload(6, seed=6), "dagps",
+                           fault_plan=FaultPlan(), **_SIM_KW)
+        _HEALTHY_KEY["key"] = _decision_key(res)
+    return _HEALTHY_KEY["key"]
+
+
+def _assert_exact(plan):
+    assert plan.is_exact_recoverable()
+    res = run_workload(online_mix_workload(6, seed=6), "dagps",
+                       fault_plan=plan, recovery=_REC, **_SIM_KW)
+    assert _decision_key(res) == _healthy_key()
+    return res
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_exact_recoverable_plan_is_decision_exact(seed):
+    res = _assert_exact(FaultPlan.parse(
+        f"seed={seed};shard_launch:raise@0.5;"
+        "shard_launch:hang@0.2,delay=0.005"))
+    assert res.fault_stats["injections"]             # plan actually fired
+    shard = res.fault_stats["shard"]
+    assert shard["launch_retries"] + shard["quarantined_launches"] > 0
+    assert res.fault_stats["recovery_secs"] > 0
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None,
+              suppress_health_check=[HealthCheck.function_scoped_fixture])
+    @given(seed=st.integers(0, 10_000),
+           prob=st.floats(0.1, 0.9))
+    def test_exact_recovery_property(seed, prob):
+        _assert_exact(FaultPlan.parse(
+            f"seed={seed};shard_launch:raise@{prob:.3f}"))

@@ -356,6 +356,50 @@ def test_sim_decisions_invariant_under_churn():
     assert keys[1] == keys[3]
 
 
+def test_sim_decisions_invariant_under_churn_with_faults():
+    """Churn (failures + stragglers) composed with an exact-recoverable
+    fault plan (core/faults.py): retries, timeouts and quarantine masks
+    must reproduce the fault-free decisions bit-for-bit."""
+    from repro.core import FaultPlan, RecoveryPolicy
+
+    dags = online_mix_workload(8, seed=9)
+    kw = dict(n_machines=48, interarrival=2.0, n_groups=2, seed=9,
+              build_machines=4, matcher_shards=3, straggle_prob=0.1,
+              failure_rate=0.002, repair_time=30.0)
+    base = run_workload(dags, "dagps", fault_plan=FaultPlan(), **kw)
+    plan = FaultPlan.parse("seed=13;shard_launch:raise@0.4;"
+                           "shard_launch:hang@0.1,delay=0.005")
+    rec = RecoveryPolicy(launch_timeout=5.0, launch_retries=1, backoff=0.001,
+                         backoff_cap=0.002, quarantine_after=2, probe_every=4)
+    faulty = run_workload(dags, "dagps", fault_plan=plan, recovery=rec, **kw)
+    assert _decision_key(base) == _decision_key(faulty)
+    assert faulty.fault_stats["injections"]
+    shard = faulty.fault_stats["shard"]
+    assert shard["launch_retries"] + shard["quarantined_launches"] > 0
+
+
+@pytest.mark.skipif(not kernels.have_jax(), reason="needs jax")
+def test_sim_decisions_exact_under_kernel_faults(monkeypatch):
+    """An injected accelerated-kernel failure demotes dispatch to the
+    numpy oracle mid-run without changing a single decision."""
+    from repro.core import FaultPlan
+
+    monkeypatch.setenv(kernels.HEARTBEAT_MIN_M_ENV, "1")
+    kernels.reset_demotions()
+    try:
+        dags = online_mix_workload(6, seed=2)
+        kw = dict(n_machines=32, interarrival=1.5, n_groups=2, seed=2,
+                  build_machines=4, matcher_shards=2)
+        base = run_workload(dags, "dagps", fault_plan=FaultPlan(), **kw)
+        faulty = run_workload(dags, "dagps",
+                              fault_plan="seed=4;kernel_impl:raise@1,count=1",
+                              **kw)
+        assert _decision_key(base) == _decision_key(faulty)
+        assert faulty.fault_stats["kernel_demotions"]
+    finally:
+        kernels.reset_demotions()
+
+
 @pytest.mark.skipif(not kernels.have_jax(), reason="needs jax")
 def test_sim_decisions_invariant_under_forced_xla(monkeypatch):
     # sound-superset eligibility end-to-end: promoting the accelerated

@@ -89,18 +89,26 @@ def test_golden_bit_identical(name, bench, n, sch, kw):
 
 
 def test_profile_phase_times():
+    from repro.core import FaultPlan
+
+    # the empty plan pins a fault-free run even under an ambient
+    # REPRO_FAULTS smoke plan (CI), where recovery would be nonzero
     dags = make_workload("tpch", 3, seed=2)
     res = run_workload(dags, "dagps", n_machines=8, interarrival=5.0, seed=2,
-                       profile=True)
+                       profile=True, fault_plan=FaultPlan())
     pt = res.phase_times
     assert pt is not None
-    assert set(pt) == {"build", "match", "event", "total", "heartbeat"}
+    assert set(pt) == {"build", "match", "event", "total", "heartbeat",
+                       "recovery"}
+    # no faults injected -> no recovery time spent
+    assert pt["recovery"] == 0.0
     assert pt["total"] >= pt["build"] + pt["match"] - 1e-6
     # the heartbeat kernel runs inside the match phase
     assert pt["heartbeat"] <= pt["match"] + 1e-6
     assert all(v >= 0.0 for v in pt.values())
     # profiling must not perturb outputs
-    plain = run_workload(dags, "dagps", n_machines=8, interarrival=5.0, seed=2)
+    plain = run_workload(dags, "dagps", n_machines=8, interarrival=5.0, seed=2,
+                         fault_plan=FaultPlan())
     assert plain.phase_times is None
     np.testing.assert_array_equal(plain.jcts(), res.jcts())
 
@@ -173,6 +181,71 @@ def test_ckpt_roundtrip(tmp_path):
     assert step == 7
     for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(tree["params"])):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ----------------------------------------------------------------------
+# heartbeat-loss semantics (core/faults.py "heartbeat" seam — the lossy one)
+# ----------------------------------------------------------------------
+
+def _decisions(res):
+    return ([(j.job_id, repr(j.jct)) for j in
+             sorted(res.jobs, key=lambda j: j.job_id)],
+            repr(res.makespan))
+
+
+def test_heartbeat_healthy_decision_parity():
+    """Enabling heartbeats without any faults must not perturb a single
+    decision: beats ride their own event lane and consume no workload
+    rng, so healthy-hb == no-hb bit-for-bit."""
+    from repro.core import FaultPlan
+
+    dags = _small_workload(5, seed=17)
+    base = dict(n_machines=8, interarrival=6.0, seed=17,
+                fault_plan=FaultPlan())
+    plain = run_workload(dags, "dagps", **base)
+    hb = run_workload(dags, "dagps", heartbeat_period=7.3, **base)
+    assert _decisions(hb) == _decisions(plain)
+    stats = hb.fault_stats["heartbeat"]
+    assert stats["beats"] > 0
+    assert stats["suspects"] == stats["losses"] == 0
+    assert plain.fault_stats["heartbeat"]["beats"] == 0
+
+
+def test_heartbeat_loss_requeues_and_completes():
+    """One machine's beats all drop: it is suspected, declared lost, its
+    tasks requeue, and the workload completes on the survivors."""
+    res = run_workload(_small_workload(5, seed=19), "dagps", n_machines=8,
+                       interarrival=6.0, seed=19, heartbeat_period=5.0,
+                       fault_plan="seed=2;heartbeat:drop@1.0,machine=2")
+    assert len(res.jobs) == 5
+    stats = res.fault_stats["heartbeat"]
+    assert stats["dropped"] > 0
+    assert stats["suspects"] >= 1
+    assert stats["losses"] >= 1
+    assert res.fault_stats["injections"].get("heartbeat.drop", 0) > 0
+
+
+def test_heartbeat_full_partition_terminates():
+    """Every machine silent forever: the sticky forced-rejoin valve (the
+    operator-intervention analogue) must keep the sim terminating with
+    every job complete instead of livelocking on requeues."""
+    res = run_workload(_small_workload(4, seed=23), "dagps", n_machines=4,
+                       interarrival=4.0, seed=23, heartbeat_period=5.0,
+                       fault_plan="seed=5;heartbeat:drop@1.0")
+    assert len(res.jobs) == 4
+    assert res.fault_stats["heartbeat"]["forced_rejoins"] >= 1
+
+
+def test_heartbeat_delay_below_suspicion_is_harmless():
+    """Delayed (but delivered) beats below the suspicion threshold must
+    not suspect or lose anyone."""
+    res = run_workload(_small_workload(4, seed=29), "dagps", n_machines=6,
+                       interarrival=5.0, seed=29, heartbeat_period=5.0,
+                       fault_plan="seed=3;heartbeat:delay@0.5,delay=2.0")
+    assert len(res.jobs) == 4
+    stats = res.fault_stats["heartbeat"]
+    assert stats["delayed"] > 0
+    assert stats["suspects"] == stats["losses"] == 0
 
 
 def test_pipeline_schedule_quality():
