@@ -484,7 +484,7 @@ def bench_degraded() -> None:
     plan = FaultPlan.parse("seed=1;shard_launch:raise@1,shard=0")
     rec = RecoveryPolicy(launch_timeout=None, launch_retries=0, backoff=0.0,
                          backoff_cap=0.0, quarantine_after=1,
-                         probe_every=10 ** 9)
+                         probe_every=10 ** 9, probe_secs=None)
     t0 = time.perf_counter()
     degraded = run_workload(dags, "dagps", fault_plan=plan, recovery=rec,
                             **kw)
@@ -509,7 +509,73 @@ def bench_degraded() -> None:
         emit("s11_degraded_recovery_secs", 0.0, fs["recovery_secs"])
 
 
+def bench_dynamic() -> None:
+    """s12: dynamic DAGs — recurring-pipeline edits with incremental repair.
+
+    Micro rows first: one recurring-pipeline template is built, mutated
+    (stage resize / stage append / deadline retarget), and re-planned both
+    ways — ``rebuild_schedule`` (delta: untouched partitions replay from
+    the previous build) vs a fresh ``build_schedule`` — with the bit-parity
+    oracle asserting the two schedules are identical.  The ``_speedup``
+    rows quantify what the replay saves; ``_reuse_pct`` rows report the
+    placements replayed (the >=50% acceptance metric for resize/append).
+
+    Scenario rows then run the three s12 arms end-to-end through the
+    simulator (sim/workload.s12_dynamic): `resize` edits each later
+    arrival of a recurring pipeline pre-arrival, `retime` pulls every
+    deadline in (nothing replays — the contrast arm), `midrun` mutates a
+    *running* job and edits a machine speed.  Counter rows surface
+    SimResult.mutation_stats; us_per_call 0 keeps them ungated.
+    """
+    from repro.core.builder import assert_schedules_equal, rebuild_schedule
+    from repro.sim.workload import (mut_append_stage, mut_resize_stage,
+                                    mut_retarget, periodic_dag, s12_dynamic)
+    from benchmarks import common
+
+    m = 4
+    template = periodic_dag(np.random.default_rng(5), name="recurring")
+    base = build_schedule(template, m)
+    for name, mut in (("resize", mut_resize_stage(stage=1, delta_q=1)),
+                      ("append", mut_append_stage()),
+                      ("retime", mut_retarget(0.8))):
+        new_dag, _delta = mut(template)
+        t0 = time.perf_counter()
+        delta_s = rebuild_schedule(base, new_dag)
+        t_delta = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        full_s = build_schedule(new_dag, m)
+        t_full = time.perf_counter() - t0
+        assert_schedules_equal(delta_s, full_s)   # bit-parity oracle
+        info = delta_s.build_info
+        reuse = info.reused_tasks / max(new_dag.n, 1)
+        emit(f"s12_dynamic_rebuild_{name}_delta", t_delta * 1e6,
+             round(t_delta, 4))
+        emit(f"s12_dynamic_rebuild_{name}_full", t_full * 1e6,
+             round(t_full, 4))
+        emit(f"s12_dynamic_rebuild_{name}_speedup", 0.0,
+             round(t_full / max(t_delta, 1e-9), 2))
+        emit(f"s12_dynamic_rebuild_{name}_reuse_pct", 0.0,
+             round(100 * reuse, 1))
+
+    n_j = 5 if common.QUICK else 8
+    for kind in ("resize", "retime", "midrun"):
+        dags, muts = s12_dynamic(kind, n_jobs=n_j, seed=5)
+        t0 = time.perf_counter()
+        res = run_workload(dags, "dagps", n_machines=16, interarrival=10.0,
+                           seed=5, mutations=muts)
+        dt = time.perf_counter() - t0
+        emit(f"s12_dynamic_{kind}_j{n_j}_dagps", dt * 1e6,
+             round(float(np.median(res.jcts())), 1))
+        ms = res.mutation_stats
+        emit(f"s12_dynamic_{kind}_placement_reuse_pct", 0.0,
+             round(100 * ms["tasks_reused"] / max(ms["tasks_total"], 1), 1))
+        emit(f"s12_dynamic_{kind}_delta_builds", 0.0, ms["delta_builds"])
+        emit(f"s12_dynamic_{kind}_full_builds", 0.0, ms["full_builds"])
+        emit(f"s12_dynamic_{kind}_mutations_applied", 0.0,
+             ms["applied"] + ms["pre_arrival"] + ms["speed_changes"])
+
+
 ALL = [bench_jct, bench_makespan, bench_fairness, bench_alternatives,
        bench_lowerbound, bench_sensitivity, bench_domains, bench_construction,
        bench_online_large, bench_online_churn, bench_online_sharded,
-       bench_degraded]
+       bench_degraded, bench_dynamic]

@@ -68,6 +68,7 @@ def main() -> None:
         "online_churn": [bench_scheduling.bench_online_churn],
         "online_sharded": [bench_scheduling.bench_online_sharded],
         "degraded": [bench_scheduling.bench_degraded],
+        "dynamic": [bench_scheduling.bench_dynamic],
         "pipeline": [bench_systems.bench_pipeline],
         "roofline": [bench_systems.bench_roofline],
         "kernels": [bench_systems.bench_kernels],

@@ -11,6 +11,7 @@ All engine backends and scheme presets are reachable from the CLI:
 """
 
 import argparse
+import json
 
 import numpy as np
 
@@ -57,6 +58,14 @@ def main():
     ap.add_argument("--hb-lost-after", type=float, default=None,
                     help="silence before a machine is declared lost and "
                          "its tasks requeue (default 5 periods)")
+    ap.add_argument("--dynamic", action="store_true",
+                    help="script mid-run dynamics: a deadline pull-in on "
+                         "a running job (repaired via delta rebuild) and "
+                         "a slice speed change")
+    ap.add_argument("--json", action="store_true",
+                    help="emit one JSON document per scheme instead of "
+                         "text: JCT stats plus fault_stats, "
+                         "mutation_stats and phase timings")
     args = ap.parse_args()
 
     archs = ["granite3_8b", "gemma2_2b", "mixtral_8x7b", "rwkv6_7b",
@@ -67,6 +76,11 @@ def main():
         jobs.append(job_from_roofline(f"job-{i}-{arch}", arch,
                                       "artifacts/dryrun", steps=50 + 20 * (i % 4),
                                       group=i % 2))
+    mutations = None
+    if args.dynamic:
+        from repro.sim.workload import mut_retarget
+        mutations = [(30.0, min(1, args.jobs - 1), mut_retarget(0.8)),
+                     (60.0, "speed", 0, 1.5)]
     for policy in args.schemes.split(","):
         res = schedule_cluster(jobs, n_slices=args.slices,
                                interarrival=args.interarrival, policy=policy,
@@ -77,8 +91,21 @@ def main():
                                fault_plan=args.fault_plan,
                                heartbeat_period=args.heartbeat_period,
                                hb_suspect_after=args.hb_suspect_after,
-                               hb_lost_after=args.hb_lost_after)
+                               hb_lost_after=args.hb_lost_after,
+                               mutations=mutations)
         jcts = res.jcts()
+        if args.json:
+            print(json.dumps({
+                "policy": policy,
+                "median_jct": float(np.median(jcts)),
+                "p75_jct": float(np.percentile(jcts, 75)),
+                "makespan": res.makespan,
+                "jobs": len(res.jobs),
+                "phase_times": res.phase_times,
+                "fault_stats": res.fault_stats,
+                "mutation_stats": res.mutation_stats,
+            }))
+            continue
         print(f"{policy:10s}: median JCT {np.median(jcts):8.1f}s  "
               f"p75 {np.percentile(jcts, 75):8.1f}s  makespan {res.makespan:8.1f}s")
         if args.profile and res.phase_times:
@@ -93,6 +120,8 @@ def main():
                   f"shard {fs.get('shard', {})}")
             if args.heartbeat_period:
                 print(f"{'':10s}  heartbeats: {hb}")
+        if args.dynamic and res.mutation_stats:
+            print(f"{'':10s}  mutations: {res.mutation_stats}")
 
 
 if __name__ == "__main__":

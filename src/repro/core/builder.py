@@ -51,7 +51,7 @@ from typing import Iterable
 
 import numpy as np
 
-from .dag import DAG
+from .dag import DAG, dag_digest
 from .engine import FORWARD, BACKWARD, PeerTask, PlacementBackend, get_backend
 from .engine.base import ceil32
 from .memo import COUNTERS, ConstructionMemo
@@ -68,6 +68,28 @@ def _memo_enabled(memoize: bool | None) -> bool:
 
 
 @dataclasses.dataclass
+class BuildInfo:
+    """Provenance of one build: the inputs that parameterized it plus the
+    per-partition results, content-keyed for delta rebuilds.
+
+    ``parts`` maps (partition content digest, m, knobs) to the partition's
+    relative build output.  ``_build_one`` derives its tick quantization
+    from the *sub-DAG* horizon, so a digest-equal partition produces a
+    bit-identical relative schedule no matter which enclosing DAG it came
+    from — replaying a stored entry is exact, which is what
+    ``build_schedule(..., reuse=prev)`` leans on after a graph mutation:
+    untouched partitions replay, only dirty ones re-search.
+    """
+
+    m: int
+    knobs: tuple             # (ticks, n_long, n_frag, max_candidates, use_partitions)
+    parts: dict              # key -> (rel start, machine, tmask, makespan, tick)
+    reused_parts: int = 0    # partitions replayed from ``reuse`` this build
+    reused_tasks: int = 0    # task placements those partitions carried
+    total_parts: int = 0
+
+
+@dataclasses.dataclass
 class Schedule:
     """A constructed schedule: placement of every task in the virtual space."""
 
@@ -79,6 +101,7 @@ class Schedule:
     tick: float
     trouble_mask: np.ndarray | None = None
     label: str = "dagps"
+    build_info: BuildInfo | None = None
 
     @property
     def pri_score(self) -> np.ndarray:
@@ -478,6 +501,7 @@ def build_schedule(
     use_partitions: bool = True,
     backend: str | PlacementBackend | None = None,
     memoize: bool | None = None,
+    reuse: "Schedule | dict | None" = None,
 ) -> Schedule:
     """Construct DAGPS's preferred schedule for one DAG on m machines.
 
@@ -487,6 +511,14 @@ def build_schedule(
     cross-candidate construction memo (None resolves REPRO_BUILDER_MEMO,
     default on), which is shared across the partitioned sub-builds of the
     DAG; memoized and plain builds are bit-identical.
+
+    `reuse` seeds a *delta rebuild*: pass a previous `Schedule` (or its
+    ``build_info.parts`` map) and any partition whose content digest,
+    machine count and knobs match a stored entry replays that entry
+    instead of re-searching — bit-identical to a full build, because a
+    partition's relative schedule is a pure function of exactly that key
+    (see `BuildInfo`).  After a graph mutation only the partitions the
+    edit touched miss; `rebuild_schedule` wraps this for the common case.
     """
     if dag.n == 0:
         return Schedule(dag, np.empty(0, np.int64), np.empty(0), np.empty(0, np.int64), 0.0, 1.0)
@@ -495,14 +527,77 @@ def build_schedule(
     # addressed (core/memo.py), so it carries across the partitioned
     # sub-builds of one DAG — each partition re-attaches it to its Space.
     memo = ConstructionMemo() if _memo_enabled(memoize) else None
+    knobs = (int(ticks), int(n_long), int(n_frag), int(max_candidates),
+             bool(use_partitions))
+    prev_parts = reuse.build_info.parts if isinstance(reuse, Schedule) \
+        and reuse.build_info is not None else (reuse if isinstance(reuse, dict)
+                                               else None)
     if use_partitions:
         parts = partition_totally_ordered(dag)
-        if len(parts) > 1:
-            return _concat_partition_schedules(dag, parts, m, ticks, n_long,
-                                               n_frag, max_candidates, be,
-                                               memo)
-    return _build_one(dag, m, ticks, n_long, n_frag, max_candidates, be,
-                      memo)
+        if len(parts) > 1 or prev_parts:
+            return _concat_partition_schedules(dag, parts, m, knobs, be,
+                                               memo, prev_parts)
+    sched = _build_one(dag, m, ticks, n_long, n_frag, max_candidates, be,
+                       memo)
+    key = _part_key(_subdag(dag, np.arange(dag.n)), m, knobs)
+    sched.build_info = BuildInfo(
+        m, knobs, {key: _part_entry(sched)}, 0, 0, 1)
+    return sched
+
+
+def _part_key(sub: DAG, m: int, knobs: tuple) -> tuple:
+    """Content key of one partition build: digest + machine count + knobs.
+
+    The placement backend and the memo toggle are deliberately NOT part
+    of the key — all backends are tick-identical and memoized builds are
+    bit-identical to plain ones (both invariants locked by the parity
+    suites), so entries recorded under any configuration replay exactly.
+    """
+    return (dag_digest(sub), int(m)) + knobs
+
+
+def _part_entry(sched: Schedule) -> tuple:
+    return (sched.start, sched.machine, sched.trouble_mask, sched.makespan,
+            sched.tick)
+
+
+def rebuild_schedule(
+    prev: Schedule,
+    dag: DAG,
+    backend: str | PlacementBackend | None = None,
+    memoize: bool | None = None,
+    check_parity: bool = False,
+    **overrides,
+) -> Schedule:
+    """Delta rebuild after a graph mutation: same knobs as ``prev``,
+    replaying every partition the edit did not touch.
+
+    ``check_parity=True`` (or env REPRO_DELTA_PARITY=1) runs the bit-
+    parity oracle: a from-scratch build of the mutated DAG must agree
+    with the delta rebuild on every array, bit for bit.
+    """
+    info = prev.build_info
+    if info is None:
+        raise ValueError("previous schedule has no build_info to reuse")
+    kw = dict(ticks=info.knobs[0], n_long=info.knobs[1], n_frag=info.knobs[2],
+              max_candidates=info.knobs[3], use_partitions=info.knobs[4])
+    m = overrides.pop("m", info.m)
+    kw.update(overrides)
+    sched = build_schedule(dag, m, backend=backend, memoize=memoize,
+                           reuse=prev, **kw)
+    if check_parity or os.environ.get("REPRO_DELTA_PARITY", "0") == "1":
+        full = build_schedule(dag, m, backend=backend, memoize=memoize, **kw)
+        assert_schedules_equal(sched, full)
+    return sched
+
+
+def assert_schedules_equal(a: Schedule, b: Schedule) -> None:
+    """Bit-parity oracle: every decision array identical, not just close."""
+    assert (a.order == b.order).all(), "order diverged"
+    assert (a.start == b.start).all(), "start times diverged"
+    assert (a.machine == b.machine).all(), "machine assignment diverged"
+    assert repr(a.makespan) == repr(b.makespan), (a.makespan, b.makespan)
+    assert repr(a.tick) == repr(b.tick), (a.tick, b.tick)
 
 
 def _span_lb_ticks(dag: DAG, m: int, dur_ticks: np.ndarray) -> int:
@@ -814,28 +909,45 @@ def partition_totally_ordered(dag: DAG) -> list[np.ndarray]:
     return parts
 
 
-def _concat_partition_schedules(dag, parts, m, ticks, n_long, n_frag,
-                                max_candidates, backend,
-                                memo=None) -> Schedule:
+def _concat_partition_schedules(dag, parts, m, knobs, backend,
+                                memo=None, prev_parts=None) -> Schedule:
+    ticks, n_long, n_frag, max_candidates, _ = knobs
     start = np.zeros(dag.n, dtype=np.float64)
     machine = np.zeros(dag.n, dtype=np.int64)
     offset = 0.0
     tick = None
     tmask = np.zeros(dag.n, dtype=bool)
+    out_parts: dict = {}
+    reused_parts = reused_tasks = 0
     for ids in parts:
         sub = _subdag(dag, ids)
-        sched = _build_one(sub, m, ticks, n_long, n_frag, max_candidates,
-                           backend, memo)
-        start[ids] = sched.start + offset
-        machine[ids] = sched.machine
-        if sched.trouble_mask is not None:
-            tmask[ids] = sched.trouble_mask
-        offset += sched.makespan
-        tick = sched.tick if tick is None else max(tick, sched.tick)
+        key = _part_key(sub, m, knobs)
+        entry = prev_parts.get(key) if prev_parts else None
+        if entry is None:
+            sched = _build_one(sub, m, ticks, n_long, n_frag,
+                               max_candidates, backend, memo)
+            entry = _part_entry(sched)
+        else:
+            # untouched partition: replay the stored relative schedule
+            reused_parts += 1
+            reused_tasks += len(ids)
+            COUNTERS.add("parts_reused")
+            COUNTERS.add("placements_reused", len(ids))
+        p_start, p_machine, p_tmask, p_makespan, p_tick = entry
+        start[ids] = p_start + offset
+        machine[ids] = p_machine
+        if p_tmask is not None:
+            tmask[ids] = p_tmask
+        offset += p_makespan
+        tick = p_tick if tick is None else max(tick, p_tick)
+        out_parts[key] = entry
     order = np.lexsort((np.arange(dag.n), start))
     makespan = float((start + dag.duration).max() - start.min())
-    return Schedule(dag, order, start, machine, makespan, tick or 1.0,
-                    trouble_mask=tmask, label="dagps")
+    out = Schedule(dag, order, start, machine, makespan, tick or 1.0,
+                   trouble_mask=tmask, label="dagps")
+    out.build_info = BuildInfo(m, knobs, out_parts, reused_parts,
+                               reused_tasks, len(parts))
+    return out
 
 
 def _subdag(dag: DAG, ids: np.ndarray) -> DAG:

@@ -138,7 +138,7 @@ def _build_slim(dag: DAG, m: int, kw: dict,
                           attempt=fault_key[1])
     s = build_schedule(dag, m, **kw)
     return (s.order, s.start, s.machine, float(s.makespan), float(s.tick),
-            s.trouble_mask, s.label)
+            s.trouble_mask, s.label, s.build_info)
 
 
 class BuildHandle:
@@ -160,11 +160,11 @@ class BuildHandle:
         return self._future.done()
 
     def result(self, timeout: float | None = None) -> Schedule:
-        order, start, machine, makespan, tick, tmask, label = \
+        order, start, machine, makespan, tick, tmask, label, info = \
             self._future.result(timeout)
         return Schedule(dag=self._dag, order=order, start=start,
                         machine=machine, makespan=makespan, tick=tick,
-                        trouble_mask=tmask, label=label)
+                        trouble_mask=tmask, label=label, build_info=info)
 
 
 # knobs of build_schedule that participate in the dedup key, with the
@@ -222,7 +222,12 @@ class BuildService:
         self._poison: set[str] = set()
         #: pending retry timers -> their re-dispatch args (drained on shutdown)
         self._timers: dict[threading.Timer, tuple] = {}
+        #: (old submission key, delta digest) -> content key of the
+        #: resulting delta build: recurring-pipeline edits dedup without
+        #: re-hashing the mutated DAG
+        self._rekeys: dict[tuple, tuple] = {}
         self.stats = {"submitted": 0, "built": 0, "deduped": 0,
+                      "resubmits": 0, "resubmit_deduped": 0,
                       "retries": 0, "worker_crashes": 0,
                       "quarantined_digests": 0, "inline_fallbacks": 0,
                       "recovery_secs": 0.0}
@@ -272,6 +277,56 @@ class BuildService:
             kw["backend"] = get_backend(backend).name
         if memoize is not None:
             kw["memoize"] = memoize
+        return self._submit_keyed(key, dag, m, kw)
+
+    def resubmit(self, handle: BuildHandle, dag: DAG,
+                 delta=None) -> BuildHandle:
+        """Delta resubmission: build the mutated ``dag`` with the same
+        machine count and knobs as ``handle``'s submission, replaying
+        every partition the edit left untouched (``build_schedule``'s
+        ``reuse``; bit-identical to a fresh submit of ``dag``).
+
+        ``delta`` is the `core.dag.DagDelta` of the edit; when given,
+        (old submission key, delta digest) keys a dedup front of its own,
+        so a recurring pipeline resubmitting the same edit repeatedly
+        neither re-hashes the DAG nor rebuilds.  The previous build's
+        parts map is only consulted if the old future already completed —
+        otherwise the resubmission degrades to a full (still exact) build.
+        """
+        old = handle.key
+        _, m, backend, memoize, knob_items = old
+        knobs = dict(knob_items)
+        rekey = (old, delta.digest) if delta is not None else None
+        with self._lock:
+            self.stats["resubmits"] += 1
+            if rekey is not None:
+                key = self._rekeys.get(rekey)
+                fut = self._futures.get(key) if key is not None else None
+                if fut is not None and not fut.cancelled() and not (
+                        fut.done() and fut.exception() is not None):
+                    self.stats["resubmit_deduped"] += 1
+                    self.stats["submitted"] += 1
+                    self.stats["deduped"] += 1
+                    self._futures[key] = self._futures.pop(key)  # MRU
+                    return BuildHandle(fut, dag, key)
+        kw = dict(knobs)
+        kw["backend"] = backend
+        kw["memoize"] = memoize
+        prev = handle._future
+        if prev.done() and not prev.cancelled() and prev.exception() is None:
+            info = prev.result()[7]
+            if info is not None:
+                kw["reuse"] = info.parts
+        key = self.key_for(dag, m, backend=backend, memoize=memoize, **knobs)
+        if rekey is not None:
+            with self._lock:
+                if len(self._rekeys) >= self._cache_cap:
+                    self._rekeys.pop(next(iter(self._rekeys)))
+                self._rekeys[rekey] = key
+        return self._submit_keyed(key, dag, m, kw)
+
+    def _submit_keyed(self, key: tuple, dag: DAG, m: int,
+                      kw: dict) -> BuildHandle:
         with self._lock:
             if self._closed:
                 raise RuntimeError("BuildService is shut down")

@@ -21,9 +21,14 @@ breaks where, injected at four named seams —
   ``heartbeat``        simulated machine heartbeat            suspicion -> declared
                        (drop / delay)                         lost -> requeue ->
                                                               rejoin (lossy)
+  ``memo``             construction-memo entry lookup         checksum-validated
+                       (corrupt / drop)                       entries: a bad or
+                                                              evicted entry is a
+                                                              miss -> live search
+                                                              (exact)
   ===================  =====================================  ==========
 
-The first three recoveries are **decision-exact**: shard quarantine
+The code-seam recoveries are **decision-exact**: shard quarantine
 substitutes the conservative all-eligible mask, which is a sound
 superset of the real eligibility columns (`machines_with_candidates`
 only ever *skips* provably-idle machines — PR 4's soundness argument),
@@ -62,10 +67,11 @@ from contextlib import contextmanager
 #: env var carrying a plan spec string into every process of a run
 FAULTS_ENV = "REPRO_FAULTS"
 
-SEAMS = ("shard_launch", "build_worker", "kernel_impl", "heartbeat")
+SEAMS = ("shard_launch", "build_worker", "kernel_impl", "heartbeat", "memo")
 #: seams whose recovery reproduces the fault-free decisions bit-for-bit
-EXACT_SEAMS = frozenset({"shard_launch", "build_worker", "kernel_impl"})
-KINDS = ("raise", "hang", "crash", "drop", "delay")
+EXACT_SEAMS = frozenset({"shard_launch", "build_worker", "kernel_impl",
+                         "memo"})
+KINDS = ("raise", "hang", "crash", "drop", "delay", "corrupt")
 
 
 class InjectedFault(RuntimeError):
@@ -247,7 +253,14 @@ class RecoveryPolicy:
     backoff: float = 0.05                # base of the capped exponential backoff
     backoff_cap: float = 1.0
     quarantine_after: int = 3            # consecutive shard-launch failures
-    probe_every: int = 50                # quarantined-shard probe cadence (waves)
+    #: quarantined-shard probe cadence.  ``probe_every`` counts waves and
+    #: acts as a *floor* (never probe more often than every N waves);
+    #: ``probe_secs`` is the wall-clock trigger, so long waves cannot
+    #: starve probes — a shard is probed once max(probe_every waves,
+    #: probe_secs seconds) has elapsed, whichever is FIRST beyond the
+    #: 1-wave minimum.  ``probe_secs=None`` restores pure wave counting.
+    probe_every: int = 50
+    probe_secs: float | None = 30.0
     build_retries: int = 3               # pool attempts before inline fallback
 
 

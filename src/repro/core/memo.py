@@ -57,6 +57,8 @@ import threading
 
 import numpy as np
 
+from . import faults
+
 
 class Counters:
     """Thread-safe accounting counters (``d[k]`` reads, ``add`` writes).
@@ -104,6 +106,11 @@ COUNTERS = Counters((
     "passes_replayed",       # pass-memo plan replays (incl. fail shortcuts)
     "variants_bound_skipped",  # order-variant subtrees pruned by bound
     "candidates_lb_skipped",   # candidates skipped at the tick LB
+    "parts_reused",          # delta rebuild: partitions replayed from a
+                             # previous build's content-keyed parts map
+    "placements_reused",     # ...task placements those partitions carried
+    "memo_discarded",        # entries failing their self-checksum on get
+                             # (corruption -> treated as a miss, evicted)
 ))
 
 
@@ -131,6 +138,22 @@ def item_hash(a: int, b: int, c: int, salt: int = 0) -> int:
     h ^= h >> 29
     h = (h * _M1) & _MASK
     h ^= h >> 32
+    return h
+
+
+def _place_chk(b0: int, b1: int, dig: int, m: int, t0: int,
+               epoch: int) -> int:
+    """Self-checksum of one place-memo entry (fault hardening: a stored
+    entry whose fields no longer hash to this is discarded on get)."""
+    return item_hash(b0 * 1000003 + b1, m * 1000003 + t0, epoch, salt=dig)
+
+
+def _pass_chk(span: int, plan: list) -> int:
+    """Self-checksum of one pass-memo entry (order-sensitive over the
+    replay plan: any mutated commit flips it)."""
+    h = item_hash(span, len(plan), 0)
+    for i, (t, m, t0) in enumerate(plan):
+        h = (h + item_hash(t * 1000003 + m, t0, i, salt=h)) & _MASK
     return h
 
 
@@ -223,13 +246,33 @@ class ConstructionMemo:
         lst = self._place.get((direction, vb, k, anchor))
         if not lst:
             return None
-        for b0, b1, dig, m, t0, epoch in lst:
-            if self._window_digest(b0, b1) == dig:
+        fault = faults.query("memo", op="place", k=int(k), anchor=int(anchor))
+        if fault is not None and lst:
+            if fault.kind == "drop":          # eviction: whole key gone
+                lst.clear()
+                return None
+            if fault.kind == "corrupt":       # flip a stored field, not chk
+                b0, b1, dig, m, t0, epoch, chk = lst[-1]
+                lst[-1] = (b0, b1, dig, m, t0 + 1, epoch, chk)
+        live = []
+        hit = None
+        for e in lst:
+            b0, b1, dig, m, t0, epoch, chk = e
+            if chk != _place_chk(b0, b1, dig, m, t0, epoch):
+                # bit-rot / injected corruption: the entry is evicted and
+                # the lookup falls through to the live search — a bad
+                # entry can cost a rebuild, never a mis-placement
+                COUNTERS.add("memo_discarded")
+                continue
+            live.append(e)
+            if hit is None and self._window_digest(b0, b1) == dig:
                 COUNTERS.add("places_memoized")
                 if epoch != self._epoch:
                     COUNTERS.add("places_memoized_xpart")
-                return m, t0
-        return None
+                hit = (m, t0)
+        if len(live) != len(lst):
+            lst[:] = live
+        return hit
 
     def place_put(self, direction: str, vb: bytes, k: int, anchor: int,
                   forward: bool, m: int, t0: int) -> None:
@@ -237,7 +280,9 @@ class ConstructionMemo:
         # rejected plus the slot it took (see module docstring)
         b0, b1 = (anchor, t0 + k) if forward else (t0, anchor)
         lst = self._place.setdefault((direction, vb, k, anchor), [])
-        lst.append((b0, b1, self._window_digest(b0, b1), m, t0, self._epoch))
+        dig = self._window_digest(b0, b1)
+        lst.append((b0, b1, dig, m, t0, self._epoch,
+                    _place_chk(b0, b1, dig, m, t0, self._epoch)))
         if len(lst) > PLACE_ENTRY_CAP:
             del lst[0]
 
@@ -247,7 +292,24 @@ class ConstructionMemo:
         return (np.sort(ids).tobytes(), direction, self.ckey, sp.T, sp.off)
 
     def pass_get(self, key: tuple):
-        return self._pass.get(key)
+        ent = self._pass.get(key)
+        if ent is None:
+            return None
+        span, plan, chk = ent
+        fault = faults.query("memo", op="pass", n=len(plan))
+        if fault is not None:
+            if fault.kind == "drop":
+                del self._pass[key]
+                return None
+            if fault.kind == "corrupt" and plan:
+                t, m, t0 = plan[0]
+                plan = [(t, m + 1, t0)] + plan[1:]
+                self._pass[key] = (span, plan, chk)
+        if chk != _pass_chk(span, plan):
+            COUNTERS.add("memo_discarded")
+            del self._pass[key]
+            return None
+        return span, plan
 
     def pass_put(self, key: tuple, span: int, plan: list) -> None:
-        self._pass[key] = (span, plan)
+        self._pass[key] = (span, plan, _pass_chk(span, plan))

@@ -187,6 +187,9 @@ class ShardedMatcher:
         self.quarantined = [False] * n
         self._consec_fail = [0] * n
         self._probe_wait = [0] * n
+        #: wall-clock of the last probe (or quarantine entry) per shard —
+        #: the probe_secs trigger, so long waves cannot starve probes
+        self._probe_stamp = [0.0] * n
         self._any_quarantined = False
         self.launch_retries = 0      # retried attempts that got another try
         self.launch_failures = 0     # launches that exhausted every attempt
@@ -269,12 +272,19 @@ class ShardedMatcher:
     def _guarded_launch(self, s: int, avail_rows: np.ndarray,
                         dem: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         """Degraded-mode launch: retry w/ capped backoff, quarantine after
-        repeated failure, probe-recover on a fixed wave cadence."""
+        repeated failure, probe-recover on a wave-count OR wall-clock
+        cadence (probe_every waves / probe_secs seconds, whichever trips
+        first; at least one wave always passes between probes)."""
         rec = self.recovery
         if self.quarantined[s]:
             self._probe_wait[s] += 1
-            if self._probe_wait[s] >= max(rec.probe_every, 1):
+            due = self._probe_wait[s] >= max(rec.probe_every, 1)
+            if not due and rec.probe_secs is not None:
+                due = (time.monotonic() - self._probe_stamp[s]
+                       >= rec.probe_secs)
+            if due:
                 self._probe_wait[s] = 0
+                self._probe_stamp[s] = time.monotonic()
                 t0 = time.perf_counter()
                 try:
                     out = self._timed_attempt(s, avail_rows, dem, attempt=0)
@@ -310,6 +320,7 @@ class ShardedMatcher:
         if self._consec_fail[s] >= max(rec.quarantine_after, 1):
             self.quarantined[s] = True
             self._probe_wait[s] = 0
+            self._probe_stamp[s] = time.monotonic()
             self.quarantine_events += 1
             self._any_quarantined = True
         self.quarantined_launches += 1

@@ -91,7 +91,8 @@ def schedule_cluster(jobs: list[TPUJob], n_slices: int = 32,
                      heartbeat_period: float | None = None,
                      hb_suspect_after: float | None = None,
                      hb_lost_after: float | None = None,
-                     recovery=None):
+                     recovery=None,
+                     mutations=None):
     """Gang-schedule the jobs' stage DAGs onto pod slices with DAGPS.
 
     ``placement_backend`` selects the offline construction engine
@@ -108,6 +109,12 @@ def schedule_cluster(jobs: list[TPUJob], n_slices: int = 32,
     the run; ``heartbeat_period`` (+ ``hb_suspect_after`` /
     ``hb_lost_after``) turns on heartbeat-loss semantics in the
     simulator; ``recovery`` is a shared ``RecoveryPolicy``.
+
+    ``mutations`` scripts mid-run dynamics (SimConfig.mutations): DAG
+    edits via the core.dag mutation helpers — repaired incrementally
+    through delta rebuilds — and slice speed changes.  The result's
+    ``fault_stats`` and ``mutation_stats`` report what fired and how much
+    of the previous placements each repair replayed.
     """
     rng = np.random.default_rng(seed)
     arrivals = []
@@ -124,5 +131,6 @@ def schedule_cluster(jobs: list[TPUJob], n_slices: int = 32,
                     heartbeat_period=heartbeat_period,
                     hb_suspect_after=hb_suspect_after,
                     hb_lost_after=hb_lost_after,
-                    recovery=recovery)
+                    recovery=recovery,
+                    mutations=mutations)
     return ClusterSim(cfg, scheme(policy)).run(arrivals)

@@ -140,6 +140,8 @@ def lower_cell(arch_id: str, shape_name: str, multi_pod: bool,
         rec["memory"]["fits_16g"] = bool(live <= HBM_PER_CHIP)
 
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, list):  # jax 0.4.x: list of per-computation dicts
+            cost = cost[0] if cost else {}
         text = compiled.as_text()
         coll = RL.parse_collectives(text, n_dev)
         rl = RL.roofline_terms(cost, coll, n_dev, model_flops)

@@ -414,7 +414,12 @@ def moe_forward(p: Params, x: jax.Array, cfg: MoEConfig) -> jax.Array:
     the model axis, into the expert-sharded einsum and back: the honest EP
     all-to-all, in bf16, once forward and once backward.
     """
-    from jax import shard_map
+    try:  # jax >= 0.6: top-level export, varying-manual-axes check
+        from jax import shard_map
+        _smap_kw = {"check_vma": False}
+    except ImportError:  # jax 0.4.x: experimental module, replication check
+        from jax.experimental.shard_map import shard_map
+        _smap_kw = {"check_rep": False}
     from jax.sharding import PartitionSpec as P
 
     from .sharding import current_mesh
@@ -490,7 +495,7 @@ def moe_forward(p: Params, x: jax.Array, cfg: MoEConfig) -> jax.Array:
                  P(gspec, None))
         xb, st, sw, bidx = shard_map(
             dispatch, mesh=mesh, in_specs=d_in, out_specs=d_out,
-            check_vma=False)(xg, router)
+            **_smap_kw)(xg, router)
     else:
         xb, st, sw, bidx = dispatch(xg, router)
     # expert compute under pjit: the buffer reshards group->expert here
@@ -505,7 +510,7 @@ def moe_forward(p: Params, x: jax.Array, cfg: MoEConfig) -> jax.Array:
                 P(gspec, None))
         out = shard_map(combine, mesh=mesh, in_specs=c_in,
                         out_specs=P(gspec, None, None),
-                        check_vma=False)(yb, st, sw, bidx)
+                        **_smap_kw)(yb, st, sw, bidx)
     else:
         out = combine(yb, st, sw, bidx)
     if "shared" in p:

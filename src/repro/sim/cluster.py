@@ -39,7 +39,7 @@ from typing import Sequence
 import numpy as np
 
 from ..core import faults
-from ..core.builder import build_schedule
+from ..core.builder import build_schedule, rebuild_schedule
 from ..core.buildsvc import BuildService
 from ..core.baselines import bfs_order, cp_order, random_order
 from ..core.dag import DAG, dag_digest
@@ -56,8 +56,9 @@ from ..core.shard import ShardedMatcher
 # event codes (heap entries are (time, seq, code, int_arg) — payloads live in
 # side tables indexed by the int arg, never in per-event tuples/dicts).
 # _HB = a machine emits a heartbeat, _HBA = a delayed heartbeat arrives at
-# the scheduler, _HBCHK = the scheduler checks a machine's silence deadline
-_ARRIVAL, _FINISH, _SPEC, _FAIL, _JOIN, _HB, _HBA, _HBCHK = range(8)
+# the scheduler, _HBCHK = the scheduler checks a machine's silence deadline,
+# _MUT = a scripted dynamic-DAG / machine-speed mutation fires
+_ARRIVAL, _FINISH, _SPEC, _FAIL, _JOIN, _HB, _HBA, _HBCHK, _MUT = range(9)
 
 
 class _RunTable:
@@ -216,6 +217,16 @@ class SimConfig:
     fault_plan: object | None = None
     #: recovery knobs shared by the sharded matcher and build service
     recovery: faults.RecoveryPolicy | None = None
+    #: scripted dynamics (core/dag.py mutation helpers): each entry is
+    #: either ``(t, job_idx, mutator)`` — `mutator` maps the job's current
+    #: DAG to ``(new_dag, DagDelta)``, applied mid-run if the job is
+    #: running (delta rebuild replays untouched partitions) or swapped
+    #: under the pending arrival otherwise — or ``(t, "speed", machine,
+    #: factor)``, rescaling one machine's (None = every machine's)
+    #: effective speed for tasks launched after ``t``.  A mutation whose
+    #: touched tasks all finished already, or that targets a completed
+    #: job, is counted as a no-op.  Empty/None = seed behavior, bit-exact.
+    mutations: Sequence | None = None
 
 
 @dataclasses.dataclass
@@ -249,6 +260,10 @@ class SimResult:
     #: during the run, shard launch retries/quarantines, build service
     #: retries/crashes/fallbacks, kernel demotions, heartbeat-loss counts
     fault_stats: dict | None = None
+    #: dynamic-DAG accounting when SimConfig.mutations is set, else None:
+    #: mutation events applied/no-oped, delta vs full rebuild counts and
+    #: the partition/placement reuse they achieved
+    mutation_stats: dict | None = None
 
     def jcts(self) -> np.ndarray:
         return np.array([j.jct for j in self.jobs])
@@ -335,10 +350,76 @@ class ClusterSim:
         return (dag_digest(dag), self._build_m(),
                 get_backend(self.cfg.placement_backend).name)
 
+    # -- dynamic-DAG (mutations-scripted) schedule bookkeeping ---------
+
+    def _count_rebuild(self, sched, dag: DAG) -> None:
+        """Fold one (re)build's partition-reuse accounting into the run's
+        mutation stats."""
+        ms = self._mut_stats
+        info = getattr(sched, "build_info", None)
+        if info is None:
+            ms["full_builds"] += 1
+            return
+        ms["delta_builds" if info.reused_parts else "full_builds"] += 1
+        ms["parts_reused"] += int(info.reused_parts)
+        ms["parts_total"] += int(info.total_parts or 1)
+        ms["tasks_reused"] += int(info.reused_tasks)
+        ms["tasks_total"] += int(dag.n)
+
+    def _dyn_sched(self, dag: DAG, idx: int | None):
+        """Schedule for an arriving job in a dynamic run.
+
+        Dynamic runs bypass the pri-only cross-run cache: they must keep
+        the full Schedule (its ``build_info`` carries the content-keyed
+        partition map) so later mutations delta-rebuild instead of
+        re-searching.  Digest-equal DAGs share one Schedule; a job whose
+        DAG was mutated before arrival delta-rebuilds from its base
+        digest's Schedule when one was built this run.
+        """
+        dig = dag_digest(dag)
+        delta = self._predeltas.pop(idx, None)
+        sched = self._by_digest.get(dig)
+        if sched is None:
+            handle = self._builds.pop(idx, None)
+            if handle is not None:
+                sched = handle.result()
+            else:
+                prev = (self._by_digest.get(delta.base_digest)
+                        if delta is not None else None)
+                if prev is not None and prev.build_info is not None:
+                    sched = rebuild_schedule(
+                        prev, dag, backend=self.cfg.placement_backend)
+                else:
+                    sched = build_schedule(dag, self._build_m(),
+                                           backend=self.cfg.placement_backend)
+            if idx in self._mut_jobs:
+                self._count_rebuild(sched, dag)
+            self._by_digest[dig] = sched
+        if idx is not None:
+            self._scheds[idx] = sched
+        return sched
+
+    def _dyn_sched_mut(self, k: int, new_dag: DAG):
+        """Re-plan job k after a mid-run mutation: delta rebuild from its
+        retained Schedule when possible, full construction otherwise."""
+        prev = self._scheds.get(k)
+        if prev is not None and prev.build_info is not None:
+            sched = rebuild_schedule(prev, new_dag,
+                                     backend=self.cfg.placement_backend)
+        else:
+            sched = build_schedule(new_dag, self._build_m(),
+                                   backend=self.cfg.placement_backend)
+        self._count_rebuild(sched, new_dag)
+        self._by_digest[dag_digest(new_dag)] = sched
+        self._scheds[k] = sched
+        return sched
+
     def _make_pri(self, dag: DAG, rng: np.random.Generator,
                   idx: int | None = None) -> np.ndarray:
         kind = self.spec.order_fn
         if kind == "dagps":
+            if getattr(self, "_dynamic", False):
+                return self._dyn_sched(dag, idx).pri_score
             use_cache = self.cfg.schedule_cache
             key = self._pri_cache_key(dag) if use_cache else None
             if use_cache:
@@ -408,6 +489,29 @@ class ClusterSim:
             t_fail = float(rng.exponential(1.0 / cfg.failure_rate))
             heapq.heappush(events, (t_fail, next(counter), _FAIL, 0))
 
+        # scripted dynamics (SimConfig.mutations).  DAG mutations make the
+        # run "dynamic": dagps jobs keep their full Schedule (not just the
+        # pri vector) so mutations delta-rebuild, and the cross-run pri
+        # cache is bypassed.  `speed` is the sim-level machine-speed edit:
+        # 1.0 everywhere is bit-exact seed behavior (never divided by).
+        muts = list(cfg.mutations or ())
+        self._dynamic = any(
+            not (len(mu) > 1 and mu[1] == "speed") for mu in muts)
+        self._by_digest: dict[bytes, object] = {}
+        self._scheds: dict[int, object] = {}
+        self._predeltas: dict[int, object] = {}
+        self._mut_jobs: set[int] = set()
+        mut_stats = {"events": 0, "applied": 0, "noops": 0, "pre_arrival": 0,
+                     "speed_changes": 0, "delta_builds": 0, "full_builds": 0,
+                     "parts_reused": 0, "parts_total": 0,
+                     "tasks_reused": 0, "tasks_total": 0}
+        self._mut_stats = mut_stats
+        speed = np.ones(M, dtype=np.float64)
+        if muts:
+            arrivals = list(arrivals)   # pre-arrival mutations swap entries
+            for i, mu in enumerate(muts):
+                heapq.heappush(events, (float(mu[0]), next(counter), _MUT, i))
+
         # heartbeat-loss state (disabled by default: no events scheduled,
         # no rng consumed, both masks stay all-False — bit-identical to
         # the implicit-heartbeat seed behavior)
@@ -469,6 +573,8 @@ class ClusterSim:
             load = 1.0 - avail[m]
             overload = float(max(load[2:].max() if d > 2 else 0.0, 1.0))
             dur_eff = dur * overload
+            if speed[m] != 1.0:   # machine-speed mutations: future launches
+                dur_eff = dur_eff / speed[m]
             rid = runs.append(job.job_id, tid, m, now, base)
             task_active.setdefault((job.job_id, tid), []).append(rid)
             if not speculative:
@@ -560,7 +666,10 @@ class ClusterSim:
                                recovery=cfg.recovery)
             m_build = self._build_m()
             for k, (_t, dag, _g) in enumerate(arrivals):
-                if cfg.schedule_cache and self._pri_cache_key(dag) in _PRI_CACHE:
+                # dynamic runs prefetch everything (the pri cache is
+                # bypassed; the service dedups identical DAGs itself)
+                if (cfg.schedule_cache and not self._dynamic
+                        and self._pri_cache_key(dag) in _PRI_CACHE):
                     continue
                 self._builds[k] = svc.submit(
                     dag, m_build, backend=cfg.placement_backend)
@@ -599,6 +708,87 @@ class ClusterSim:
                 avail, matchable(), batch,
                 lambda gi, m: start_task(jobs[int(batch.job[gi])],
                                          int(batch.tid[gi]), m, now))
+
+        def mutate_job(k: int, mutator, now: float) -> None:
+            """Apply one scripted DAG mutation (a core.dag helper curried
+            over its arguments) to job k and repair its schedule."""
+            nonlocal incomplete_jobs
+            job = jobs.get(k)
+            if job is None:
+                # pre-arrival: swap the DAG under the pending arrival; a
+                # prefetched construction is resubmitted as a delta so the
+                # worker pool replays the old build's untouched partitions
+                t_a, old_dag, g = arrivals[k]
+                new_dag, delta = mutator(old_dag)
+                arrivals[k] = (t_a, new_dag, g)
+                self._predeltas[k] = delta
+                self._mut_jobs.add(k)
+                h = self._builds.get(k)
+                if svc is not None and h is not None:
+                    self._builds[k] = svc.resubmit(h, new_dag, delta)
+                mut_stats["pre_arrival"] += 1
+                return
+            if job.complete:
+                mut_stats["noops"] += 1
+                return
+            new_dag, delta = mutator(job.dag)
+            old_n = job.dag.n
+            idm = delta.id_map
+            identity = new_dag.n == old_n and bool(
+                np.array_equal(idm, np.arange(old_n)))
+            if identity and len(delta.touched) and all(
+                    int(x) in job.done for x in delta.touched):
+                # every touched task already finished — re-prioritizing
+                # completed work cannot change any remaining decision
+                mut_stats["noops"] += 1
+                return
+            for x in np.flatnonzero(idm < 0):
+                if int(x) in job.running:
+                    raise ValueError(
+                        f"mutation drops running task {int(x)} of job {k}")
+            # re-plan: delta rebuild from the retained Schedule when the
+            # scheme builds one, else recompute the baseline order
+            if self.spec.order_fn == "dagps":
+                pri = self._dyn_sched_mut(k, new_dag).pri_score
+            else:
+                pri = self._make_pri(new_dag, rng)
+            # remap live state through the delta's id map, then rebuild
+            # the derived per-job arrays against the new graph
+            if not identity:
+                sel = np.flatnonzero(runs.job[: runs.n] == k)
+                runs.task[sel] = idm[runs.task[sel]]  # dead dropped -> -1
+                for key in [key for key in task_active if key[0] == k]:
+                    lst = task_active.pop(key)
+                    nt = int(idm[key[1]])
+                    if nt >= 0:
+                        task_active[(k, nt)] = lst
+                job.done = {int(idm[x]) for x in job.done if idm[x] >= 0}
+                job.running = {int(idm[x]) for x in job.running}
+            job.dag = new_dag
+            job.pri = pri
+            job._work = new_dag.duration * np.abs(new_dag.demand).sum(axis=1)
+            job.pending_parents = np.array(
+                [sum(1 for p in new_dag.parents[i] if int(p) not in job.done)
+                 for i in range(new_dag.n)])
+            job.runnable = {i for i in range(new_dag.n)
+                            if i not in job.done and i not in job.running
+                            and job.pending_parents[i] == 0}
+            mask = np.ones(new_dag.n, dtype=bool)
+            if job.done:
+                mask[list(job.done)] = False
+            job.srpt = float(job._work[mask].sum())
+            mut_stats["applied"] += 1
+            pool.remove_job(k)
+            if job.complete and job.finish is None:
+                # a shrink can retire the job outright
+                job.finish = now
+                results.append(JobResult(k, job.group, job.arrival, now,
+                                         new_dag.n))
+                incomplete_jobs -= 1
+                return
+            pool.add_job(k, job.group, new_dag.demand, pri, job.runnable,
+                         job.srpt)
+            match_all(now)
 
         try:
             while events:
@@ -652,6 +842,18 @@ class ClusterSim:
                     alive[arg] = True
                     avail[arg] = 1.0
                     timed("match", match_machine, arg, t_now)
+                elif kind == _MUT:
+                    mu = muts[arg]
+                    mut_stats["events"] += 1
+                    if len(mu) > 1 and mu[1] == "speed":
+                        _t_mu, _sp, mm, factor = mu
+                        if mm is None:
+                            speed[:] = float(factor)
+                        else:
+                            speed[int(mm)] = float(factor)
+                        mut_stats["speed_changes"] += 1
+                    else:
+                        timed("build", mutate_job, int(mu[1]), mu[2], t_now)
                 elif kind == _HB:
                     m = arg
                     beat = int(beat_no[m])
@@ -732,6 +934,9 @@ class ClusterSim:
 
         finally:
             self._builds = {}
+            self._by_digest = {}
+            self._scheds = {}
+            self._predeltas = {}
             if svc is not None:
                 svc.shutdown(wait=False)
             smatcher.close()
@@ -774,7 +979,8 @@ class ClusterSim:
                        "probe_recoveries")},
             "build": {k: svc.stats[k] for k in
                       ("retries", "worker_crashes", "quarantined_digests",
-                       "inline_fallbacks")} if svc is not None else {},
+                       "inline_fallbacks", "resubmits", "resubmit_deduped")}
+            if svc is not None else {},
             "kernel_demotions": {k: v - dem0.get(k, 0)
                                  for k, v in dem1.items()
                                  if v - dem0.get(k, 0)},
@@ -783,7 +989,8 @@ class ClusterSim:
         }
         return SimResult(results, makespan, usage_samples, allocations,
                          spec_launches, requeued, phase_times,
-                         sstats, fault_stats)
+                         sstats, fault_stats,
+                         mut_stats if muts else None)
 
 
 def run_workload(

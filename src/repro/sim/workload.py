@@ -21,7 +21,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from ..core.dag import DAG, from_stage_graph
+from ..core.dag import (DAG, append_stage, from_stage_graph, resize_stage,
+                        retarget_deadline, scale_speeds)
 
 
 def _lognormal(rng, median: float, sigma: float) -> float:
@@ -316,6 +317,74 @@ def periodic_dag(rng: np.random.Generator, name: str = "periodic") -> DAG:
         barrier = add(1, agg_dur, agg_dem, ps)
     # no jitter: periods must stay bit-identical (that IS the workload)
     return from_stage_graph(tasks, durs, dems, deps, name=name, rng=rng)
+
+
+# ----------------------------------------------------------------------
+# Dynamic-DAG scenarios (s12): scripted mutations for SimConfig.mutations
+# ----------------------------------------------------------------------
+
+def mut_append_stage(q: int = 2, duration: float = 4.0, demand=None):
+    """Curried `core.dag.append_stage`: a late-arriving stage hung off the
+    DAG's last stage (the 'tasks added to a running job' production case)."""
+    dem = np.full(4, 0.1) if demand is None else np.asarray(demand, float)
+
+    def mut(dag: DAG):
+        return append_stage(dag, q, duration, dem,
+                            parent_stages=(int(dag.stage_of.max()),))
+    return mut
+
+
+def mut_resize_stage(stage: int = 1, delta_q: int = 1):
+    """Curried `core.dag.resize_stage`: grow/shrink one stage by delta_q."""
+    def mut(dag: DAG):
+        q = int((dag.stage_of == stage).sum())
+        return resize_stage(dag, stage, max(q + delta_q, 1))
+    return mut
+
+
+def mut_retarget(factor: float = 0.8):
+    """Curried `core.dag.retarget_deadline`: pull every deadline in."""
+    return lambda dag: retarget_deadline(dag, factor)
+
+
+def mut_scale_speeds(factor: float = 1.5, ids=None):
+    """Curried `core.dag.scale_speeds`: the job-share view of a machine
+    speed edit (durations rescale)."""
+    return lambda dag: scale_speeds(dag, factor, ids)
+
+
+def s12_dynamic(kind: str, n_jobs: int = 6, seed: int = 0):
+    """Recurring-pipeline population + scripted edits — the s12_dynamic
+    scenario family.  One periodic template repeated ``n_jobs`` times (the
+    paper's >40%-recurring regime) plus mutations per ``kind``:
+
+      resize — a stage resize lands before each later arrival: the classic
+               recurring-pipeline edit.  Only the edited period's partition
+               re-searches; every other partition replays from the
+               template's schedule (the >=50%-placement-reuse scenario).
+      retime — a deadline pull-in lands before each later arrival: every
+               duration changes, so nothing can replay (worst case; the
+               contrast row for the reuse accounting).
+      midrun — dynamics inside a running job: a task/stage arrival, a
+               deadline pull-in, and a machine speed change.
+
+    Returns ``(dags, mutations)`` for `run_workload(..., mutations=...)`.
+    """
+    rng = np.random.default_rng(seed)
+    template = periodic_dag(rng, name="recurring")
+    dags = [template] * n_jobs
+    if kind == "resize":
+        muts = [(0.0, k, mut_resize_stage(stage=1, delta_q=1))
+                for k in range(1, n_jobs)]
+    elif kind == "retime":
+        muts = [(0.0, k, mut_retarget(0.8)) for k in range(1, n_jobs)]
+    elif kind == "midrun":
+        muts = [(1.0, 0, mut_append_stage()),
+                (2.0, 0, mut_retarget(0.9)),
+                (5.0, "speed", 0, 1.5)]
+    else:
+        raise ValueError(f"unknown s12_dynamic kind {kind!r}")
+    return dags, muts
 
 
 def online_mix_workload(n_jobs: int, seed: int = 0,

@@ -1,0 +1,300 @@
+"""Dynamic DAGs: graph mutations, incremental reachability, delta
+rebuilds, and mid-run schedule repair in the cluster simulator.
+
+Covers the mutation edge cases the paper's recurring-pipeline regime
+exercises: cycle/validity rejection, digest freshness per mutation kind,
+incremental reachability == full recompute, delta rebuild == full build
+(bit parity, across backends x memo), and the simulator's dynamic-run
+semantics (noop rules, speed edits, mid-run stage arrival).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import available_backends
+from repro.core.buildsvc import BuildService
+from repro.core.builder import (assert_schedules_equal, build_schedule,
+                                rebuild_schedule)
+from repro.core.dag import (add_dependency, append_stage, append_tasks,
+                            dag_digest, from_stage_graph, resize_stage,
+                            retarget_deadline, scale_durations, scale_speeds,
+                            _pack_reach)
+from repro.sim.cluster import run_workload
+from repro.sim.workload import (mut_append_stage, mut_resize_stage,
+                                mut_retarget, periodic_dag, s12_dynamic)
+
+
+def _template():
+    return periodic_dag(np.random.default_rng(5), name="recurring")
+
+
+def _chain(durs=(20.0, 20.0, 20.0)):
+    dem = np.full(4, 0.3)
+    return from_stage_graph([1] * len(durs), list(durs), [dem] * len(durs),
+                            [[]] + [[i] for i in range(len(durs) - 1)],
+                            name="chain")
+
+
+def _decision_key(res):
+    return ([(j.job_id, repr(j.jct)) for j in
+             sorted(res.jobs, key=lambda j: j.job_id)], repr(res.makespan))
+
+
+# ----------------------------------------------------------------------
+# mutation validity: cycles, bad ids, degenerate edits are rejected
+# ----------------------------------------------------------------------
+
+def test_add_dependency_rejects_cycles_and_duplicates():
+    dag = _template()
+    with pytest.raises(ValueError, match="topological"):
+        add_dependency(dag, 5, 2)          # back-edge = cycle
+    with pytest.raises(ValueError, match="topological"):
+        add_dependency(dag, 3, 3)          # self-loop
+    with pytest.raises(ValueError, match="no such task"):
+        add_dependency(dag, 0, dag.n + 7)
+    c = next(t for t in range(dag.n) if len(dag.parents[t]))
+    p = int(dag.parents[c][0])
+    with pytest.raises(ValueError, match="already exists"):
+        add_dependency(dag, p, c)
+
+
+def test_append_tasks_rejects_forward_parents():
+    dag = _template()
+    with pytest.raises(ValueError, match="earlier tasks"):
+        # first appended task (id n) depending on the second (id n+1)
+        append_tasks(dag, [1.0, 1.0], [np.full(4, 0.1)] * 2,
+                     [dag.n_stages] * 2, [[dag.n + 1], []])
+    with pytest.raises(ValueError, match="nothing to append"):
+        append_tasks(dag, [], [], [], [])
+
+
+def test_resize_stage_rejects_degenerate_edits():
+    dag = _template()
+    q = int((dag.stage_of == 1).sum())
+    with pytest.raises(ValueError, match="unchanged"):
+        resize_stage(dag, 1, q)
+    with pytest.raises(ValueError, match="at least one task"):
+        resize_stage(dag, 1, 0)
+    with pytest.raises(ValueError, match="no such stage"):
+        resize_stage(dag, dag.n_stages + 3, 2)
+
+
+def test_shrink_rejects_orphaning_children():
+    # build a 2-wide stage whose children each hang off ONE member only
+    # (not all-to-all): dropping the high member orphans its private child
+    dem = np.full(4, 0.2)
+    dag, _ = append_tasks(
+        _chain((5.0,)), [3.0, 3.0], [dem, dem], [1, 1], [[0], [0]])
+    dag, _ = append_tasks(dag, [2.0], [dem], [2], [[2]])  # child of high twin
+    with pytest.raises(ValueError, match="orphan"):
+        resize_stage(dag, 1, 1)
+
+
+def test_scale_durations_rejects_nonpositive():
+    with pytest.raises(ValueError, match="positive"):
+        scale_durations(_chain(), 0.0)
+
+
+# ----------------------------------------------------------------------
+# digest freshness: every mutation kind moves the content digest
+# ----------------------------------------------------------------------
+
+def test_every_mutation_kind_changes_digest():
+    dag = _template()
+    base = dag_digest(dag)
+    dem = np.full(4, 0.1)
+    muts = {
+        "append_tasks": append_tasks(dag, [2.0], [dem], [dag.n_stages], [[0]]),
+        "append_stage": append_stage(dag, 2, 3.0, dem, parent_stages=(0,)),
+        "resize_grow": resize_stage(dag, 1, int((dag.stage_of == 1).sum()) + 1),
+        "retarget": retarget_deadline(dag, 0.8),
+        "speeds": scale_speeds(dag, 1.5),
+        "add_dep": add_dependency(
+            dag, 0, next(t for t in range(1, dag.n)
+                         if 0 not in dag.parents[t])),
+    }
+    digests = {base}
+    edit_digests = set()
+    for kind, (new, delta) in muts.items():
+        assert delta.base_digest == base, kind
+        assert delta.new_digest == dag_digest(new), kind
+        assert delta.new_digest not in digests, f"{kind} digest collision"
+        digests.add(delta.new_digest)
+        assert delta.digest not in edit_digests, f"{kind} edit-key collision"
+        edit_digests.add(delta.digest)
+    # id_map invariants: pure edits keep identity, grow shifts, never lies
+    assert np.array_equal(muts["retarget"][1].id_map, np.arange(dag.n))
+    grow_map = muts["resize_grow"][1].id_map
+    assert len(grow_map) == dag.n and (grow_map >= 0).all()
+
+
+def test_completed_mutation_digest_is_deterministic():
+    a = retarget_deadline(_template(), 0.8)[1].digest
+    b = retarget_deadline(_template(), 0.8)[1].digest
+    assert a == b                         # same edit on same base: same key
+    assert a != retarget_deadline(_template(), 0.9)[1].digest
+
+
+# ----------------------------------------------------------------------
+# incremental reachability == full recompute, eager and lazy base
+# ----------------------------------------------------------------------
+
+def _mutants(dag):
+    dem = np.full(4, 0.1)
+    yield "append_tasks", append_tasks(
+        dag, [2.0, 1.0], [dem, dem], [dag.n_stages] * 2, [[0, 3], [dag.n]])[0]
+    yield "append_stage", append_stage(
+        dag, 3, 2.0, dem, parent_stages=(int(dag.stage_of.max()),))[0]
+    yield "resize_grow", resize_stage(
+        dag, 1, int((dag.stage_of == 1).sum()) + 2)[0]
+    yield "resize_shrink", resize_stage(
+        dag, 1, max(int((dag.stage_of == 1).sum()) - 1, 1))[0]
+    yield "retarget", retarget_deadline(dag, 0.7)[0]
+    yield "add_dep", add_dependency(
+        dag, 0, next(t for t in range(1, dag.n)
+                     if 0 not in dag.parents[t]))[0]
+
+
+@pytest.mark.parametrize("eager", [True, False],
+                         ids=["eager-base", "lazy-base"])
+def test_incremental_reachability_matches_full_recompute(eager):
+    dag = _template()
+    if eager:
+        dag.anc_bits                       # force the closure pre-mutation
+    for kind, new in _mutants(dag):
+        want = _pack_reach(new.n, new.parents)
+        assert new.anc_bits.shape == want.shape, kind
+        assert (new.anc_bits == want).all(), \
+            f"{kind}: incremental ancestor bits != full recompute"
+
+
+# ----------------------------------------------------------------------
+# delta rebuild == full build, bit for bit, backends x memo
+# ----------------------------------------------------------------------
+
+def _edits(dag):
+    yield "resize", mut_resize_stage(stage=1, delta_q=1)(dag)[0]
+    yield "append", mut_append_stage()(dag)[0]
+    yield "retime", mut_retarget(0.8)(dag)[0]
+
+
+@pytest.mark.parametrize("backend", available_backends())
+@pytest.mark.parametrize("memoize", [True, False], ids=["memo", "nomemo"])
+def test_delta_rebuild_bit_parity(backend, memoize):
+    dag = _template()
+    base = build_schedule(dag, 4, backend=backend, memoize=memoize)
+    for kind, new in _edits(dag):
+        # check_parity builds from scratch too and asserts bit equality
+        got = rebuild_schedule(base, new, backend=backend, memoize=memoize,
+                               check_parity=True)
+        info = got.build_info
+        assert info is not None, kind
+        if kind in ("resize", "append"):
+            assert info.reused_parts > 0, \
+                f"{kind}: delta rebuild reused no partitions"
+
+
+def test_delta_rebuild_chains_across_edits():
+    dag = _template()
+    s0 = build_schedule(dag, 4)
+    d1 = mut_resize_stage(stage=1, delta_q=1)(dag)[0]
+    s1 = rebuild_schedule(s0, d1, check_parity=True)
+    d2 = mut_append_stage()(d1)[0]
+    s2 = rebuild_schedule(s1, d2, check_parity=True)
+    assert s2.build_info.reused_parts > 0
+
+
+def test_rebuild_requires_build_info():
+    dag = _template()
+    s = build_schedule(dag, 4)
+    s.build_info = None
+    with pytest.raises(ValueError, match="build_info"):
+        rebuild_schedule(s, mut_retarget(0.9)(dag)[0])
+
+
+# ----------------------------------------------------------------------
+# build service: delta resubmission parity + edit-key dedup
+# ----------------------------------------------------------------------
+
+def test_buildsvc_resubmit_parity_and_dedup():
+    dag = _template()
+    new, delta = mut_resize_stage(stage=1, delta_q=1)(dag)
+    want = build_schedule(new, 4)
+    with BuildService(workers=2, mode="thread") as svc:
+        h = svc.submit(dag, 4)
+        h.result(timeout=120)
+        h2 = svc.resubmit(h, new, delta)
+        assert_schedules_equal(h2.result(timeout=120), want)
+        before = svc.stats["resubmit_deduped"]
+        h3 = svc.resubmit(h, new, delta)   # same (base, edit): dedup front
+        assert_schedules_equal(h3.result(timeout=120), want)
+        assert svc.stats["resubmit_deduped"] == before + 1
+        assert svc.stats["resubmits"] == 2
+
+
+# ----------------------------------------------------------------------
+# simulator: dynamic runs repair mid-flight, noop rules, speed edits
+# ----------------------------------------------------------------------
+
+_SIM = dict(n_machines=16, interarrival=10.0, seed=5)
+
+
+def test_s12_resize_reuses_majority_of_placements():
+    dags, muts = s12_dynamic("resize", n_jobs=5)
+    res = run_workload(dags, "dagps", mutations=muts, **_SIM)
+    ms = res.mutation_stats
+    assert ms["events"] == len(muts)
+    assert ms["pre_arrival"] == len(muts)  # edits land before arrival
+    assert ms["delta_builds"] > 0
+    reuse = ms["tasks_reused"] / max(ms["tasks_total"], 1)
+    assert reuse >= 0.5, f"placement reuse {reuse:.1%} below acceptance bar"
+
+
+def test_no_mutations_is_bit_identical_to_seed_path():
+    dags, _ = s12_dynamic("resize", n_jobs=4)
+    want = _decision_key(run_workload(dags, "dagps", **_SIM))
+    got = _decision_key(run_workload(dags, "dagps", mutations=[], **_SIM))
+    assert got == want
+
+
+def test_mutation_after_job_completion_is_noop():
+    dags, _ = s12_dynamic("resize", n_jobs=3)
+    base = run_workload(dags, "dagps", **_SIM)
+    muts = [(base.makespan + 100.0, 0, mut_retarget(0.5))]
+    res = run_workload(dags, "dagps", mutations=muts, **_SIM)
+    assert res.mutation_stats["events"] == 1
+    assert res.mutation_stats["noops"] == 1
+    assert res.mutation_stats["applied"] == 0
+    assert _decision_key(res) == _decision_key(base)
+
+
+def test_mutating_only_completed_stages_is_noop():
+    # two-stage chain: stage 0 (5s) is long done at t=30, stage 1 (50s)
+    # still runs -> an edit touching only stage-0 tasks must noop
+    dag = _chain((5.0, 50.0))
+    s0_ids = np.nonzero(dag.stage_of == 0)[0]
+    muts = [(30.0, 0, lambda d: scale_durations(d, 1.3, ids=s0_ids))]
+    base = run_workload([dag], "dagps", **_SIM)
+    res = run_workload([dag], "dagps", mutations=muts, **_SIM)
+    assert res.mutation_stats["noops"] == 1
+    assert res.mutation_stats["applied"] == 0
+    assert _decision_key(res) == _decision_key(base)
+
+
+def test_speed_change_shortens_makespan():
+    dag = _chain((20.0, 20.0, 20.0))
+    base = run_workload([dag], "dagps", **_SIM)
+    res = run_workload([dag], "dagps",
+                       mutations=[(30.0, "speed", None, 2.0)], **_SIM)
+    assert res.mutation_stats["speed_changes"] == 1
+    assert res.makespan < base.makespan
+
+
+def test_midrun_append_grows_the_running_job():
+    dags, muts = s12_dynamic("midrun", n_jobs=3)
+    res = run_workload(dags, "dagps", mutations=muts, **_SIM)
+    ms = res.mutation_stats
+    assert ms["applied"] >= 1 and ms["speed_changes"] == 1
+    job0 = next(j for j in res.jobs if j.job_id == 0)
+    assert job0.n_tasks == dags[0].n + 2   # mut_append_stage(q=2) landed
+    assert len(res.jobs) == len(dags)      # everything still finishes

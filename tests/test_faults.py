@@ -28,7 +28,8 @@ from repro.core.engine import kernels
 from repro.core.online import MatcherConfig
 from repro.core.shard import ShardedMatcher
 from repro.sim.cluster import run_workload
-from repro.sim.workload import online_mix_workload, production_dag
+from repro.sim.workload import (online_mix_workload, periodic_dag,
+                                production_dag)
 
 try:
     from hypothesis import HealthCheck, given, settings
@@ -180,6 +181,52 @@ def test_hung_launch_abandoned_by_timeout():
         assert sm.recovery_secs >= 0.1
 
 
+def test_probe_secs_wall_clock_triggers_probe(monkeypatch):
+    """Regression: probe_every counts waves, so long waves starve probes.
+    probe_secs fires the probe on wall clock even when the wave floor is
+    astronomically far (the ROADMAP fault follow-up)."""
+    clock = [100.0]
+    monkeypatch.setattr("repro.core.shard.time.monotonic", lambda: clock[0])
+    avail, dem = _elig_setup()
+    with _mk_matcher(launch_retries=0, quarantine_after=1,
+                     probe_every=10 ** 9, probe_secs=30.0) as sm:
+        el0, any0 = sm.eligibility(avail, dem)       # healthy baseline
+        with faults.scope("seed=1;shard_launch:raise@1,shard=0,count=1"):
+            sm.eligibility(avail, dem)               # fail -> quarantine
+            assert sm.quarantined == [True, False]
+            # same wall clock: below probe_secs, wave floor unreachable
+            sm.eligibility(avail, dem)
+            assert sm.quarantined == [True, False]
+            assert sm.probe_recoveries == 0
+            # the next wave is 31 simulated-wall seconds later: probe due
+            clock[0] += 31.0
+            el, anym = sm.eligibility(avail, dem)
+        assert sm.probe_recoveries == 1
+        assert sm.quarantined == [False, False]
+        np.testing.assert_array_equal(el, el0)
+        np.testing.assert_array_equal(anym, any0)
+
+
+def test_probe_secs_none_keeps_pure_wave_counting(monkeypatch):
+    """probe_secs=None restores the seed cadence: no amount of wall-clock
+    silence probes a quarantined shard before the wave floor."""
+    clock = [0.0]
+    monkeypatch.setattr("repro.core.shard.time.monotonic", lambda: clock[0])
+    avail, dem = _elig_setup()
+    with _mk_matcher(launch_retries=0, quarantine_after=1, probe_every=4,
+                     probe_secs=None) as sm:
+        with faults.scope("seed=1;shard_launch:raise@1,shard=0,count=1"):
+            sm.eligibility(avail, dem)               # fail -> quarantine
+            for _ in range(3):                       # waves 1-3 < floor 4
+                clock[0] += 1e6                      # wall clock irrelevant
+                sm.eligibility(avail, dem)
+            assert sm.probe_recoveries == 0
+            assert sm.quarantined == [True, False]
+            sm.eligibility(avail, dem)               # wave 4: floor reached
+        assert sm.probe_recoveries == 1
+        assert sm.quarantined == [False, False]
+
+
 # ----------------------------------------------------------------------
 # kernel-dispatch demotion (exact: numpy is the defining oracle)
 # ----------------------------------------------------------------------
@@ -290,6 +337,56 @@ def test_crash_looping_digest_quarantined_to_inline(monkeypatch):
     assert svc.stats["worker_crashes"] == 2
     assert svc.stats["quarantined_digests"] == 1
     assert svc.stats["inline_fallbacks"] == 1
+
+
+# ----------------------------------------------------------------------
+# memo/cache seam: corruption or eviction costs a rebuild, never a
+# mis-placement (doubles as the delta-rebuild invalidation safety net)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", [
+    "seed=2;memo:corrupt@0.5",
+    "seed=3;memo:drop@0.4",
+    "seed=4;memo:corrupt@0.3,op=place",
+    "seed=6;memo:drop@0.6,op=pass",
+])
+def test_memo_faults_force_rebuild_never_misplacement(spec):
+    # periodic workloads re-query the memo heavily (recurring stages);
+    # production DAGs can build memo-cold, which would never fire the seam
+    dag = periodic_dag(np.random.default_rng(6))
+    want = build_schedule(dag, 6, memoize=True)
+    plan = FaultPlan.parse(spec)
+    assert plan.is_exact_recoverable()
+    with faults.scope(plan):
+        got = build_schedule(dag, 6, memoize=True)
+    _assert_same_schedule(got, want)
+    assert plan.snapshot()                           # plan actually fired
+
+
+def test_memo_corruption_is_detected_and_discarded():
+    from repro.core.memo import counters_snapshot
+
+    dag = periodic_dag(np.random.default_rng(6))
+    want = build_schedule(dag, 6, memoize=True)
+    before = counters_snapshot()["memo_discarded"]
+    with faults.scope("seed=2;memo:corrupt@0.5"):
+        got = build_schedule(dag, 6, memoize=True)
+    _assert_same_schedule(got, want)
+    # the checksum caught every corrupted entry (miss -> live re-search)
+    assert counters_snapshot()["memo_discarded"] > before
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 10_000), prob=st.floats(0.1, 0.9))
+    def test_memo_fault_property(seed, prob):
+        dag = periodic_dag(np.random.default_rng(8))
+        want = build_schedule(dag, 6, memoize=True)
+        plan = FaultPlan.parse(
+            f"seed={seed};memo:corrupt@{prob:.3f};memo:drop@{prob / 2:.3f}")
+        with faults.scope(plan):
+            got = build_schedule(dag, 6, memoize=True)
+        _assert_same_schedule(got, want)
 
 
 # ----------------------------------------------------------------------

@@ -77,7 +77,10 @@ with mesh, activation_sharding(mesh, activation_rules(mesh, 4, n_kv=cfg.n_kv_hea
     compiled = jax.jit(step, in_shardings=(pspec, ospec, bspec),
                        out_shardings=(pspec, ospec, None)).lower(
         params_s, opt_s, bsd).compile()
-    assert compiled.cost_analysis()["flops"] > 0
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # jax 0.4.x: list of per-computation dicts
+        ca = ca[0]
+    assert ca["flops"] > 0
 print("COMPILE_OK")
 """
     out = _run(code)
