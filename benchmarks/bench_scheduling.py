@@ -575,7 +575,115 @@ def bench_dynamic() -> None:
              ms["applied"] + ms["pre_arrival"] + ms["speed_changes"])
 
 
+def bench_device_wave() -> None:
+    """s13: device-resident fused heartbeat wave (core/engine/wave.py).
+
+    Drives ``ShardedMatcher.match_wave`` directly at m=2048 in steady
+    state — picked machines are refilled between waves, so the device
+    mirror re-syncs through the dirty-row scatter, never a full upload.
+    Two legs over identical waves: the numpy host loop fed by the PR 6
+    batched eligibility launch, and the fused xla wave.  The gated wall
+    row is the fused per-wave latency; counter rows assert the pick
+    sequences are bit-identical and derive per-wave launches and
+    host<->device transfer bytes for both legs — the >=10x traffic
+    reduction the device-resident state buys.  A routed-vs-exact sim
+    pair rides along quantifying the lossy preset's JCT/Jain gap.
+    """
+    import os
+
+    from repro.core.engine import kernels
+    from repro.core.online import CandidateBatch, MatcherConfig
+    from repro.core.shard import ShardedMatcher
+    from benchmarks import common
+
+    m, d, n = 2048, 4, 512
+    n_waves = 8 if common.QUICK else 32
+    rng = np.random.default_rng(13)
+    cfg = MatcherConfig()
+    shares = {0: 1.0, 1: 1.0}
+    batch = CandidateBatch(
+        dem=rng.uniform(0.05, 0.3, (n, d)),
+        pri=rng.uniform(0.5, 2.0, n),
+        srpt=rng.uniform(1.0, 300.0, n),
+        grp=rng.integers(0, 2, n),
+        loc=np.where(rng.random(n) < 0.3, rng.integers(0, m, n), -1),
+        job=np.arange(n), tid=np.arange(n))
+    avail0 = rng.uniform(0.2, 1.0, (m, d))
+    alive = np.ones(m, bool)
+
+    def leg(impl: str) -> tuple[list, float]:
+        """Run the fixed wave sequence under one forced impl."""
+        os.environ[kernels.KERNELS_ENV] = f"match_wave={impl}"
+        sm = ShardedMatcher(cfg, m, shares, n_shards=1, capacity=float(m))
+        avail = avail0.copy()
+        picks: list = []
+        with sm:
+            def one_wave():
+                got = []
+
+                def cb(gi, mm):
+                    got.append((gi, int(mm)))
+                    avail[mm] -= batch.dem[gi]
+
+                sm.match_wave(avail, alive, batch, cb)
+                for gi, mm in got:          # tasks complete: refill the
+                    avail[mm] += batch.dem[gi]   # picked rows (dirty set)
+                return got
+
+            one_wave()                      # warm caches / compile
+            kernels.reset_profile()         # count only the timed waves
+            t0 = time.perf_counter()
+            for _ in range(n_waves):
+                picks.append(one_wave())
+            dt = time.perf_counter() - t0
+        return picks, dt / n_waves * 1e6
+
+    saved = os.environ.get(kernels.KERNELS_ENV)
+    try:
+        np_picks, np_us = leg("numpy")
+        prof = kernels.profile_snapshot()
+        pr6_bytes = sum(prof.get(f"machines_with_candidates.xla.{k}",
+                                 (0, 0))[0]
+                        for k in ("bytes_h2d", "bytes_d2h"))
+        dev_picks, dev_us = leg("xla")
+        prof = kernels.profile_snapshot()
+        dev_bytes = sum(prof.get(f"match_wave.xla.{k}", (0, 0))[0]
+                        for k in ("bytes_h2d", "bytes_d2h"))
+        launches = prof.get("match_wave.xla.launches", (0, 0))[0]
+        waves = max(prof.get("match_wave.xla.waves", (0, 0))[0], 1)
+    finally:
+        kernels.reset_demotions()
+        if saved is None:
+            os.environ.pop(kernels.KERNELS_ENV, None)
+        else:
+            os.environ[kernels.KERNELS_ENV] = saved
+    emit("s13_device_wave", dev_us, round(dev_us, 1))
+    emit(f"s13_wave_numpy_us_per_wave_m{m}", np_us, round(np_us, 1))
+    emit("s13_wave_decisions_equal", 0.0, int(np_picks == dev_picks))
+    emit("s13_wave_launches_per_wave", 0.0, round(launches / waves, 2))
+    emit(f"s13_wave_bytes_per_wave_pr6_m{m}", 0.0, pr6_bytes // n_waves)
+    emit(f"s13_wave_bytes_per_wave_device_m{m}", 0.0, dev_bytes // n_waves)
+    emit("s13_wave_transfer_reduction_x", 0.0,
+         round(pr6_bytes / max(dev_bytes, 1), 1))
+
+    # routed preset: distributed per-shard matching, explicitly lossy —
+    # quantify what it costs against the decision-exact global wave
+    n_j = 20 if common.QUICK else 60
+    dags = online_mix_workload(n_j, seed=77)
+    kw = dict(n_machines=64, interarrival=2.0, n_groups=2, seed=77,
+              matcher_shards=4)
+    exact = run_workload(dags, "dagps", **kw)
+    routed = run_workload(dags, "dagps", matcher_mode="routed", **kw)
+    gap = 100 * (float(np.median(routed.jcts())) /
+                 max(float(np.median(exact.jcts())), 1e-9) - 1.0)
+    emit("s13_routed_jct_gap_pct", 0.0, round(gap, 1))
+    emit("s13_routed_jain_exact", 0.0,
+         round(exact.jain_index(60.0, shares), 3))
+    emit("s13_routed_jain_routed", 0.0,
+         round(routed.jain_index(60.0, shares), 3))
+
+
 ALL = [bench_jct, bench_makespan, bench_fairness, bench_alternatives,
        bench_lowerbound, bench_sensitivity, bench_domains, bench_construction,
        bench_online_large, bench_online_churn, bench_online_sharded,
-       bench_degraded, bench_dynamic]
+       bench_degraded, bench_dynamic, bench_device_wave]

@@ -69,6 +69,7 @@ def main() -> None:
         "online_sharded": [bench_scheduling.bench_online_sharded],
         "degraded": [bench_scheduling.bench_degraded],
         "dynamic": [bench_scheduling.bench_dynamic],
+        "device_wave": [bench_scheduling.bench_device_wave],
         "pipeline": [bench_systems.bench_pipeline],
         "roofline": [bench_systems.bench_roofline],
         "kernels": [bench_systems.bench_kernels],

@@ -40,6 +40,11 @@ def main():
                     help="online-matcher machine shards (0 = auto by "
                          "slice count; decisions are bit-identical for "
                          "any shard count)")
+    ap.add_argument("--matcher-mode", choices=["exact", "routed"],
+                    default="exact",
+                    help="online wave mode: exact (decision-exact global "
+                         "wave, default) or routed (distributed per-shard "
+                         "matching — lossy preset, see core/shard.py)")
     ap.add_argument("--profile", action="store_true",
                     help="print per-phase wall-clock timings")
     ap.add_argument("--fault-plan", default=None, metavar="SPEC",
@@ -87,6 +92,7 @@ def main():
                                placement_backend=args.backend,
                                build_workers=args.build_workers or None,
                                matcher_shards=args.shards or None,
+                               matcher_mode=args.matcher_mode,
                                profile=args.profile,
                                fault_plan=args.fault_plan,
                                heartbeat_period=args.heartbeat_period,

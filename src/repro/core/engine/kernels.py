@@ -35,6 +35,12 @@ Exactness contract per op (docs/architecture.md "Kernel layer"):
     directed rounding: demands rounded *down* to float32, thresholds
     ``avail + slack + eps`` rounded *up*, so no exact-eligible pair is
     ever dropped.
+  * ``match_wave`` — a whole heartbeat wave (eligibility → score → pick
+    bundling → avail update) as one op over a `wave.WaveContext`.
+    Bit-identical under every implementation: the xla/pallas kernels run
+    float64 with FMA-contraction laundering so each pick, overbook flag,
+    EMA observation and deficit update reproduces the numpy wave loop
+    exactly (see ``engine/wave.py``).
 """
 
 from __future__ import annotations
@@ -55,7 +61,7 @@ from .base import ceil32
 KERNELS_ENV = "REPRO_KERNELS"
 
 OPS = ("scan", "fits_mask", "pack_score", "heartbeat_masks",
-       "machines_with_candidates")
+       "machines_with_candidates", "match_wave")
 #: ops whose non-numpy implementations are approximate in ways that are
 #: only safe for specific consumers (see the exactness contract above):
 #: ``all=<impl>`` deliberately skips these — accelerating them requires
@@ -63,15 +69,16 @@ OPS = ("scan", "fits_mask", "pack_score", "heartbeat_masks",
 EXPLICIT_ONLY = ("fits_mask", "pack_score", "heartbeat_masks")
 IMPLS = ("pallas", "xla", "numpy")   # fallback order, strongest first
 
-#: the two heartbeat-wave eligibility ops are machine-skip filters: every
-#: consumer in the repo uses them only to decide which machines to visit
-#: (never which task to pick), so the sound-superset accelerated impls are
-#: safe defaults once the machine axis is large enough to amortize launch
-#: overhead.  Above ``heartbeat_device_min_m()`` machines they auto-select
-#: xla; an explicit REPRO_KERNELS pin for the op always wins.  Note the
+#: heartbeat-sized ops that auto-promote to the device once the machine
+#: axis is large enough to amortize launch overhead.  The two eligibility
+#: ops are machine-skip filters (sound supersets are decision-exact for
+#: every consumer in the repo); ``match_wave`` is bit-exact outright.
+#: Above ``heartbeat_device_min_m()`` machines they auto-select xla; an
+#: explicit REPRO_KERNELS pin for the op always wins.  Note the
 #: heartbeat_masks caveat still applies: the auto-selected xla impl is
 #: sound only for ``fits | over`` union consumers.
-HEARTBEAT_AUTO_OPS = ("heartbeat_masks", "machines_with_candidates")
+HEARTBEAT_AUTO_OPS = ("heartbeat_masks", "machines_with_candidates",
+                      "match_wave")
 #: env var overriding the auto-promotion threshold (int, machine count)
 HEARTBEAT_MIN_M_ENV = "REPRO_HEARTBEAT_DEVICE_MIN_M"
 _HEARTBEAT_DEFAULT_MIN_M = 1536
@@ -108,6 +115,21 @@ def stat_add(key: str, n: int = 1) -> None:
     """Atomically bump one XLA_STATS counter (shared with core/engine/jit)."""
     with _STATS_LOCK:
         XLA_STATS[key] += n
+
+
+def transfer_add(key: str, n: int) -> None:
+    """Accumulate a host<->device transfer/launch counter in PROFILE.
+
+    Keys follow ``"{op}.{impl}.{launches|bytes_h2d|bytes_d2h|waves}"``;
+    the count lands in the calls slot of the usual PROFILE pair (seconds
+    stays 0.0), so ``profile_snapshot`` deltas work unchanged and bench
+    rows can derive per-wave launch/byte figures.
+    """
+    with _STATS_LOCK:
+        slot = PROFILE.get(key)
+        if slot is None:
+            slot = PROFILE[key] = [0, 0.0]
+        slot[0] += n
 
 
 #: sticky runtime demotions: op -> impls that raised at dispatch and are
@@ -556,8 +578,15 @@ def _machines_with_candidates_xla(avail, demands, fit_dims, rigid_dims,
         return empty
     dem32, thr_fit, thr_fung, masks = args
     fn = _ELIG_FNS.get((dem32.shape[1],))
+    transfer_add("machines_with_candidates.xla.launches", 1)
+    transfer_add("machines_with_candidates.xla.bytes_h2d",
+                 dem32.nbytes + thr_fit.nbytes + thr_fung.nbytes
+                 + sum(mk.nbytes for mk in masks))
     eligible, any_m = fn(dem32, thr_fit, thr_fung, *masks)
-    return np.asarray(eligible), np.asarray(any_m)
+    eligible, any_m = np.asarray(eligible), np.asarray(any_m)
+    transfer_add("machines_with_candidates.xla.bytes_d2h",
+                 eligible.nbytes + any_m.nbytes)
+    return eligible, any_m
 
 
 def _heartbeat_masks_xla(avail, demands, fit_dims, rigid_dims, fungible_dims,
@@ -686,6 +715,13 @@ register("pack_score", "numpy", packing.pack_score)
 register("heartbeat_masks", "numpy", packing.heartbeat_masks)
 register("machines_with_candidates", "numpy", packing.machines_with_candidates)
 
+# imported at the bottom on purpose: wave.py references this module's
+# registry helpers lazily (inside functions), so by the time either side
+# runs, both modules are fully initialized — no import cycle
+from . import wave as _wave  # noqa: E402
+
+register("match_wave", "numpy", _wave.match_wave_numpy)
+
 if _HAVE_JAX:
     register("scan", "xla", _scan_xla, have_jax)
     register("fits_mask", "xla", _fits_mask_xla, have_jax)
@@ -693,9 +729,12 @@ if _HAVE_JAX:
     register("heartbeat_masks", "xla", _heartbeat_masks_xla, have_jax)
     register("machines_with_candidates", "xla",
              _machines_with_candidates_xla, have_jax)
+    register("match_wave", "xla", _wave.match_wave_xla, have_jax)
     register("scan", "pallas", _scan_pallas, _have_pallas)
     register("machines_with_candidates", "pallas",
              _machines_with_candidates_pallas, _have_pallas)
+    register("match_wave", "pallas", _wave.match_wave_pallas,
+             _wave.pallas_wave_available)
 
 
 _REQ_CACHE: tuple[str, dict] | None = None
@@ -866,3 +905,18 @@ def machines_with_candidates(avail, demands, fit_dims, rigid_dims,
                                              avail.shape[0]),
                    (avail, demands, fit_dims, rigid_dims, fungible_dims,
                     overbook_slack, use_overbooking), {})
+
+
+def match_wave(ctx) -> int:
+    """One fused heartbeat wave over a ``wave.WaveContext``.
+
+    Bit-exact under every implementation, so it auto-promotes to the xla
+    kernel at ``heartbeat_device_min_m()`` machines like the eligibility
+    ops; a kernel failure (or injected ``kernel_impl`` fault) sticky-
+    demotes back to the numpy wave loop with identical decisions — the
+    device impls mutate no matcher state before their launch returns.
+    """
+    return _run_op("match_wave",
+                   lambda: resolve_heartbeat("match_wave",
+                                             ctx.avail.shape[0]),
+                   (ctx,), {})

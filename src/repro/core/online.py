@@ -200,6 +200,22 @@ class TaskPool:
         return self._batch
 
 
+def seq_dot(dem: np.ndarray, avail: np.ndarray) -> np.ndarray:
+    """Left-to-right accumulated dot(dem, avail): the packing score.
+
+    Deliberately NOT ``dem @ avail``: BLAS matvecs reorder and fuse the
+    per-dim multiply-adds, so their last-ulp rounding differs between
+    hosts, libraries and accelerators.  An explicit chain of individually
+    rounded multiplies and adds has exactly one float64 result, which the
+    XLA and Pallas wave kernels reproduce bit-for-bit (each product
+    laundered against FMA contraction — see engine/wave.py).
+    """
+    acc = dem[:, 0] * avail[0]
+    for k in range(1, dem.shape[1]):
+        acc = acc + dem[:, k] * avail[k]
+    return acc
+
+
 def slot_fairness(demand: np.ndarray) -> float:
     """f() = 1: slot fairness."""
     return 1.0
@@ -335,6 +351,7 @@ class Matcher:
         machine_id: int,
         avail: np.ndarray,
         cand: CandidateBatch,
+        active: np.ndarray | None = None,
     ) -> list[tuple[int, bool]]:
         """Returns [(candidate row, overbooked)] to start on this machine.
 
@@ -342,10 +359,20 @@ class Matcher:
         each iteration is a handful of numpy ops on (n, d) arrays, and the
         decisions (pick order, overbook flags, EMA observations, deficit
         updates) are bit-identical to the historical object-list matcher.
+
+        ``active`` (bool (n,)), when given, excludes rows as if they were
+        already taken — the wave loops pass their live mask directly so a
+        per-machine call allocates O(1) instead of compressing the batch
+        with ``take`` (returned row indices are global either way: they
+        index ``cand``).  Masking is decision-identical to compressing:
+        scores are per-row and ``argmax`` tie-breaks on first index, which
+        order-preserving compression does not change.
         """
         cfg = self.cfg
         n = len(cand)
         if n == 0:
+            return []
+        if active is not None and not active.any():
             return []
         avail = avail.astype(np.float64).copy()
         dem = cand.dem                                      # (n, d)
@@ -364,7 +391,7 @@ class Matcher:
         ob_slack = cfg.max_overbook - 1.0
         no_over = np.zeros(n, dtype=bool)
         no_shoot = np.zeros(n)
-        taken = np.zeros(n, dtype=bool)
+        taken = ~active if active is not None else np.zeros(n, dtype=bool)
         picked: list[tuple[int, bool]] = []
         while len(picked) < cfg.bundle_limit:
             fits = (dem_fd <= avail[fd] + packing.EPS).all(axis=1)
@@ -383,7 +410,7 @@ class Matcher:
             if not eligible.any():
                 break
             if cfg.use_packing:
-                dot = (dem @ np.clip(avail, 0.0, None)) * rp
+                dot = seq_dot(dem, np.clip(avail, 0.0, None)) * rp
             else:
                 dot = rp.copy()
             if len(fung):

@@ -53,6 +53,7 @@ import numpy as np
 
 from . import faults
 from .engine import kernels
+from .engine import wave as wave_mod
 from .online import CandidateBatch, Matcher, MatcherConfig
 
 #: env var overriding the target machines-per-shard used by `auto_shards`
@@ -403,36 +404,16 @@ class ShardedMatcher:
         order) and must apply the start's side effects — including the
         ``avail[machine] -= demand`` update the next machine's matcher
         call observes.  Returns the number of tasks started.
+
+        The wave body dispatches through the ``match_wave`` kernel op
+        (`engine/wave.py`): the numpy impl is the historical host loop;
+        at scale the fused xla/pallas kernels run the whole wave in one
+        device launch over the resident matcher state, replaying the pick
+        stream through ``start_cb`` — bit-identical on every path.
         """
-        eligible, machine_any = self.eligibility(avail, batch.dem)
-        active = np.ones(len(batch), dtype=bool)
-        n_active = len(batch)
-        order = np.argsort(-avail.sum(axis=1))
-        # visit only machines that can possibly pick: dead, drained, or
-        # candidate-less machines are guaranteed matcher no-ops
-        ok = (alive[order] & (avail[order] > 1e-9).any(axis=1)
-              & machine_any[order])
-        matcher = self.matcher
-        cfg = self.cfg
-        n_picks = 0
-        for m in order[ok].tolist():
-            if n_active == 0:
-                break
-            if not (eligible[:, m] & active).any():
-                continue
-            idx = np.flatnonzero(active)
-            sub = batch.take(idx)
-            picks = matcher.match_batch(m, avail[m], sub)
-            if picks:
-                ledger = self.shard_matchers[self.plan.shard_of(m)].deficits
-                for i, _over in picks:
-                    gi = int(idx[i])
-                    start_cb(gi, m)
-                    active[gi] = False
-                    ledger.allocated(int(batch.grp[gi]),
-                                     cfg.fairness(batch.dem[gi]))
-                n_active -= len(picks)
-                n_picks += len(picks)
+        ctx = wave_mod.WaveContext(sm=self, avail=avail, alive=alive,
+                                   batch=batch, start_cb=start_cb)
+        n_picks = kernels.match_wave(ctx)
         self.waves += 1
         self.picks += n_picks
         if self.plan.n_shards > 1:
@@ -475,12 +456,11 @@ class ShardedMatcher:
                     break
                 if not (eligible[:, lm] & active).any():
                     continue
-                live = np.flatnonzero(active)
                 picks = shard_matcher.match_batch(
-                    lo + lm, avail[lo + lm], sub.take(live))
+                    lo + lm, avail[lo + lm], sub, active=active)
                 for i, _over in picks:
-                    start_cb(int(idx[live[i]]), lo + lm)
-                    active[live[i]] = False
+                    start_cb(int(idx[i]), lo + lm)
+                    active[i] = False
                 n_active -= len(picks)
                 n_picks += len(picks)
         self.waves += 1

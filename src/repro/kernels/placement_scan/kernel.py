@@ -80,6 +80,74 @@ def scan_bitmaps(win: jax.Array, Vs: jax.Array, ks: jax.Array, t_live,
     )(ks, jnp.asarray([t_live], jnp.int32), win, Vs)
 
 
+def _wave_kernel(avail_ref, order_ref, dem_ref, pri_ref, srpt_ref, gidx_ref,
+                 loc_ref, taken_ref, ema_ref, deficit_ref, share_ref,
+                 fdm_ref, rdm_ref, fgm_ref, consts_ref, avail_out_ref,
+                 ema_out_ref, deficit_out_ref, rows_ref, mach_ref, over_ref,
+                 obs_ref, cnt_ref, *, core):
+    out = core(avail_ref[...], order_ref[...], dem_ref[...], pri_ref[...],
+               srpt_ref[...], gidx_ref[...], loc_ref[...], taken_ref[...],
+               ema_ref[...], deficit_ref[...], share_ref[...], fdm_ref[...],
+               rdm_ref[...], fgm_ref[...], consts_ref[...])
+    avail_out_ref[...] = out[0]
+    ema_out_ref[...] = out[1]
+    deficit_out_ref[...] = out[2]
+    rows_ref[...] = out[3]
+    mach_ref[...] = out[4]
+    over_ref[...] = out[5]
+    obs_ref[...] = out[6]
+    cnt_ref[0] = out[7]
+
+
+def match_wave_walk(avail, order, dem, pri, srpt, gidx, loc, taken0, ema,
+                    deficit, share, fd_mask, rd_mask, fg_mask, consts, *,
+                    bundle_limit: int, use_packing: bool, use_srpt: bool,
+                    use_overbooking: bool, drf: bool,
+                    interpret: bool = True):
+    """One fused heartbeat wave as a single sequential Pallas program.
+
+    The wave is a data-dependent sequential walk (each pick changes the
+    availability the next comparison sees), so there is nothing to tile:
+    one program holds the whole state — the (m, d) availability matrix,
+    (n, d) candidate columns and the scalar EMA/deficit ledgers are VMEM-
+    sized, the walk state (pick count, stop flags) lives in scalars — and
+    runs the shared ``engine/wave.py::wave_core`` machine scan.  Sharing
+    the traced core with the xla implementation is the exactness story:
+    both lower the identical float64, FMA-laundered op sequence, so the
+    pick stream is bit-identical to the numpy matcher on either path.
+
+    float64 is unsupported on real TPUs, so this kernel is exercised in
+    interpret mode (registration gates it to CPU backends); a Mosaic
+    deployment needs the fixed-point demand/score encoding tracked in the
+    ROADMAP.
+    """
+    from ...core.engine.wave import wave_core  # lazy: avoids import cycle
+
+    m, d = avail.shape
+    n = dem.shape[0]
+    g = deficit.shape[0]
+    f64 = avail.dtype
+    core = functools.partial(wave_core, bundle_limit=bundle_limit,
+                             use_packing=use_packing, use_srpt=use_srpt,
+                             use_overbooking=use_overbooking, drf=drf)
+    out_shape = [
+        jax.ShapeDtypeStruct((m, d), f64),           # avail'
+        jax.ShapeDtypeStruct((2,), f64),             # ema'
+        jax.ShapeDtypeStruct((g,), f64),             # deficit'
+        jax.ShapeDtypeStruct((n,), jnp.int32),       # pick rows
+        jax.ShapeDtypeStruct((n,), jnp.int32),       # pick machines
+        jax.ShapeDtypeStruct((n,), jnp.int8),        # overbook flags
+        jax.ShapeDtypeStruct((n,), f64),             # observed scores
+        jax.ShapeDtypeStruct((1,), jnp.int32),       # pick count
+    ]
+    return pl.pallas_call(
+        functools.partial(_wave_kernel, core=core),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(avail, order, dem, pri, srpt, gidx, loc, taken0, ema, deficit,
+      share, fd_mask, rd_mask, fg_mask, consts)
+
+
 def _elig_kernel(dem_ref, tf_ref, tr_ref, tg_ref, out_ref):
     dm = dem_ref[0][None, :]                             # (1, d)
     fits = (dm <= tf_ref[...]).all(axis=1)               # (m,)

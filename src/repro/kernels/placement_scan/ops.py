@@ -35,3 +35,24 @@ def heartbeat_eligible(dem32, thr_fit, thr_fung, fd_mask, rd_mask, gd_mask,
     return kernel.heartbeat_eligible(dem32, thr_fit, thr_fung,
                                      fd_mask, rd_mask, gd_mask,
                                      interpret=not _on_tpu())
+
+
+@partial(jax.jit, static_argnames=("bundle_limit", "use_packing", "use_srpt",
+                                   "use_overbooking", "drf"))
+def match_wave_walk(avail, order, dem, pri, srpt, gidx, loc, taken0, ema,
+                    deficit, share, fd_mask, rd_mask, fg_mask, consts, *,
+                    bundle_limit: int, use_packing: bool, use_srpt: bool,
+                    use_overbooking: bool, drf: bool):
+    """One fused heartbeat wave; see kernel.match_wave_walk.
+
+    Always interpret mode: the wave's bit-exactness contract needs
+    float64, which real TPUs lack (the registry only offers this impl on
+    CPU backends).  Call under ``jax.experimental.enable_x64``.
+    """
+    out = kernel.match_wave_walk(
+        avail, order, dem, pri, srpt, gidx, loc, taken0, ema, deficit,
+        share, fd_mask, rd_mask, fg_mask, consts,
+        bundle_limit=bundle_limit, use_packing=use_packing,
+        use_srpt=use_srpt, use_overbooking=use_overbooking, drf=drf,
+        interpret=True)
+    return (*out[:7], out[7][0])

@@ -86,6 +86,7 @@ def schedule_cluster(jobs: list[TPUJob], n_slices: int = 32,
                      placement_backend: str | None = None,
                      build_workers: int | None = 1,
                      matcher_shards: int | None = None,
+                     matcher_mode: str = "exact",
                      profile: bool = False,
                      fault_plan=None,
                      heartbeat_period: float | None = None,
@@ -101,8 +102,11 @@ def schedule_cluster(jobs: list[TPUJob], n_slices: int = 32,
     a core.buildsvc worker pool (>1 or None = CPU count; decisions stay
     bit-identical); ``matcher_shards`` partitions the online matcher's
     machine axis (None = auto by slice count; any value is bit-identical,
-    see core/shard.py); ``profile`` collects per-phase wall-clock timings
-    on the returned result.
+    see core/shard.py); ``matcher_mode`` selects the online wave —
+    "exact" (default, decision-exact for any shard count) or "routed"
+    (fully distributed per-shard matching, an explicitly lossy preset);
+    ``profile`` collects per-phase wall-clock timings on the returned
+    result.
 
     Degraded-mode knobs (core/faults.py + docs/architecture.md):
     ``fault_plan`` is a ``FaultPlan`` or its spec string, installed for
@@ -126,7 +130,8 @@ def schedule_cluster(jobs: list[TPUJob], n_slices: int = 32,
                     build_machines=max(n_slices // 8, 2),
                     placement_backend=placement_backend,
                     build_workers=build_workers,
-                    matcher_shards=matcher_shards, profile=profile,
+                    matcher_shards=matcher_shards,
+                    matcher_mode=matcher_mode, profile=profile,
                     fault_plan=fault_plan,
                     heartbeat_period=heartbeat_period,
                     hb_suspect_after=hb_suspect_after,

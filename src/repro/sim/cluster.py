@@ -195,6 +195,15 @@ class SimConfig:
     #: sharding changes only how eligibility launches are batched and how
     #: deficit ledgers are bookkept (merged + rebalanced every wave).
     matcher_shards: int | None = None
+    #: online wave mode: "exact" (default) is the decision-exact global
+    #: wave (`ShardedMatcher.match_wave`, dispatched through the fused
+    #: ``match_wave`` kernel op); "routed" is the fully distributed
+    #: per-shard wave (`match_wave_routed`) — an explicitly lossy preset:
+    #: each shard's own matcher serves its machine slice from routed
+    #: candidates, so decisions (and JCT/fairness) deviate from the exact
+    #: path, while bounded unfairness survives via the wave-end deficit
+    #: handoff.  The s13 bench rows quantify the gap.
+    matcher_mode: str = "exact"
     profile: bool = False          # collect per-phase wall-clock timings
     #: heartbeat-loss modeling (None disables it — the seed behavior, in
     #: which matching waves are implicit and machines never go silent):
@@ -468,6 +477,9 @@ class ClusterSim:
         groups = sorted({g for (_, _, g) in arrivals})
         shares = {g: 1.0 for g in groups}
         mcfg = self.spec.matcher
+        if cfg.matcher_mode not in ("exact", "routed"):
+            raise ValueError(f"unknown matcher_mode {cfg.matcher_mode!r}; "
+                             "have ('exact', 'routed')")
         smatcher = ShardedMatcher(mcfg, M, shares,
                                   n_shards=cfg.matcher_shards,
                                   capacity=float(M),
@@ -699,15 +711,17 @@ class ClusterSim:
             batch = pool.refresh()
             if batch is None or len(batch) == 0:
                 return
-            # one heartbeat wave through the sharded matcher: one batched
-            # eligibility launch per machine shard (a machine whose
-            # eligibility column is empty cannot pick anything, so skipping
-            # its matcher call is decision-free), decisions pinned to the
-            # single global matcher — bit-identical for any shard count.
-            smatcher.match_wave(
-                avail, matchable(), batch,
-                lambda gi, m: start_task(jobs[int(batch.job[gi])],
-                                         int(batch.tid[gi]), m, now))
+            # one heartbeat wave through the sharded matcher: the exact
+            # mode pins decisions to the single global matcher (the wave
+            # dispatches through the fused match_wave kernel op and is
+            # bit-identical for any shard count and implementation); the
+            # routed mode is the distributed lossy preset.  Either way the
+            # pick stream is consumed through start_task via start_cb.
+            wave = (smatcher.match_wave_routed
+                    if cfg.matcher_mode == "routed" else smatcher.match_wave)
+            wave(avail, matchable(), batch,
+                 lambda gi, m: start_task(jobs[int(batch.job[gi])],
+                                          int(batch.tid[gi]), m, now))
 
         def mutate_job(k: int, mutator, now: float) -> None:
             """Apply one scripted DAG mutation (a core.dag helper curried

@@ -79,7 +79,14 @@ class ReferenceMatcher:
             if not eligible.any():
                 break
             if cfg.use_packing:
-                dot = packing.pack_score(avail, dem, clip=True) * rp
+                # lockstep with Matcher.match_batch: the packing score is
+                # the explicit left-to-right accumulation (seq_dot), not a
+                # BLAS matvec — see online.seq_dot for why
+                av = np.clip(avail, 0.0, None)
+                acc = dem[:, 0] * av[0]
+                for k in range(1, dem.shape[1]):
+                    acc = acc + dem[:, k] * av[k]
+                dot = acc * rp
             else:
                 dot = rp.copy()
             if len(fung):

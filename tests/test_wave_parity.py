@@ -1,0 +1,284 @@
+"""Fused-wave parity: the device match_wave kernels ≡ the numpy wave loop.
+
+The ``match_wave`` op (engine/wave.py) runs a whole heartbeat wave —
+eligibility, pack scoring, bundling/deficit gating and the avail update —
+as one device launch.  Its contract is *bit*-exactness: the xla and
+pallas-interpret implementations must reproduce the numpy wave's pick
+sequence, overbook flags, EMA observations, deficit ledgers and the
+availability matrix down to the last ulp, across carried-over matcher
+state, shard counts, external churn, and sticky demotion after injected
+kernel faults.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import faults
+from repro.core.engine import kernels
+from repro.core.online import Matcher, MatcherConfig
+from repro.core.shard import ShardedMatcher
+
+from test_online_parity import _batch_from, _random_heartbeat, _wave_oracle
+
+IMPLS = ["xla", "pallas"]
+
+
+def _impl_available(impl: str) -> bool:
+    ent = kernels._REGISTRY.get(("match_wave", impl))
+    return ent is not None and ent[1]()
+
+
+def _force(monkeypatch, impl: str) -> None:
+    monkeypatch.setenv(kernels.KERNELS_ENV, f"match_wave={impl}")
+
+
+def _run_waves(sm, avail, alive, batch, n_waves):
+    """Drive n_waves through sm.match_wave, logging (row, machine) picks."""
+    out = []
+    for _ in range(n_waves):
+        got = []
+
+        def cb(gi, m):
+            got.append((gi, m))
+            avail[m] -= batch.dem[gi]
+
+        sm.match_wave(avail, alive, batch, cb)
+        out.append(got)
+    return out
+
+
+def _assert_state_equal(sm, oracle, s_avail, o_avail, ctx=""):
+    assert s_avail.tobytes() == o_avail.tobytes(), ctx
+    assert sm.matcher._ema_score == oracle._ema_score, ctx
+    assert sm.matcher._ema_srpt == oracle._ema_srpt, ctx
+    assert sm.matcher.deficits.deficit == oracle.deficits.deficit, ctx
+
+
+def _one_corpus(seed):
+    rng = np.random.default_rng(31337 + seed)
+    tasks, jobs, cfg, shares, _ = _random_heartbeat(rng)
+    batch = _batch_from(tasks, jobs)
+    M = int(rng.integers(5, 40))
+    avail0 = rng.uniform(0.0, 1.2, (M, 4))
+    alive = rng.random(M) < 0.9
+    return batch, cfg, shares, M, avail0, alive
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_fused_wave_parity_all_shard_counts(impl, monkeypatch):
+    """Forced device wave ≡ the numpy oracle: picks, EMA, deficits, avail.
+
+    Several consecutive waves against carried-over matcher and device-
+    resident state (the avail/EMA/deficit mirrors persist across waves),
+    for 1/2/4 shards; everything must match the host loop bitwise.
+    """
+    if not _impl_available(impl):
+        pytest.skip(f"match_wave {impl} implementation unavailable")
+    _force(monkeypatch, impl)
+    kernels.reset_profile()
+    try:
+        for seed in range(8):
+            batch, cfg, shares, M, avail0, alive = _one_corpus(seed)
+            oracle = Matcher(cfg, capacity=float(M), shares=shares)
+            o_avail = avail0.copy()
+            want = [_wave_oracle(oracle, o_avail, alive, batch)
+                    for _ in range(3)]
+            for n_shards in (1, 2, 4):
+                sm = ShardedMatcher(cfg, M, shares, n_shards=n_shards,
+                                    capacity=float(M))
+                s_avail = avail0.copy()
+                with sm:
+                    got = _run_waves(sm, s_avail, alive, batch, 3)
+                assert got == want, (impl, seed, n_shards)
+                _assert_state_equal(sm, oracle, s_avail, o_avail,
+                                    (impl, seed, n_shards))
+    finally:
+        kernels.reset_demotions()
+    prof = kernels.profile_snapshot()
+    # the forced impl really ran (a silent demotion to numpy would make
+    # this parity check vacuous)
+    assert prof.get(f"match_wave.{impl}", (0, 0))[0] > 0
+    assert f"match_wave.{impl}.demoted" not in prof
+
+
+def test_fused_wave_under_churn(monkeypatch):
+    """Device-resident state survives external mutation between waves.
+
+    Task finishes (avail rows restored), machine failures/rejoins (alive
+    flips + row zeroing), and batch turnover (new candidate columns) all
+    happen host-side between waves; the dirty-row sync must land the
+    fused wave on exactly the numpy decisions, and the wave must stay at
+    most 2 launches (wave + dirty-row scatter)."""
+    if not _impl_available("xla"):
+        pytest.skip("match_wave xla implementation unavailable")
+    _force(monkeypatch, "xla")
+    kernels.reset_profile()
+    rng = np.random.default_rng(4242)
+    try:
+        for seed in range(4):
+            batch, cfg, shares, M, avail0, alive0 = _one_corpus(seed)
+            oracle = Matcher(cfg, capacity=float(M), shares=shares)
+            sm = ShardedMatcher(cfg, M, shares, n_shards=1,
+                                capacity=float(M))
+            o_avail = avail0.copy()
+            s_avail = avail0.copy()
+            alive = alive0.copy()
+            with sm:
+                for wave in range(6):
+                    want = _wave_oracle(oracle, o_avail, alive, batch)
+                    got = _run_waves(sm, s_avail, alive, batch, 1)[0]
+                    assert got == want, (seed, wave)
+                    _assert_state_equal(sm, oracle, s_avail, o_avail,
+                                        (seed, wave))
+                    # external churn the device mirror cannot see coming
+                    rows = rng.integers(0, M, size=3)
+                    bump = rng.uniform(0.0, 0.5, (3, 4))
+                    for r, b in zip(rows, bump):
+                        o_avail[r] += b
+                        s_avail[r] += b
+                    flip = int(rng.integers(0, M))
+                    alive[flip] = ~alive[flip]
+                    if wave % 2 == 1:       # batch turnover mid-run
+                        tasks, jobs, _cfg, _sh, _ = _random_heartbeat(
+                            np.random.default_rng(9000 + seed * 10 + wave))
+                        nb = _batch_from(tasks, jobs)
+                        keep = np.isin(nb.grp, list(shares))
+                        if keep.any():
+                            batch = nb.take(np.flatnonzero(keep))
+    finally:
+        kernels.reset_demotions()
+    prof = kernels.profile_snapshot()
+    waves = prof.get("match_wave.xla.waves", (0, 0))[0]
+    launches = prof.get("match_wave.xla.launches", (0, 0))[0]
+    assert waves > 0
+    assert launches <= 2 * waves
+    assert "match_wave.xla.demoted" not in prof
+
+
+def test_fused_wave_demotion_is_decision_exact(monkeypatch):
+    """An injected kernel fault sticky-demotes the wave back onto the
+    numpy loop with zero decision drift: the fault fires before the
+    device impl touches any matcher state."""
+    if not _impl_available("xla"):
+        pytest.skip("match_wave xla implementation unavailable")
+    _force(monkeypatch, "xla")
+    batch, cfg, shares, M, avail0, alive = _one_corpus(2)
+    oracle = Matcher(cfg, capacity=float(M), shares=shares)
+    o_avail = avail0.copy()
+    want = [_wave_oracle(oracle, o_avail, alive, batch) for _ in range(3)]
+    try:
+        with faults.scope("seed=1;kernel_impl:raise@1,impl=xla,count=1"):
+            sm = ShardedMatcher(cfg, M, shares, n_shards=1,
+                                capacity=float(M))
+            s_avail = avail0.copy()
+            with sm:
+                got = _run_waves(sm, s_avail, alive, batch, 3)
+            assert got == want
+            _assert_state_equal(sm, oracle, s_avail, o_avail)
+        assert kernels.demotions_snapshot().get("match_wave.xla.demoted",
+                                                0) >= 1
+    finally:
+        kernels.reset_demotions()
+
+
+def test_fused_wave_custom_fairness_delegates_to_numpy(monkeypatch):
+    """A fairness fn the kernel cannot mirror falls back to the host loop
+    inline (not via demotion) — decisions unchanged, no device wave."""
+    if not _impl_available("xla"):
+        pytest.skip("match_wave xla implementation unavailable")
+    _force(monkeypatch, "xla")
+    kernels.reset_profile()
+
+    def halved(demand):
+        return 0.5 * float(np.max(demand))
+
+    batch, cfg0, shares, M, avail0, alive = _one_corpus(5)
+    import dataclasses
+    cfg = dataclasses.replace(cfg0, fairness=halved)
+    oracle = Matcher(cfg, capacity=float(M), shares=shares)
+    o_avail = avail0.copy()
+    want = [_wave_oracle(oracle, o_avail, alive, batch) for _ in range(2)]
+    try:
+        sm = ShardedMatcher(cfg, M, shares, n_shards=1, capacity=float(M))
+        s_avail = avail0.copy()
+        with sm:
+            got = _run_waves(sm, s_avail, alive, batch, 2)
+        assert got == want
+        _assert_state_equal(sm, oracle, s_avail, o_avail)
+    finally:
+        kernels.reset_demotions()
+    prof = kernels.profile_snapshot()
+    assert "match_wave.xla.waves" not in prof      # no device wave ran
+    assert "match_wave.xla.demoted" not in prof    # and none was demoted
+
+
+def test_match_wave_auto_promotes_with_machine_count(monkeypatch):
+    """match_wave rides the heartbeat auto-promotion ladder: numpy below
+    the device threshold, xla at/above it; an explicit pin wins."""
+    if not kernels.have_jax():
+        pytest.skip("jax unavailable")
+    monkeypatch.delenv(kernels.KERNELS_ENV, raising=False)
+    monkeypatch.delenv(kernels.HEARTBEAT_MIN_M_ENV, raising=False)
+    thr = kernels.heartbeat_device_min_m()
+    assert kernels.heartbeat_impl("match_wave", thr - 1) == "numpy"
+    assert kernels.heartbeat_impl("match_wave", thr) == "xla"
+    monkeypatch.setenv(kernels.KERNELS_ENV, "match_wave=numpy")
+    assert kernels.heartbeat_impl("match_wave", thr) == "numpy"
+
+
+def test_sim_routed_mode_runs_and_differs_from_exact():
+    """SimConfig.matcher_mode='routed' is a valid (lossy) preset: the sim
+    completes every job; an unknown mode raises."""
+    from repro.sim import make_workload, run_workload
+
+    dags = make_workload("production", 4, seed=11)
+    exact = run_workload(dags, "dagps", n_machines=8, interarrival=5.0,
+                         seed=11, n_groups=2, matcher_shards=2)
+    routed = run_workload(dags, "dagps", n_machines=8, interarrival=5.0,
+                          seed=11, n_groups=2, matcher_shards=2,
+                          matcher_mode="routed")
+    assert len(routed.jobs) == len(exact.jobs) == 4
+    assert routed.makespan > 0
+    with pytest.raises(ValueError, match="matcher_mode"):
+        run_workload(dags[:1], "dagps", n_machines=4, interarrival=5.0,
+                     seed=11, matcher_mode="bogus")
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_fused_wave_parity_hypothesis(seed):
+        """Property form of the seeded parity sweep (xla, one shard)."""
+        if not _impl_available("xla"):
+            pytest.skip("match_wave xla implementation unavailable")
+        import os
+        old = os.environ.get(kernels.KERNELS_ENV)
+        os.environ[kernels.KERNELS_ENV] = "match_wave=xla"
+        try:
+            rng = np.random.default_rng(seed)
+            tasks, jobs, cfg, shares, _ = _random_heartbeat(rng)
+            batch = _batch_from(tasks, jobs)
+            M = int(rng.integers(5, 40))
+            avail0 = rng.uniform(0.0, 1.2, (M, 4))
+            alive = rng.random(M) < 0.9
+            oracle = Matcher(cfg, capacity=float(M), shares=shares)
+            o_avail = avail0.copy()
+            want = [_wave_oracle(oracle, o_avail, alive, batch)
+                    for _ in range(2)]
+            sm = ShardedMatcher(cfg, M, shares, n_shards=1,
+                                capacity=float(M))
+            s_avail = avail0.copy()
+            with sm:
+                got = _run_waves(sm, s_avail, alive, batch, 2)
+            assert got == want
+            _assert_state_equal(sm, oracle, s_avail, o_avail)
+        finally:
+            kernels.reset_demotions()
+            if old is None:
+                os.environ.pop(kernels.KERNELS_ENV, None)
+            else:
+                os.environ[kernels.KERNELS_ENV] = old
+except ImportError:  # pragma: no cover - hypothesis ships with .[test]
+    pass
