@@ -683,7 +683,84 @@ def bench_device_wave() -> None:
          round(routed.jain_index(60.0, shares), 3))
 
 
+def bench_service() -> None:
+    """s14: the scheduler service (svc/) vs the in-process simulator.
+
+    The same arrival list runs twice: through `ClusterSim`, and through a
+    real inproc service — central scheduler, one message-comm agent per
+    machine, a streaming client, acks/retransmit timers and all — driven
+    in virtual time.  The gated wall row is the service run (what the
+    comm + lease machinery costs over the bare event loop);
+    ``decisions_equal`` asserts the healthy-path parity claim end-to-end
+    (every placement and JCT bit-identical).  A chaos leg then re-runs
+    the workload under a drop/dup/delay + crash + partition plan and
+    reports the liveness accounting (all jobs done, exactly-once
+    effective placements, lease reclaims)."""
+    from repro.core import FaultPlan
+    from repro.sim.cluster import ClusterSim, SimConfig, scheme
+    from repro.svc import ServiceConfig, run_service_workload
+    from benchmarks import common
+
+    n_m, n_j = (12, 6) if common.QUICK else (24, 16)
+    dags = make_workload("production", n_j, seed=3)
+    rng = np.random.default_rng(0)
+    arrivals, t = [], 0.0
+    for i, dag in enumerate(dags):
+        arrivals.append((t, dag, i % 2))
+        t += float(rng.exponential(25.0))
+    spec = scheme("dagps")
+
+    t0 = time.perf_counter()
+    sim = ClusterSim(SimConfig(n_machines=n_m, seed=0, speculate=False,
+                               record_placements=True,
+                               fault_plan=FaultPlan()), spec).run(arrivals)
+    dt_sim = time.perf_counter() - t0
+    emit(f"s14_service_sim_m{n_m}_j{n_j}_dagps", dt_sim * 1e6,
+         round(float(np.median(sim.jcts())), 1))
+
+    t0 = time.perf_counter()
+    svc = run_service_workload(arrivals, ServiceConfig(n_machines=n_m,
+                                                       seed=0),
+                               spec, fault_plan=FaultPlan())
+    dt_svc = time.perf_counter() - t0
+    emit(f"s14_service_m{n_m}_j{n_j}_dagps", dt_svc * 1e6,
+         round(float(np.median(svc.jcts())), 1))
+    emit("s14_service_overhead_ratio", 0.0,
+         round(dt_svc / max(dt_sim, 1e-9), 2))
+    emit("s14_service_decisions_equal", 0.0, int(
+        svc.placements == sim.placements
+        and sorted((j.job_id, repr(j.jct)) for j in svc.jobs)
+        == sorted((j.job_id, repr(j.jct)) for j in sim.jobs)
+        and repr(svc.makespan) == repr(sim.makespan)))
+    comm = svc.fault_stats["comm"]
+    emit("s14_service_msgs_sent", 0.0, comm["sent"])
+    emit("s14_service_placements", 0.0,
+         svc.fault_stats["service"]["placements"])
+
+    chaos_plan = ("seed=5;comm_send:drop@0.08;comm_send:dup@0.08;"
+                  "comm_send:delay@0.05,delay=0.5;"
+                  "agent:crash@1.0,machine=3,count=1;"
+                  "agent:partition@0.03,delay=4.0;heartbeat:drop@0.08")
+    t0 = time.perf_counter()
+    chaos = run_service_workload(arrivals, ServiceConfig(n_machines=n_m,
+                                                         seed=0),
+                                 spec, fault_plan=chaos_plan)
+    dt_chaos = time.perf_counter() - t0
+    emit(f"s14_service_chaos_m{n_m}_j{n_j}_dagps", dt_chaos * 1e6,
+         round(float(np.median(chaos.jcts())), 1))
+    emit("s14_service_chaos_jobs_done", 0.0,
+         int(len(chaos.jobs) == len(arrivals)))
+    emit("s14_service_chaos_exactly_once", 0.0,
+         int(all(v == 1 for v in chaos.effective.values())
+             and len(chaos.effective) == sum(d.n for d in dags)))
+    cfs = chaos.fault_stats
+    emit("s14_service_chaos_lease_reclaims", 0.0,
+         cfs["service"]["lease_reclaims"])
+    emit("s14_service_chaos_stale_done", 0.0, cfs["service"]["stale_done"])
+    emit("s14_service_chaos_retransmits", 0.0, cfs["comm"]["retransmits"])
+
+
 ALL = [bench_jct, bench_makespan, bench_fairness, bench_alternatives,
        bench_lowerbound, bench_sensitivity, bench_domains, bench_construction,
        bench_online_large, bench_online_churn, bench_online_sharded,
-       bench_degraded, bench_dynamic, bench_device_wave]
+       bench_degraded, bench_dynamic, bench_device_wave, bench_service]

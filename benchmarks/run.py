@@ -70,6 +70,7 @@ def main() -> None:
         "degraded": [bench_scheduling.bench_degraded],
         "dynamic": [bench_scheduling.bench_dynamic],
         "device_wave": [bench_scheduling.bench_device_wave],
+        "service": [bench_scheduling.bench_service],
         "pipeline": [bench_systems.bench_pipeline],
         "roofline": [bench_systems.bench_roofline],
         "kernels": [bench_systems.bench_kernels],

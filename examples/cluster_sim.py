@@ -67,6 +67,12 @@ def main():
                     help="script mid-run dynamics: a deadline pull-in on "
                          "a running job (repaired via delta rebuild) and "
                          "a slice speed change")
+    ap.add_argument("--serve", action="store_true",
+                    help="run through the scheduler service (svc/) instead "
+                         "of the simulator: inproc scheduler + one agent "
+                         "per slice, lease-based placements, real "
+                         "heartbeats; healthy runs match the simulator "
+                         "bit-for-bit")
     ap.add_argument("--json", action="store_true",
                     help="emit one JSON document per scheme instead of "
                          "text: JCT stats plus fault_stats, "
@@ -98,7 +104,8 @@ def main():
                                heartbeat_period=args.heartbeat_period,
                                hb_suspect_after=args.hb_suspect_after,
                                hb_lost_after=args.hb_lost_after,
-                               mutations=mutations)
+                               mutations=mutations,
+                               serve=args.serve)
         jcts = res.jcts()
         if args.json:
             print(json.dumps({

@@ -26,6 +26,15 @@ breaks where, injected at four named seams —
                                                               evicted entry is a
                                                               miss -> live search
                                                               (exact)
+  ``comm_send``        service comm layer, one message send   seq-numbered idempo-
+                       (drop / delay / dup)                   tent channels: acks,
+                                                              capped-backoff re-
+                                                              transmit, dup/reorder
+                                                              gating (exact)
+  ``agent``            worker-agent process                   lease reclaim on
+                       (crash / partition)                    heartbeat silence ->
+                                                              requeue -> rejoin
+                                                              (lossy)
   ===================  =====================================  ==========
 
 The code-seam recoveries are **decision-exact**: shard quarantine
@@ -67,11 +76,15 @@ from contextlib import contextmanager
 #: env var carrying a plan spec string into every process of a run
 FAULTS_ENV = "REPRO_FAULTS"
 
-SEAMS = ("shard_launch", "build_worker", "kernel_impl", "heartbeat", "memo")
+SEAMS = ("shard_launch", "build_worker", "kernel_impl", "heartbeat", "memo",
+         "comm_send", "agent")
 #: seams whose recovery reproduces the fault-free decisions bit-for-bit
+#: (comm_send qualifies: retransmit + sequence gating make any delivered
+#: schedule of dups/reorders/drops collapse to the clean-delivery one)
 EXACT_SEAMS = frozenset({"shard_launch", "build_worker", "kernel_impl",
-                         "memo"})
-KINDS = ("raise", "hang", "crash", "drop", "delay", "corrupt")
+                         "memo", "comm_send"})
+KINDS = ("raise", "hang", "crash", "drop", "delay", "corrupt", "dup",
+         "partition", "oom", "misaligned")
 
 
 class InjectedFault(RuntimeError):
@@ -82,6 +95,17 @@ class InjectedFault(RuntimeError):
         super().__init__(f"injected fault at seam {seam!r} ({ctx})")
         self.seam = seam
         self.ctx = ctx
+
+
+class SimulatedOOM(InjectedFault):
+    """``oom``-kind injection: models a device allocator failure inside a
+    kernel impl (the pallas interpret path has no real HBM to exhaust);
+    caught by dispatch like any impl error -> sticky demotion."""
+
+
+class SimulatedMisalignedGrid(InjectedFault):
+    """``misaligned``-kind injection: models a grid/block-shape mismatch
+    raised at kernel trace time; recovery is identical to ``oom``."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -221,18 +245,26 @@ class FaultPlan:
     def maybe_fail(self, seam: str, **ctx) -> None:
         """Act out a firing spec at a code seam.
 
-        raise/drop -> `InjectedFault`; hang/delay -> sleep ``delay``
-        wall-seconds; crash -> ``os._exit`` (worker-process seams only).
+        raise/drop -> `InjectedFault`; oom/misaligned -> their simulated
+        subclasses; hang/delay -> sleep ``delay`` wall-seconds; crash ->
+        ``os._exit`` (worker-process seams only).  Kinds that only make
+        sense to ``query``-interpreting seams (dup, partition, corrupt)
+        are no-ops here.
         """
         sp = self.query(seam, **ctx)
         if sp is None:
             return
         if sp.kind in ("raise", "drop"):
             raise InjectedFault(seam, ctx)
+        if sp.kind == "oom":
+            raise SimulatedOOM(seam, ctx)
+        if sp.kind == "misaligned":
+            raise SimulatedMisalignedGrid(seam, ctx)
         if sp.kind in ("hang", "delay"):
             time.sleep(max(sp.delay, 0.0))
             return
-        os._exit(13)                          # crash: hard worker death
+        if sp.kind == "crash":
+            os._exit(13)                      # crash: hard worker death
 
     def snapshot(self) -> dict[str, int]:
         with self._lock:
@@ -262,6 +294,12 @@ class RecoveryPolicy:
     probe_every: int = 50
     probe_secs: float | None = 30.0
     build_retries: int = 3               # pool attempts before inline fallback
+    #: service RPC reliability (svc/comm.py Channel): first retransmit of
+    #: an unacked message after ``rpc_timeout``, then exponential backoff
+    #: capped at ``backoff_cap``.  The agent reconnect loop reuses
+    #: ``backoff``/``backoff_cap`` and additionally caps every wait at
+    #: ``probe_secs`` so a long backoff can never starve rejoin.
+    rpc_timeout: float = 0.25
 
 
 # ----------------------------------------------------------------------

@@ -432,3 +432,72 @@ class Matcher:
             np.clip(avail, 0.0, None, out=avail)
             self.deficits.allocated(int(grp[i]), cfg.fairness(dem[i]))
         return picked
+
+
+def overload_factor(avail_row: np.ndarray) -> float:
+    """Slowdown factor for a task launched on a machine with this
+    (post-allocation) availability row: overload on the fungible dims
+    (indices >= 2 — network/disk, the Fig. 11 effect) stretches every
+    task on the machine.  Shared verbatim by the simulator's
+    ``start_task`` and the scheduler service's lease grants so both
+    compute bit-identical effective durations.
+    """
+    load = 1.0 - avail_row
+    return float(max(load[2:].max() if avail_row.shape[0] > 2 else 0.0, 1.0))
+
+
+class JobState:
+    """Per-job DAG progress bookkeeping: pending-parent counts, the
+    runnable/running/done partition, and the remaining-work (srpt)
+    accumulator.
+
+    One implementation shared by `sim.cluster.ClusterSim` and the
+    scheduler service core (`svc.scheduler.SchedulerCore`) — decision
+    parity between the two starts with them advancing identical job
+    state through identical transitions.
+    """
+
+    def __init__(self, job_id: int, dag, arrival: float, group: int,
+                 pri: np.ndarray):
+        self.job_id = job_id
+        self.dag = dag
+        self.arrival = arrival
+        self.group = group
+        self.pri = pri
+        self.pending_parents = np.array(
+            [len(dag.parents[i]) for i in range(dag.n)])
+        self.runnable: set[int] = {
+            i for i in range(dag.n) if self.pending_parents[i] == 0}
+        self.running: set[int] = set()
+        self.done: set[int] = set()
+        weight = np.abs(dag.demand).sum(axis=1)
+        self._work = dag.duration * weight
+        self.srpt = float(self._work.sum())
+        self.finish: float | None = None
+
+    def task_started(self, t: int) -> None:
+        self.runnable.discard(t)
+        self.running.add(t)
+
+    def task_requeued(self, t: int) -> None:
+        self.running.discard(t)
+        self.runnable.add(t)
+
+    def task_done(self, t: int) -> list[int]:
+        if t in self.done:
+            return []
+        self.running.discard(t)
+        self.runnable.discard(t)
+        self.done.add(t)
+        self.srpt -= float(self._work[t])
+        newly = []
+        for c in self.dag.children[t]:
+            self.pending_parents[c] -= 1
+            if self.pending_parents[c] == 0 and c not in self.done:
+                newly.append(int(c))
+                self.runnable.add(int(c))
+        return newly
+
+    @property
+    def complete(self) -> bool:
+        return len(self.done) == self.dag.n

@@ -93,7 +93,9 @@ def schedule_cluster(jobs: list[TPUJob], n_slices: int = 32,
                      hb_suspect_after: float | None = None,
                      hb_lost_after: float | None = None,
                      recovery=None,
-                     mutations=None):
+                     mutations=None,
+                     speculate: bool = True,
+                     serve: bool = False):
     """Gang-schedule the jobs' stage DAGs onto pod slices with DAGPS.
 
     ``placement_backend`` selects the offline construction engine
@@ -119,6 +121,15 @@ def schedule_cluster(jobs: list[TPUJob], n_slices: int = 32,
     through delta rebuilds — and slice speed changes.  The result's
     ``fault_stats`` and ``mutation_stats`` report what fired and how much
     of the previous placements each repair replayed.
+
+    ``serve=True`` routes the same workload through the scheduler
+    *service* instead of the simulator: a `svc.SchedulerService` plus one
+    agent per slice over inproc comms, driven in virtual time
+    (`svc.run_service_workload`).  Healthy runs produce placements and
+    JCTs bit-identical to the simulator path with ``speculate=False``
+    (the service places by lease, never speculatively); with a
+    ``fault_plan`` touching the ``comm_send``/``agent`` seams the run
+    exercises the lease-reclaim/exactly-once machinery instead.
     """
     rng = np.random.default_rng(seed)
     arrivals = []
@@ -126,6 +137,24 @@ def schedule_cluster(jobs: list[TPUJob], n_slices: int = 32,
     for j in jobs:
         arrivals.append((t, j.to_dag(), j.group))
         t += float(rng.exponential(interarrival))
+    if serve:
+        if mutations:
+            raise ValueError("serve=True does not support scripted "
+                             "mutations (simulator-only for now)")
+        if matcher_mode != "exact":
+            raise ValueError("serve=True supports matcher_mode='exact' only")
+        from ..svc import ServiceConfig, run_service_workload
+        scfg = ServiceConfig(n_machines=n_slices, seed=seed,
+                             build_machines=max(n_slices // 8, 2),
+                             placement_backend=placement_backend,
+                             build_workers=build_workers,
+                             matcher_shards=matcher_shards,
+                             heartbeat_period=heartbeat_period or 1.0,
+                             hb_suspect_after=hb_suspect_after,
+                             hb_lost_after=hb_lost_after,
+                             recovery=recovery)
+        return run_service_workload(arrivals, scfg, scheme(policy),
+                                    fault_plan=fault_plan)
     cfg = SimConfig(n_machines=n_slices, seed=seed,
                     build_machines=max(n_slices // 8, 2),
                     placement_backend=placement_backend,
@@ -137,5 +166,6 @@ def schedule_cluster(jobs: list[TPUJob], n_slices: int = 32,
                     hb_suspect_after=hb_suspect_after,
                     hb_lost_after=hb_lost_after,
                     recovery=recovery,
+                    speculate=speculate,
                     mutations=mutations)
     return ClusterSim(cfg, scheme(policy)).run(arrivals)

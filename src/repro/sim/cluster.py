@@ -45,10 +45,12 @@ from ..core.baselines import bfs_order, cp_order, random_order
 from ..core.dag import DAG, dag_digest
 from ..core.engine import get_backend, kernels, packing
 from ..core.online import (
+    JobState,
     Matcher,
     MatcherConfig,
     TaskPool,
     drf_fairness,
+    overload_factor,
     slot_fairness,
 )
 from ..core.shard import ShardedMatcher
@@ -180,6 +182,10 @@ class SimConfig:
     failure_rate: float = 0.0      # machine-failures per simulated second
     repair_time: float = 120.0
     record_usage: bool = False
+    #: record every non-speculative placement as (t, job, task, machine)
+    #: in SimResult.placements — the decision stream the service-parity
+    #: suite compares bit-for-bit against an inproc scheduler-service run
+    record_placements: bool = False
     placement_backend: str | None = None  # engine backend for offline builds
     schedule_cache: bool = True    # memoize identical offline builds (exact)
     #: dagps builds per arrival: 1 = serial in the arrival event (seed
@@ -273,6 +279,9 @@ class SimResult:
     #: mutation events applied/no-oped, delta vs full rebuild counts and
     #: the partition/placement reuse they achieved
     mutation_stats: dict | None = None
+    #: (t, job, task, machine) per non-speculative launch when
+    #: SimConfig.record_placements is set, else None
+    placements: list[tuple[float, int, int, int]] | None = None
 
     def jcts(self) -> np.ndarray:
         return np.array([j.jct for j in self.jobs])
@@ -299,49 +308,10 @@ class SimResult:
         return float(np.mean(idxs)) if idxs else 1.0
 
 
-class _Job:
-    def __init__(self, job_id: int, dag: DAG, arrival: float, group: int,
-                 pri: np.ndarray):
-        self.job_id = job_id
-        self.dag = dag
-        self.arrival = arrival
-        self.group = group
-        self.pri = pri
-        self.pending_parents = np.array([len(dag.parents[i]) for i in range(dag.n)])
-        self.runnable: set[int] = {i for i in range(dag.n) if self.pending_parents[i] == 0}
-        self.running: set[int] = set()
-        self.done: set[int] = set()
-        weight = np.abs(dag.demand).sum(axis=1)
-        self._work = dag.duration * weight
-        self.srpt = float(self._work.sum())
-        self.finish: float | None = None
-
-    def task_started(self, t: int) -> None:
-        self.runnable.discard(t)
-        self.running.add(t)
-
-    def task_requeued(self, t: int) -> None:
-        self.running.discard(t)
-        self.runnable.add(t)
-
-    def task_done(self, t: int) -> list[int]:
-        if t in self.done:
-            return []
-        self.running.discard(t)
-        self.runnable.discard(t)
-        self.done.add(t)
-        self.srpt -= float(self._work[t])
-        newly = []
-        for c in self.dag.children[t]:
-            self.pending_parents[c] -= 1
-            if self.pending_parents[c] == 0 and c not in self.done:
-                newly.append(int(c))
-                self.runnable.add(int(c))
-        return newly
-
-    @property
-    def complete(self) -> bool:
-        return len(self.done) == self.dag.n
+# per-job DAG progress state now lives in core.online.JobState, shared
+# with the scheduler service core (svc/scheduler.py) so both advance
+# identical job state through identical transitions
+_Job = JobState
 
 
 class ClusterSim:
@@ -551,6 +521,8 @@ class ClusterSim:
         results: list[JobResult] = []
         usage_samples: list[tuple[float, np.ndarray]] = []
         allocations: list[tuple[float, float, int, float]] = []
+        placements: list[tuple[float, int, int, int]] | None = \
+            [] if cfg.record_placements else None
         spec_launches = 0
         requeued = 0
         pending_arrivals = len(arrivals)
@@ -582,9 +554,7 @@ class ClusterSim:
                 lo, hi = cfg.straggle_factor
                 dur = base * float(rng.uniform(lo, hi))
             # implicit/explicit overload on fungible dims slows this task down
-            load = 1.0 - avail[m]
-            overload = float(max(load[2:].max() if d > 2 else 0.0, 1.0))
-            dur_eff = dur * overload
+            dur_eff = dur * overload_factor(avail[m])
             if speed[m] != 1.0:   # machine-speed mutations: future launches
                 dur_eff = dur_eff / speed[m]
             rid = runs.append(job.job_id, tid, m, now, base)
@@ -592,6 +562,8 @@ class ClusterSim:
             if not speculative:
                 job.task_started(tid)
                 pool.mark_dirty(job.job_id)
+                if placements is not None:
+                    placements.append((now, job.job_id, tid, m))
             else:
                 spec_launches += 1
             heapq.heappush(events, (now + dur_eff, next(counter), _FINISH, rid))
@@ -1004,7 +976,8 @@ class ClusterSim:
         return SimResult(results, makespan, usage_samples, allocations,
                          spec_launches, requeued, phase_times,
                          sstats, fault_stats,
-                         mut_stats if muts else None)
+                         mut_stats if muts else None,
+                         placements)
 
 
 def run_workload(

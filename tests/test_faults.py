@@ -252,6 +252,53 @@ def test_kernel_fault_demotes_to_exact_result(monkeypatch):
     assert not kernels.demoted_impls("machines_with_candidates")
 
 
+def test_oom_and_misaligned_kinds_raise_typed_faults():
+    plan = FaultPlan.parse("seed=0;kernel_impl:oom@1,count=1;"
+                           "kernel_impl:misaligned@1")
+    with faults.scope(plan):
+        with pytest.raises(faults.SimulatedOOM):
+            faults.maybe_fail("kernel_impl", op="o", impl="pallas", call=0)
+        with pytest.raises(faults.SimulatedMisalignedGrid):
+            faults.maybe_fail("kernel_impl", op="o", impl="pallas", call=1)
+    assert issubclass(faults.SimulatedOOM, InjectedFault)
+    assert issubclass(faults.SimulatedMisalignedGrid, InjectedFault)
+
+
+@pytest.mark.skipif(not kernels._have_pallas(), reason="needs pallas")
+def test_pallas_oom_walks_demotion_ladder_exactly(monkeypatch):
+    """A simulated device OOM on the pallas impl demotes pallas -> xla;
+    a simulated misaligned-grid on xla then demotes to numpy.  Every rung
+    returns the bit-identical decision (numpy is the defining oracle and
+    the device impls mutate nothing before their launch returns)."""
+    monkeypatch.setenv(kernels.KERNELS_ENV,
+                       "machines_with_candidates=pallas")
+    avail, dem = _elig_setup(seed=7)
+    fd, rigid, fung = np.arange(4), np.array([0, 1]), np.array([2, 3])
+    args = (avail, dem, fd, rigid, fung, 0.25, True)
+    assert kernels.resolve("machines_with_candidates")[0] == "pallas"
+    dem0 = kernels.demotions_snapshot()    # counters are process-cumulative
+    want = kernels.machines_with_candidates(*args)         # healthy pallas
+
+    with faults.scope("seed=2;kernel_impl:oom@1,impl=pallas,count=1"):
+        got = kernels.machines_with_candidates(*args)
+    np.testing.assert_array_equal(got[0], want[0])
+    np.testing.assert_array_equal(got[1], want[1])
+    assert kernels.demoted_impls("machines_with_candidates") == {"pallas"}
+    assert kernels.resolve("machines_with_candidates")[0] == "xla"  # sticky
+
+    with faults.scope("seed=2;kernel_impl:misaligned@1,impl=xla,count=1"):
+        got = kernels.machines_with_candidates(*args)
+    np.testing.assert_array_equal(got[0], want[0])
+    np.testing.assert_array_equal(got[1], want[1])
+    assert kernels.demoted_impls("machines_with_candidates") == \
+        {"pallas", "xla"}
+    assert kernels.resolve("machines_with_candidates")[0] == "numpy"
+    snap = kernels.demotions_snapshot()
+    for impl in ("pallas", "xla"):
+        key = f"machines_with_candidates.{impl}.demoted"
+        assert snap.get(key, 0) - dem0.get(key, 0) == 1
+
+
 # ----------------------------------------------------------------------
 # build-service recovery (supervised futures survive crashes/retries)
 # ----------------------------------------------------------------------

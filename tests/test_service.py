@@ -1,0 +1,539 @@
+"""Scheduler-as-a-service suite (svc/): comm seams, reliability
+protocol, and the scheduler/agent split.
+
+Five layers of coverage:
+
+  * the wire codec — tagged-JSON round-trips for every payload type that
+    crosses the service boundary (DAGs, ndarrays, bytes, floats whose
+    repr must survive exactly for decision parity),
+  * the idempotency machinery — `SeqGate` exactly-once in-order
+    admission, and the `Channel` reliability property: any interleaving
+    of dropped / duplicated / delayed-then-retransmitted deliveries
+    collapses to the clean-delivery schedule (seeded deterministic
+    always; a hypothesis version rides along when the plugin is
+    installed, repo convention per test_property.py),
+  * transports — inproc determinism and real tcp sockets,
+  * the acceptance bar — healthy inproc service runs produce placements
+    and JCTs **bit-identical** to `ClusterSim` (live parity + a
+    committed golden), chaos plans over the ``comm_send``/``agent``/
+    ``heartbeat`` seams still complete every job with exactly one
+    effective placement per task and nonzero lease reclaims,
+  * wall-clock agents — reconnect backoff capped by
+    ``RecoveryPolicy.probe_secs`` and clock-derived heartbeat deadlines,
+    both under a monkeypatched clock.
+
+Regenerate the golden after an intentional semantic change with:
+
+    PYTHONPATH=src python tests/test_service.py --regen
+"""
+
+import itertools
+import json
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import FaultPlan, RecoveryPolicy, faults
+from repro.sim import make_workload
+from repro.sim.cluster import ClusterSim, SimConfig, scheme
+from repro.svc import (Msg, SeqGate, ServiceConfig, connect, decode, encode,
+                       listen, run_service_workload)
+from repro.svc import wire
+from repro.svc.agent import Agent, VirtualAgent
+from repro.svc.comm import Channel, CommClosed
+from repro.svc.scheduler import SchedulerCore, SchedulerService
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "data",
+                      "golden_service.json")
+SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+
+_ADDRS = itertools.count()
+
+
+def _addr() -> str:
+    return f"inproc://svc-test-{next(_ADDRS)}"
+
+
+# ----------------------------------------------------------------------
+# wire codec
+# ----------------------------------------------------------------------
+
+def test_wire_roundtrip_all_payload_types():
+    dag = make_workload("production", 1, seed=4)[0]
+    arr = np.linspace(0.0, 1.0, 7, dtype=np.float64).reshape(1, 7)
+    msg = Msg(wire.SUBMIT, "client", 3, {
+        "dag": dag, "arr": arr, "blob": b"\x00\xffraw",
+        "f": 0.1 + 0.2, "i": 41, "s": "x", "none": None,
+        "nested": {"inner": [1.5, {"deep": np.int64(9)}]},
+    })
+    back = decode(encode(msg))
+    assert (back.kind, back.sender, back.seq) == (msg.kind, msg.sender, 3)
+    p = back.payload
+    # repr-exact floats: the parity contract rides on this
+    assert repr(p["f"]) == repr(0.1 + 0.2)
+    np.testing.assert_array_equal(p["arr"], arr)
+    assert p["arr"].dtype == arr.dtype
+    assert p["blob"] == b"\x00\xffraw"
+    assert p["i"] == 41 and p["s"] == "x" and p["none"] is None
+    assert p["nested"]["inner"][1]["deep"] == 9
+    d2 = p["dag"]
+    np.testing.assert_array_equal(d2.duration, dag.duration)
+    np.testing.assert_array_equal(d2.demand, dag.demand)
+    np.testing.assert_array_equal(d2.stage_of, dag.stage_of)
+    assert len(d2.parents) == len(dag.parents)
+    for a, b in zip(d2.parents, dag.parents):
+        np.testing.assert_array_equal(a, b)
+    assert d2.name == dag.name
+
+
+# ----------------------------------------------------------------------
+# SeqGate: exactly-once, in-order
+# ----------------------------------------------------------------------
+
+def _m(seq, sender="a"):
+    return Msg(wire.TASK_DONE, sender, seq, {"n": seq})
+
+
+def test_seqgate_dups_and_reorders():
+    g = SeqGate()
+    assert [x.seq for x in g.admit(_m(1))] == [1]
+    assert g.admit(_m(1)) == []                      # dup of admitted
+    assert g.admit(_m(4)) == []                      # future: parked
+    assert g.admit(_m(4)) == []                      # dup of parked
+    assert g.admit(_m(3)) == []                      # still gapped on 2
+    assert [x.seq for x in g.admit(_m(2))] == [2, 3, 4]   # gap fills
+    assert [x.seq for x in g.admit(_m(5))] == [5]
+    assert g.stats == {"admitted": 5, "dups": 2, "reorders": 2}
+    # senders are independent streams
+    assert [x.seq for x in g.admit(_m(1, "b"))] == [1]
+
+
+def test_seqgate_unsequenced_passthrough():
+    g = SeqGate()
+    hb = Msg(wire.HEARTBEAT, "a", 0, {"machine": 1})
+    assert g.admit(hb) == [hb]
+    assert g.admit(hb) == [hb]           # no dedup outside the protocol
+    assert g.stats["admitted"] == 0
+
+
+# ----------------------------------------------------------------------
+# Channel reliability: lossy delivery == clean-delivery oracle
+# ----------------------------------------------------------------------
+
+_CH_REC = RecoveryPolicy(rpc_timeout=0.1, backoff_cap=0.5)
+
+
+def _lossy_exchange(plan_text, n_msgs=40, max_cycles=600):
+    """Send ``n_msgs`` sequenced messages through an inproc pair under
+    ``plan_text``; drive virtual time until everything is admitted and
+    acked.  Returns (admitted payload ids, sender chan, receiver chan)."""
+    with faults.scope(plan_text):
+        accepted = []
+        lst = listen(_addr(), accepted.append)
+        cli = connect(lst.addr)
+        srv = accepted[0]
+        clk = [0.0]
+        snd = Channel(cli, "cli", _CH_REC, lambda: clk[0])
+        rcv = Channel(srv, "srv", _CH_REC, lambda: clk[0])
+        for i in range(n_msgs):
+            snd.send(wire.TASK_DONE, lease=i, t=float(i))
+        got = []
+        for _ in range(max_cycles):
+            got += [int(m.payload["lease"]) for m in rcv.poll(clk[0])]
+            snd.poll(clk[0])
+            if len(got) == n_msgs and snd.unacked == 0:
+                break
+            clk[0] += 0.13
+        lst.close()
+        return got, snd, rcv
+
+
+def test_channel_clean_delivery():
+    got, snd, rcv = _lossy_exchange("seed=0")
+    assert got == list(range(40))
+    assert snd.unacked == 0
+    assert snd.stats["retransmits"] == 0
+    assert rcv.gate.stats["dups"] == 0
+
+
+def test_channel_survives_drop_dup_delay_interleavings():
+    got, snd, rcv = _lossy_exchange(
+        "seed=7;comm_send:drop@0.25;comm_send:dup@0.2;"
+        "comm_send:delay@0.15,delay=0.3")
+    assert got == list(range(40))         # exactly once, in order
+    assert snd.unacked == 0               # every message eventually acked
+    assert snd.stats["retransmits"] > 0   # the protocol actually worked
+    assert rcv.gate.stats["dups"] > 0
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_channel_reliability_property():
+    @settings(max_examples=25, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(seed=st.integers(0, 2**16),
+           p_drop=st.floats(0.0, 0.4),
+           p_dup=st.floats(0.0, 0.4),
+           p_delay=st.floats(0.0, 0.4),
+           n=st.integers(1, 25))
+    def run(seed, p_drop, p_dup, p_delay, n):
+        plan = (f"seed={seed};comm_send:drop@{p_drop:.3f};"
+                f"comm_send:dup@{p_dup:.3f};"
+                f"comm_send:delay@{p_delay:.3f},delay=0.2")
+        got, snd, _ = _lossy_exchange(plan, n_msgs=n)
+        assert got == list(range(n))
+        assert snd.unacked == 0
+
+    run()
+
+
+def test_channel_reacks_when_first_ack_is_lost():
+    """Receiver's first ack dropped -> sender retransmits -> receiver
+    treats the dup as a no-op but re-acks it, so the sender drains."""
+    # n is the per-comm physical send counter: the receiver's comm sends
+    # ack #1 first (n=1) — drop exactly that one
+    got, snd, rcv = _lossy_exchange("seed=0;comm_send:drop@1.0,n=1",
+                                    n_msgs=3)
+    assert got == [0, 1, 2]
+    assert snd.unacked == 0
+    assert snd.stats["retransmits"] >= 1
+    assert rcv.gate.stats["dups"] >= 1
+
+
+# ----------------------------------------------------------------------
+# transports
+# ----------------------------------------------------------------------
+
+def test_inproc_connect_requires_listener():
+    with pytest.raises(CommClosed):
+        connect("inproc://nobody-home")
+
+
+def test_tcp_channel_roundtrip():
+    with faults.scope(FaultPlan()):
+        accepted = []
+        lst = listen("tcp://127.0.0.1:0", accepted.append)
+        cli = connect(lst.addr)
+        snd = Channel(cli, "cli")
+        arr = np.arange(6, dtype=np.float32)
+        snd.send(wire.TASK_DONE, lease=1, arr=arr)
+        deadline = time.monotonic() + 10.0
+        while not accepted and time.monotonic() < deadline:
+            time.sleep(0.005)
+        rcv = Channel(accepted[0], "srv")
+        got = []
+        while not got and time.monotonic() < deadline:
+            got = rcv.poll()
+            time.sleep(0.005)
+        assert got and got[0].kind == wire.TASK_DONE
+        np.testing.assert_array_equal(got[0].payload["arr"], arr)
+        assert got[0].payload["arr"].dtype == np.float32
+        while snd.unacked and time.monotonic() < deadline:
+            snd.poll()
+            time.sleep(0.005)
+        assert snd.unacked == 0
+        snd.close()
+        rcv.close()
+        lst.close()
+
+
+# ----------------------------------------------------------------------
+# healthy-path decision parity (the tentpole acceptance bar)
+# ----------------------------------------------------------------------
+
+def _parity_workload(n=6, seed=3, interarrival=25.0):
+    dags = make_workload("production", n, seed=seed)
+    rng = np.random.default_rng(0)
+    arrivals, t = [], 0.0
+    for i, dag in enumerate(dags):
+        arrivals.append((t, dag, i % 2))
+        t += float(rng.exponential(interarrival))
+    return arrivals
+
+
+def _parity_pair():
+    arrivals = _parity_workload()
+    sim = ClusterSim(SimConfig(n_machines=12, seed=0, speculate=False,
+                               record_placements=True,
+                               fault_plan=FaultPlan()),
+                     scheme("dagps")).run(arrivals)
+    svc = run_service_workload(arrivals, ServiceConfig(n_machines=12,
+                                                       seed=0),
+                               scheme("dagps"), fault_plan=FaultPlan())
+    return sim, svc
+
+
+def _golden_doc(svc):
+    return {
+        "jcts": {str(j.job_id): repr(j.jct) for j in svc.jobs},
+        "makespan": repr(svc.makespan),
+        "placements": [[repr(t), j, tk, m] for t, j, tk, m in
+                       svc.placements],
+    }
+
+
+def test_service_matches_simulator_bit_for_bit():
+    """Healthy inproc service run == `ClusterSim`, placement for
+    placement: same (time, job, task, machine) grant sequence, same JCTs
+    and makespan at full float precision."""
+    sim, svc = _parity_pair()
+    assert len(svc.placements) == len(sim.placements)
+    assert svc.placements == sim.placements
+    assert sorted((j.job_id, repr(j.jct)) for j in svc.jobs) == \
+        sorted((j.job_id, repr(j.jct)) for j in sim.jobs)
+    assert repr(svc.makespan) == repr(sim.makespan)
+    # every task placed exactly once on the healthy path too
+    assert all(v == 1 for v in svc.effective.values())
+    # ... and the committed golden pins both against drift
+    golden = json.load(open(GOLDEN))
+    assert _golden_doc(svc) == golden
+
+
+def test_serve_passthrough_matches_simulator():
+    """`schedule_cluster(serve=True)` routes the same workload through
+    the service and lands on the simulator path's exact JCTs."""
+    from repro.launch.cluster import TPUJob, schedule_cluster
+
+    jobs = [TPUJob(f"j{i}", "generic", [
+        dict(name="a", seconds=40.0 + 5 * i, chips=0.4, hbm=0.3, deps=[]),
+        dict(name="b", seconds=25.0, chips=0.5, hbm=0.4, deps=[0]),
+        dict(name="c", seconds=10.0, chips=0.2, hbm=0.2, deps=[1]),
+    ], group=i % 2) for i in range(4)]
+    kw = dict(n_slices=8, interarrival=30.0, seed=1, policy="dagps",
+              fault_plan=FaultPlan())
+    plain = schedule_cluster(jobs, speculate=False, **kw)
+    served = schedule_cluster(jobs, serve=True, **kw)
+    assert sorted((j.job_id, repr(j.jct)) for j in served.jobs) == \
+        sorted((j.job_id, repr(j.jct)) for j in plain.jobs)
+    assert repr(served.makespan) == repr(plain.makespan)
+    assert served.fault_stats["service"]["placements"] > 0
+
+
+def test_example_serve_json_emits_service_fault_stats():
+    """examples/cluster_sim.py --serve --json surfaces the service's
+    fault_stats (the satellite: stats reachable from the CLI surface)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop(faults.FAULTS_ENV, None)
+    proc = subprocess.run(
+        [sys.executable,
+         os.path.join(os.path.dirname(__file__), os.pardir, "examples",
+                      "cluster_sim.py"),
+         "--serve", "--json", "--jobs", "3", "--slices", "8",
+         "--schemes", "dagps"],
+        capture_output=True, text=True, env=env, timeout=420)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    doc = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert doc["jobs"] == 3
+    fs = doc["fault_stats"]
+    assert fs["service"]["placements"] > 0
+    assert fs["service"]["lease_reclaims"] == 0
+    assert "comm" in fs and fs["comm"]["sent"] > 0
+
+
+# ----------------------------------------------------------------------
+# chaos: liveness + exactly-once under comm/agent/heartbeat faults
+# ----------------------------------------------------------------------
+
+CHAOS_PLAN = ("seed=5;comm_send:drop@0.08;comm_send:dup@0.08;"
+              "comm_send:delay@0.05,delay=0.5;"
+              "agent:crash@1.0,machine=3,count=1;"
+              "agent:partition@0.03,delay=4.0;heartbeat:drop@0.08")
+
+
+def _chaos_workload(n=5, seed=5, interarrival=20.0):
+    dags = make_workload("production", n, seed=seed)
+    rng = np.random.default_rng(1)
+    arrivals, t = [], 0.0
+    for dag in dags:
+        arrivals.append((t, dag, 0))
+        t += float(rng.exponential(interarrival))
+    return arrivals
+
+
+def test_chaos_run_completes_every_job_exactly_once():
+    """The acceptance chaos bar: drops, dups, delays, one agent crash
+    and transient partitions — every job still completes, every task has
+    exactly one effective placement, and the lease machinery visibly
+    worked (reclaims > 0, late task_dones for reclaimed leases counted
+    as no-ops)."""
+    arrivals = _chaos_workload()
+    res = run_service_workload(arrivals, ServiceConfig(n_machines=10,
+                                                       seed=0),
+                               scheme("dagps"), fault_plan=CHAOS_PLAN)
+    assert len(res.jobs) == len(arrivals)
+    assert all(v == 1 for v in res.effective.values())
+    n_tasks = sum(a[1].n for a in arrivals)
+    assert len(res.effective) == n_tasks
+    svc = res.fault_stats["service"]
+    assert svc["completions"] == n_tasks
+    assert svc["lease_reclaims"] > 0
+    assert res.fault_stats["heartbeat"]["losses"] >= 1   # the crash
+    comm = res.fault_stats["comm"]
+    assert comm["dropped"] > 0 and comm["duped"] > 0
+    assert comm["retransmits"] > 0
+    # the stats themselves travelled over the chaotic wire
+    assert res.fault_stats["injections"].get("comm_send.drop", 0) > 0
+
+
+def test_silent_machine_leases_reclaimed_and_requeued():
+    """All beats from one machine drop: its leases are reclaimed after
+    ``hb_lost_after`` and requeued elsewhere; the workload completes."""
+    arrivals = _chaos_workload(4, seed=11)
+    res = run_service_workload(
+        arrivals, ServiceConfig(n_machines=8, seed=0),
+        scheme("dagps"), fault_plan="seed=2;heartbeat:drop@1.0,machine=2")
+    assert len(res.jobs) == 4
+    assert all(v == 1 for v in res.effective.values())
+    assert res.fault_stats["heartbeat"]["losses"] >= 1
+    assert res.fault_stats["service"]["lease_reclaims"] >= 0
+    assert res.fault_stats["injections"].get("heartbeat.drop", 0) > 0
+
+
+def test_ambient_env_plan_chaos_smoke():
+    """Runs under whatever REPRO_FAULTS carries (the CI service-chaos
+    job sets a comm_send+agent plan; locally this is a healthy smoke).
+    The liveness invariants must hold either way."""
+    arrivals = _chaos_workload(3, seed=17)
+    res = run_service_workload(arrivals, ServiceConfig(n_machines=8,
+                                                       seed=0),
+                               scheme("dagps"))
+    assert len(res.jobs) == 3
+    assert all(v == 1 for v in res.effective.values())
+
+
+# ----------------------------------------------------------------------
+# wall-clock agent: reconnect backoff + clock-derived beats
+# ----------------------------------------------------------------------
+
+def test_agent_backoff_capped_by_probe_secs():
+    rec = RecoveryPolicy(backoff=0.1, backoff_cap=5.0, probe_secs=0.8)
+    ag = Agent("inproc://nowhere", 0, recovery=rec)
+    assert [ag.backoff_delay(a) for a in range(6)] == \
+        [0.1, 0.2, 0.4, 0.8, 0.8, 0.8]
+    # without the probe cadence the plain cap applies
+    ag2 = Agent("inproc://nowhere", 0,
+                recovery=RecoveryPolicy(backoff=0.1, backoff_cap=5.0,
+                                        probe_secs=None))
+    assert ag2.backoff_delay(10) == 5.0
+
+
+def test_agent_reconnect_retries_on_schedule_then_connects():
+    """connect_with_retry sleeps the capped-backoff schedule between
+    failures (monkeypatched clock: no wall time passes) and returns the
+    comm as soon as the connector succeeds."""
+    rec = RecoveryPolicy(backoff=0.1, backoff_cap=5.0, probe_secs=0.8)
+    clk = [0.0]
+    slept = []
+
+    def fake_sleep(s):
+        slept.append(s)
+        clk[0] += s
+
+    sentinel = object()
+    attempts = [0]
+
+    def connector(addr):
+        attempts[0] += 1
+        if attempts[0] <= 5:
+            raise CommClosed("scheduler down")
+        return sentinel
+
+    ag = Agent("inproc://nowhere", 0, recovery=rec, clock=lambda: clk[0],
+               sleep=fake_sleep, connector=connector)
+    assert ag.connect_with_retry() is sentinel
+    assert ag.reconnect_delays == [0.1, 0.2, 0.4, 0.8, 0.8]
+    assert slept == ag.reconnect_delays
+    assert clk[0] == pytest.approx(sum(ag.reconnect_delays))
+
+
+def test_agent_reconnect_gives_up_after_max_attempts():
+    ag = Agent("inproc://nowhere", 0,
+               recovery=RecoveryPolicy(backoff=0.001, backoff_cap=0.002),
+               sleep=lambda s: None,
+               connector=lambda a: (_ for _ in ()).throw(CommClosed("x")))
+    with pytest.raises(CommClosed):
+        ag.connect_with_retry(max_attempts=3)
+    assert len(ag.reconnect_delays) == 2
+
+
+def test_agent_beats_advance_off_the_clock():
+    """The beat deadline is clock-derived: spinning the poll loop with a
+    frozen clock emits one beat; a long stall emits one (late) beat, not
+    a burst; the next deadline is period after the beat that fired."""
+    with faults.scope(FaultPlan()):
+        accepted = []
+        lst = listen(_addr(), accepted.append)
+        comm = connect(lst.addr)
+        clk = [100.0]
+        ag = Agent("unused", 3, period=1.0, clock=lambda: clk[0],
+                   sleep=lambda s: None)
+        ch = Channel(comm, "agent-3", None, lambda: clk[0])
+        nb = ag.step(ch, clk[0])               # due now -> beat fires
+        for _ in range(5):
+            nb = ag.step(ch, nb)               # frozen clock: no beats
+        assert len(ag.beats) == 1
+        clk[0] += 3.7                          # poll-loop stall
+        nb = ag.step(ch, nb)
+        assert len(ag.beats) == 2              # one catch-up beat
+        assert nb == pytest.approx(103.7 + 1.0)
+        srv = Channel(accepted[0], "srv", None, lambda: clk[0])
+        kinds = [m.kind for m in srv.poll()]
+        assert kinds.count(wire.HEARTBEAT) == 2
+        lst.close()
+
+
+def test_wall_clock_service_over_tcp_end_to_end():
+    """The deployment shape: scheduler served from a thread on real
+    sockets, wall-clock `Agent` threads, a `Client` fetching stats over
+    the wire.  Compressed lease durations keep it fast."""
+    from repro.svc.client import Client
+
+    with faults.scope(FaultPlan()):
+        cfg = ServiceConfig(n_machines=4, seed=0, heartbeat_period=0.2,
+                            groups=(0,))
+        core = SchedulerCore(cfg, scheme("dagps"))
+        svc = SchedulerService(core, "tcp://127.0.0.1:0")
+        agents = []
+        try:
+            svc.serve_in_thread(poll_interval=0.005)
+            for m in range(4):
+                ag = Agent(svc.addr, m, period=0.2, time_scale=0.0005)
+                ag.start()
+                agents.append(ag)
+            client = Client(connect(svc.addr))
+            dags = make_workload("production", 2, seed=21)
+            handles = [client.submit(dag, t=0.0) for dag in dags]
+            deadline = time.monotonic() + 120.0
+            while client.pending and time.monotonic() < deadline:
+                client.poll()
+                time.sleep(0.01)
+            assert client.pending == 0, "jobs did not complete over tcp"
+            assert all(h.result is not None for h in handles)
+            stats = client.stats(timeout=10.0)
+            fs = stats["fault_stats"]
+            assert fs["service"]["completions"] == sum(d.n for d in dags)
+            assert all(v == 1 for v in core.effective.values())
+        finally:
+            for ag in agents:
+                ag.stop()
+            svc.close()
+
+
+if __name__ == "__main__":
+    if "--regen" in sys.argv:
+        _, svc = _parity_pair()
+        with open(GOLDEN, "w") as f:
+            json.dump(_golden_doc(svc), f, indent=1)
+        print(f"wrote {GOLDEN}: {len(svc.placements)} placements, "
+              f"{len(svc.jobs)} jobs")
